@@ -1,0 +1,67 @@
+"""Paper Figure 3 (and Figures 6-7): ours vs Zhang et al. on BFS spanning
+trees of the communication graphs, at equal communication budgets.
+
+Budget accounting (points over tree edges): ours moves each site's portion
+depth(v) edges to the root: sum_v depth_v * (t_v + k). Zhang moves one
+(s + k)-point coreset per non-root edge: (n-1)(s+k). Given a budget B we
+solve each method's size parameter to match B. Expectation: ours ~10-30%
+better cost ratio (error accumulation hits Zhang, Sec. 5 Results).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (Setting, avg_over_runs, baseline_cost,
+                               load_setting, run_ours, run_zhang)
+from repro.core.topology import bfs_spanning_tree
+
+SETTINGS = [
+    Setting("synthetic", "random", "weighted", 25),
+    Setting("pendigits", "random", "weighted", 10),
+    Setting("letter", "grid", "weighted", 9),
+    Setting("yearpredictionmsd", "grid", "weighted", 100),
+]
+
+
+def run(scale: float = 0.05, n_runs: int = 2, budgets=(4,),
+        out_rows: List[str] | None = None) -> List[str]:
+    rows = out_rows if out_rows is not None else []
+    ci = scale < 0.5
+    if ci:
+        budgets = budgets[:1]
+    for st in SETTINGS:
+        n_sites = min(st.n_sites, 25) if ci else st.n_sites
+        st = Setting(st.dataset, st.topology, st.partition, n_sites,
+                     scale=scale, seed=0)
+        pts, k, g, sp, sm = load_setting(st)
+        tree = bfs_spanning_tree(g, root=0)
+        mean_depth = float(np.mean(tree.depth))
+        base = baseline_cost(jax.random.PRNGKey(7), jnp.asarray(pts), k)
+        for mult in budgets:
+            budget = int(mult * k * g.n * max(tree.height, 1))
+            # ours: sum_v depth_v*(t_v+k) ~ mean_depth*(t + nk) = budget
+            t = max(int(budget / max(mean_depth, 1e-9) - g.n * k), k)
+            # zhang: (n-1)*(s+k) = budget
+            s = max(int(budget / (g.n - 1) - k), k)
+            t0 = time.time()
+            ours = avg_over_runs(
+                lambda kk: run_ours(kk, sp, sm, k, t, jnp.asarray(pts)),
+                n_runs)
+            zh = avg_over_runs(
+                lambda kk: run_zhang(kk, sp, sm, tree, k, s,
+                                     jnp.asarray(pts)), n_runs)
+            dt = (time.time() - t0) / (2 * n_runs) * 1e6
+            rows.append(
+                f"fig3/{st.dataset}/{st.topology}/h={tree.height}/B={budget},"
+                f"{dt:.0f},ours={ours/base:.4f};zhang={zh/base:.4f}")
+            print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

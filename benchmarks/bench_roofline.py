@@ -1,0 +1,51 @@
+"""Aggregate the dry-run JSONs (experiments/dryrun/) into the roofline table
+consumed by EXPERIMENTS.md Sec. Roofline. Emits one CSV row per cell."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+
+def load_reports(dry_dir: str = "experiments/dryrun"):
+    reps = []
+    for path in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        d["_file"] = os.path.basename(path)
+        reps.append(d)
+    return reps
+
+
+def run(out_rows: List[str] | None = None,
+        dry_dir: str = "experiments/dryrun") -> List[str]:
+    rows = out_rows if out_rows is not None else []
+    reps = load_reports(dry_dir)
+    if not reps:
+        rows.append("roofline/none,0,no dry-run artifacts found; run "
+                    "python -m repro.launch.dryrun --all --mesh both")
+        print(rows[-1])
+        return rows
+    for d in reps:
+        if d.get("status") != "ok":
+            rows.append(f"roofline/{d['_file']},0,status=FAIL")
+            print(rows[-1], flush=True)
+            continue
+        step_s = max(d["compute_s"], d["memory_s"], d["collective_s"])
+        rows.append(
+            f"roofline/{d['arch']}/{d['shape']}/{d['mesh']},"
+            f"{step_s*1e6:.0f},"
+            f"compute_s={d['compute_s']:.3e};memory_s={d['memory_s']:.3e};"
+            f"collective_s={d['collective_s']:.3e};"
+            f"bottleneck={d['bottleneck']};"
+            f"useful={d['useful_flop_ratio']:.3f};"
+            f"roofline_frac={d['roofline_fraction']:.3f};"
+            f"peak_gb={d['peak_memory_bytes']/1e9:.2f};"
+            f"fits={d.get('fits_hbm')}")
+        print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,94 @@
+"""Shared experiment harness for the paper's evaluation (Sec. 5).
+
+For a (dataset, topology, partition) triple and a communication budget, run
+each algorithm, solve k-means on its summary, and report the cost of that
+solution *on the full data*, normalized by the cost of solving on the full
+data directly (the paper's "k-means cost ratio" vs the Lloyd baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, clustering
+from repro.core.coreset import distributed_coreset
+from repro.core.distributed import _solve_on_coreset
+from repro.core.partition import pad_partition, partition_indices
+from repro.core.topology import (Graph, bfs_spanning_tree, erdos_renyi, grid,
+                                 preferential)
+from repro.data.synthetic import paper_dataset
+
+
+@dataclasses.dataclass
+class Setting:
+    dataset: str
+    topology: str          # "random" | "grid" | "preferential"
+    partition: str         # "uniform" | "similarity" | "weighted" | "degree"
+    n_sites: int
+    scale: float = 1.0
+    seed: int = 0
+
+
+def make_graph(setting: Setting) -> Graph:
+    n = setting.n_sites
+    if setting.topology == "random":
+        return erdos_renyi(n, 0.3, seed=setting.seed)
+    if setting.topology == "grid":
+        r = int(np.sqrt(n))
+        assert r * r == n, "grid needs square n_sites"
+        return grid(r, r)
+    return preferential(n, 2, seed=setting.seed)
+
+
+def load_setting(setting: Setting):
+    pts, k = paper_dataset(setting.dataset, seed=setting.seed,
+                           scale=setting.scale)
+    g = make_graph(setting)
+    idx = partition_indices(pts, g.n, setting.partition,
+                            seed=setting.seed + 1, degrees=g.degrees())
+    sp, sm = pad_partition(pts, idx)
+    return pts, k, g, jnp.asarray(sp), jnp.asarray(sm)
+
+
+def cost_on_full(pts: jnp.ndarray, centers: jnp.ndarray) -> float:
+    return float(clustering.cost(pts, centers, chunk=65536))
+
+
+def baseline_cost(key, pts, k, restarts=3, iters=12) -> float:
+    _, c = clustering.solve(key, pts, k, lloyd_iters=iters,
+                            restarts=restarts)
+    return float(c)
+
+
+def run_ours(key, sp, sm, k, t, pts) -> float:
+    dc = distributed_coreset(key, sp, sm, k, t)
+    cs = dc.flatten()
+    centers = _solve_on_coreset(jax.random.fold_in(key, 1), cs, k,
+                                "kmeans", 12)
+    return cost_on_full(pts, centers)
+
+
+def run_combine(key, sp, sm, k, t, pts) -> float:
+    cs = baselines.combine(key, sp, sm, k, t_total=t)
+    centers = _solve_on_coreset(jax.random.fold_in(key, 1), cs, k,
+                                "kmeans", 12)
+    return cost_on_full(pts, centers)
+
+
+def run_zhang(key, sp, sm, tree, k, s, pts) -> float:
+    cs, _ = baselines.zhang_tree(key, np.asarray(sp), np.asarray(sm), tree,
+                                 k, s=s)
+    centers = _solve_on_coreset(jax.random.fold_in(key, 1), cs, k,
+                                "kmeans", 12)
+    return cost_on_full(pts, centers)
+
+
+def avg_over_runs(fn: Callable[[jax.Array], float], n_runs: int,
+                  seed: int = 0) -> float:
+    vals = [fn(jax.random.PRNGKey(seed + 100 * r)) for r in range(n_runs)]
+    return float(np.mean(vals))

@@ -1,0 +1,50 @@
+"""Benchmark entry point -- one section per paper table/figure plus the LM
+roofline. Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run             # CI scale (~minutes)
+    PYTHONPATH=src python -m benchmarks.run --full      # paper scale
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_comm_scaling, bench_coreset_size,
+                        bench_fig2_graphs, bench_fig3_trees, bench_kernels,
+                        bench_roofline)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale datasets and run counts")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset: fig2,fig3,comm,size,"
+                         "kernels,roofline")
+    args = ap.parse_args(argv)
+    scale = 1.0 if args.full else 0.05
+    n_runs = 5 if args.full else 2
+    only = set(args.only.split(",")) if args.only else None
+
+    rows = ["name,us_per_call,derived"]
+    print(rows[0])
+    t0 = time.time()
+    if only is None or "fig2" in only:
+        bench_fig2_graphs.run(scale=scale, n_runs=n_runs, out_rows=rows)
+    if only is None or "fig3" in only:
+        bench_fig3_trees.run(scale=scale, n_runs=n_runs, out_rows=rows)
+    if only is None or "comm" in only:
+        bench_comm_scaling.run(out_rows=rows)
+    if only is None or "size" in only:
+        bench_coreset_size.run(scale=scale, out_rows=rows)
+    if only is None or "kernels" in only:
+        bench_kernels.run(out_rows=rows)
+    if only is None or "roofline" in only:
+        bench_roofline.run(out_rows=rows)
+    print(f"# total {time.time()-t0:.1f}s, {len(rows)-1} rows",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

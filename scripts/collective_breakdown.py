@@ -1,0 +1,66 @@
+"""Trip-count-aware per-op collective breakdown for one dry-run cell."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re
+import sys
+from collections import Counter
+
+import jax
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+from repro.roofline import hlo as H
+
+
+def breakdown(arch, shape, mesh_name="single", top=14):
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    cell = build_cell(arch, shape, mesh)
+    comp = cell.lower().compile()
+    comps = H.parse_computations(comp.as_text())
+    entry = re.search(r"ENTRY\s+%?([\w.\-]+)", comp.as_text()).group(1)
+    agg = Counter()
+
+    def visit(name, mult, depth=0):
+        c = comps.get(name)
+        if c is None or depth > 60:
+            return
+        for op in c.ops:
+            kind = (op.opcode[:-6] if op.opcode.endswith("-start")
+                    else op.opcode)
+            if op.opcode == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", op.rest)
+                mc = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                trips = (H._trip_count(comps[mc.group(1)], comps)
+                         if mc and mc.group(1) in comps else 1)
+                if mb:
+                    visit(mb.group(1), mult * trips, depth + 1)
+            elif op.opcode in ("fusion", "call", "conditional"):
+                for called in H._CALL_RE.findall(op.rest):
+                    visit(called, mult, depth + 1)
+            elif kind in H.COLLECTIVES:
+                b = H._shape_bytes(op.result_type)
+                n, _ = H._group_size_and_span(op, None)
+                if kind == "all-reduce":
+                    link = 2.0 * (n - 1) / max(n, 1) * b
+                elif kind == "all-gather":
+                    link = (n - 1) / max(n, 1) * b
+                elif kind == "reduce-scatter":
+                    link = (n - 1) * b
+                else:
+                    link = b
+                m = re.search(r'op_name="([^"]+)"', op.raw)
+                nm = re.sub(r"/[a-z_0-9.()]*$", "",
+                            (m.group(1) if m else "?"))[-58:]
+                agg[(kind, op.result_type[:40], nm, n)] += link * mult
+
+    visit(entry, 1.0)
+    total = sum(agg.values())
+    print(f"total link bytes/device: {total/1e9:.1f} GB "
+          f"-> {total/50e9:.2f}s at 50GB/s")
+    for (kind, shape_s, nm, n), b in agg.most_common(top):
+        print(f"{b/1e9:8.2f}GB {kind:16s} N={n:3d} {shape_s:40s} {nm}")
+
+
+if __name__ == "__main__":
+    breakdown(sys.argv[1], sys.argv[2],
+              sys.argv[3] if len(sys.argv) > 3 else "single")

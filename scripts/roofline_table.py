@@ -1,0 +1,44 @@
+"""Render experiments/dryrun/*.json as the EXPERIMENTS.md roofline table."""
+import glob
+import json
+import os
+import sys
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def main(dry_dir="experiments/dryrun", mesh_filter=None):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("status") != "ok":
+            rows.append((path, None))
+            continue
+        if mesh_filter and d["mesh"] != mesh_filter:
+            continue
+        rows.append((path, d))
+    print("| arch | shape | mesh | peak GB | fits | compute | memory | "
+          "collective | bottleneck | useful | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for path, d in rows:
+        if d is None:
+            print(f"| {os.path.basename(path)} | FAIL | | | | | | | | | |")
+            continue
+        print(f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+              f"{d['peak_memory_bytes']/1e9:.1f} | "
+              f"{'Y' if d.get('fits_hbm') else 'N'} | "
+              f"{fmt_s(d['compute_s'])} | {fmt_s(d['memory_s'])} | "
+              f"{fmt_s(d['collective_s'])} | {d['bottleneck']} | "
+              f"{d['useful_flop_ratio']:.2f} | "
+              f"{d['roofline_fraction']:.3f} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

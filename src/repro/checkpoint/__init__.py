@@ -1,0 +1,5 @@
+from repro.checkpoint.manager import (AsyncCheckpointer, gc, latest_step,
+                                      restore, save, steps)
+
+__all__ = ["AsyncCheckpointer", "gc", "latest_step", "restore", "save",
+           "steps"]

@@ -1,0 +1,156 @@
+"""Checkpointing: atomic step directories, async writer thread, elastic
+restore (onto a different mesh / sharding), and retention GC.
+
+Layout:  <root>/step_<N>/ arrays.npz + tree.json + COMMIT (marker written
+last; a directory without COMMIT is incomplete and ignored by restore).
+
+This container is single-process, so leaves are saved as full host arrays;
+on a real multi-host pod each process would write its shards via
+``jax.experimental.multihost_utils`` / tensorstore-OCDBT -- the manager API
+(save/restore/latest_step/gc) is the stable surface either way, and restore
+already re-device_puts onto arbitrary target shardings, which is what makes
+elastic rescaling work (see tests/test_checkpoint.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+_SEP = "::"
+
+
+def _flatten(tree: PyTree) -> Tuple[Dict[str, np.ndarray], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return ({f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)},
+            treedef)
+
+
+def save(root: str, step: int, tree: PyTree) -> str:
+    """Synchronous atomic save."""
+    os.makedirs(root, exist_ok=True)
+    final = os.path.join(root, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays, treedef = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "tree.json"), "w") as f:
+        json.dump({"treedef": str(treedef), "step": step,
+                   "n_leaves": len(arrays)}, f)
+    with open(os.path.join(tmp, "COMMIT"), "w") as f:
+        f.write(str(time.time()))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def steps(root: str) -> List[int]:
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for name in os.listdir(root):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(root, name, "COMMIT")):
+                out.append(int(name[5:]))
+    return sorted(out)
+
+
+def latest_step(root: str) -> Optional[int]:
+    s = steps(root)
+    return s[-1] if s else None
+
+
+def restore(root: str, step: Optional[int] = None,
+            target: Optional[PyTree] = None,
+            shardings: Optional[PyTree] = None) -> Tuple[PyTree, int]:
+    """Restore a checkpoint. ``target`` (a pytree of arrays or
+    ShapeDtypeStructs with the same structure) rebuilds the tree; with
+    ``shardings`` the leaves are device_put onto them -- the mesh may differ
+    from the one that saved (elastic restart)."""
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint under {root}")
+    path = os.path.join(root, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(path, "COMMIT")):
+        raise FileNotFoundError(f"checkpoint {path} is incomplete")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
+    if target is None:
+        raise ValueError("restore requires a target tree (structure donor)")
+    treedef = jax.tree_util.tree_structure(target)
+    if shardings is not None:
+        shard_leaves = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda s: isinstance(s, jax.sharding.Sharding))
+        leaves = [jax.device_put(l, s) for l, s in zip(leaves, shard_leaves)]
+    else:
+        leaves = [jnp.asarray(l) for l in leaves]
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+def gc(root: str, keep_last: int = 3) -> List[int]:
+    """Delete all but the newest ``keep_last`` complete checkpoints."""
+    all_steps = steps(root)
+    removed = []
+    for s in all_steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(os.path.join(root, f"step_{s:08d}"))
+        removed.append(s)
+    return removed
+
+
+class AsyncCheckpointer:
+    """Background-thread writer: ``save`` snapshots the tree to host memory
+    synchronously (cheap) and enqueues the disk write. ``wait()`` drains the
+    queue; errors surface on the next call."""
+
+    def __init__(self, root: str, keep_last: int = 3):
+        self.root = root
+        self.keep_last = keep_last
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            step, host_tree = item
+            try:
+                save(self.root, step, host_tree)
+                gc(self.root, self.keep_last)
+            except BaseException as e:  # surfaced on next save/wait
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def save(self, step: int, tree: PyTree):
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self._q.put((step, host_tree))
+
+    def wait(self):
+        self._q.join()
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def close(self):
+        self._q.put(None)
+        self._q.join()

@@ -1,0 +1,112 @@
+"""Baselines the paper compares against (Sec. 1, Sec. 5).
+
+* :func:`combine` -- COMBINE: each site builds a *local* eps-coreset of its
+  own data and the union is shipped. Correct, but the global summary is a
+  factor n larger than Algorithm 1's for the same accuracy.
+
+* :func:`zhang_tree` -- Zhang et al. [26]: on a rooted (spanning) tree, every
+  node builds a coreset of (its own data) union (its children's coresets) and
+  forwards it to its parent -- "coreset of coresets". Error compounds over the
+  tree height h, so matching a target accuracy needs size ~ (h/eps)^2
+  (k-median) / (h/eps)^4 (k-means); at a fixed communication budget the
+  quality is correspondingly worse, which is what the experiments measure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clustering
+from repro.core.comm import CommLedger, flood_cost
+from repro.core.coreset import Coreset, build_coreset
+from repro.core.topology import Graph, SpanningTree
+
+Array = jax.Array
+
+
+def combine(
+    key: Array,
+    site_points: Array,   # (n_sites, M, d)
+    site_mask: Array,     # (n_sites, M)
+    k: int,
+    t_total: int,
+    objective: str = "kmeans",
+    lloyd_iters: int = 5,
+) -> Coreset:
+    """Union of per-site local coresets, each of sample size t_total // n.
+
+    Total summary size: n * (t_total//n + k) -- the O(n)-factor blowup that
+    Algorithm 1 removes.
+    """
+    n_sites = site_points.shape[0]
+    s = max(t_total // n_sites, 1)
+    keys = jax.random.split(key, n_sites)
+    w = site_mask.astype(site_points.dtype)
+
+    def one(ki, pts, wi):
+        cs = build_coreset(ki, pts, k, s, weights=wi, objective=objective,
+                           lloyd_iters=lloyd_iters)
+        return cs.points, cs.weights
+
+    pts, ws = jax.vmap(one)(keys, site_points, w)
+    d = pts.shape[-1]
+    return Coreset(points=pts.reshape(-1, d), weights=ws.reshape(-1))
+
+
+def combine_ledger(g: Graph, n_sites: int, k: int, t_total: int, d: int
+                   ) -> CommLedger:
+    s = max(t_total // n_sites, 1)
+    return flood_cost(g, n_messages=n_sites, unit_points=float(s + k), dim=d)
+
+
+def _pad_bucket(n: int, bucket: int = 256) -> int:
+    return int(np.ceil(max(n, 1) / bucket) * bucket)
+
+
+def zhang_tree(
+    key: Array,
+    site_points: np.ndarray,   # (n_sites, M, d) padded numpy
+    site_mask: np.ndarray,     # (n_sites, M)
+    tree: SpanningTree,
+    k: int,
+    s: int,
+    objective: str = "kmeans",
+    lloyd_iters: int = 5,
+) -> Tuple[Coreset, CommLedger]:
+    """Coreset-of-coresets, leaves to root. Host-orchestrated (the per-node
+    inputs are ragged); each node's construction is the jitted
+    :func:`build_coreset` on a bucket-padded weighted instance.
+
+    Communication: every non-root node sends its (s + k)-point coreset one
+    edge up => (n - 1) * (s + k) points total.
+    """
+    n_sites, M, d = site_points.shape
+    children = tree.children()
+    store: List[Tuple[np.ndarray, np.ndarray]] = [None] * n_sites  # type: ignore
+    keys = jax.random.split(key, n_sites)
+
+    for v in tree.bottom_up_order():
+        own_pts = site_points[v][site_mask[v]]
+        own_w = np.ones(len(own_pts), dtype=site_points.dtype)
+        parts_p = [own_pts] + [store[c][0] for c in children[v]]
+        parts_w = [own_w] + [store[c][1] for c in children[v]]
+        pts = np.concatenate(parts_p, axis=0)
+        ws = np.concatenate(parts_w, axis=0)
+        # bucket-pad for a bounded number of jit shapes
+        pad = _pad_bucket(len(pts)) - len(pts)
+        pts = np.pad(pts, ((0, pad), (0, 0)))
+        ws = np.pad(ws, (0, pad))
+        cs = build_coreset(keys[v], jnp.asarray(pts), k, s,
+                           weights=jnp.asarray(ws), objective=objective,
+                           lloyd_iters=lloyd_iters)
+        store[v] = (np.asarray(cs.points), np.asarray(cs.weights))
+
+    root_pts, root_w = store[tree.root]
+    ledger = CommLedger(points=float((n_sites - 1) * (s + k)),
+                        messages=float(n_sites - 1), dim=d)
+    return Coreset(points=jnp.asarray(root_pts),
+                   weights=jnp.asarray(root_w)), ledger

@@ -1,0 +1,230 @@
+"""Centralized *weighted* clustering primitives (k-means / k-median).
+
+Pure-JAX implementations used both by the paper's algorithms (local constant
+approximation solves on each site, Algorithm 1 Round 1) and by the final
+clustering of the global coreset (Algorithm 2 Round 2). Every function supports
+per-point weights -- the coreset is a *weighted* instance, possibly with
+negative center weights -- and is jit-compatible with static ``k`` and
+iteration counts.
+
+The distance hot loop can be routed through the Pallas fused kernel
+(``repro.kernels``) with ``backend="pallas"``; the default ``"jnp"`` path is
+the XLA-fused matmul formulation ``d^2(p,c) = |p|^2 + |c|^2 - 2 p.c``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_TINY = 1e-30
+_EPS = 1e-12
+
+
+def pairwise_sq_dists(points: Array, centers: Array) -> Array:
+    """Squared euclidean distances. points (n,d), centers (k,d) -> (n,k)."""
+    p2 = jnp.sum(points * points, axis=-1, keepdims=True)
+    c2 = jnp.sum(centers * centers, axis=-1)
+    d2 = p2 + c2[None, :] - 2.0 * (points @ centers.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def min_dist_argmin(
+    points: Array,
+    centers: Array,
+    chunk: Optional[int] = None,
+    backend: str = "jnp",
+) -> Tuple[Array, Array]:
+    """Min squared distance and argmin center per point.
+
+    ``chunk`` bounds the materialized (chunk, k) distance block for large n.
+    ``backend="pallas"`` routes through the fused TPU kernel (see
+    ``repro.kernels.ops``).
+    """
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.min_dist_argmin(points, centers)
+    n = points.shape[0]
+    if chunk is None or n <= chunk:
+        d2 = pairwise_sq_dists(points, centers)
+        return jnp.min(d2, axis=-1), jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    pad = (-n) % chunk
+    pts = jnp.pad(points, ((0, pad), (0, 0)))
+    pts = pts.reshape(-1, chunk, points.shape[1])
+
+    def one(block):
+        d2 = pairwise_sq_dists(block, centers)
+        return jnp.min(d2, axis=-1), jnp.argmin(d2, axis=-1).astype(jnp.int32)
+
+    md, am = jax.lax.map(one, pts)
+    return md.reshape(-1)[:n], am.reshape(-1)[:n]
+
+
+def cost(
+    points: Array,
+    centers: Array,
+    weights: Optional[Array] = None,
+    objective: str = "kmeans",
+    chunk: Optional[int] = None,
+) -> Array:
+    """Weighted clustering cost: sum_p w_p d(p, X)^2 (k-means) or ^1 (k-median)."""
+    d2, _ = min_dist_argmin(points, centers, chunk=chunk)
+    per_point = d2 if objective == "kmeans" else jnp.sqrt(d2)
+    if weights is not None:
+        per_point = per_point * weights
+    return jnp.sum(per_point)
+
+
+def point_costs(
+    points: Array,
+    centers: Array,
+    objective: str = "kmeans",
+    chunk: Optional[int] = None,
+) -> Tuple[Array, Array]:
+    """Per-point cost to the nearest center and the assignment (n,), (n,)."""
+    d2, assign = min_dist_argmin(points, centers, chunk=chunk)
+    c = d2 if objective == "kmeans" else jnp.sqrt(d2)
+    return c, assign
+
+
+@functools.partial(jax.jit, static_argnames=("k", "objective"))
+def kmeans_pp_init(
+    key: Array,
+    points: Array,
+    k: int,
+    weights: Optional[Array] = None,
+    objective: str = "kmeans",
+) -> Array:
+    """k-means++ (D^2) / k-median++ (D^1) seeding with optional weights.
+
+    Weight-0 points (padding) are never selected: the categorical logits are
+    ``log(w * D^power)`` which is -inf for them.
+    """
+    n, d = points.shape
+    w = jnp.ones((n,), points.dtype) if weights is None else weights
+    w = jnp.maximum(w, 0.0)
+    power = 1.0 if objective == "kmedian" else 2.0
+
+    key, k0 = jax.random.split(key)
+    first = jax.random.categorical(k0, jnp.log(w + _TINY))
+    centers = jnp.zeros((k, d), points.dtype).at[0].set(points[first])
+    d2 = jnp.sum((points - points[first]) ** 2, axis=-1)
+    mind = d2 if power == 2.0 else jnp.sqrt(jnp.maximum(d2, 0.0))
+
+    def body(i, carry):
+        centers, mind, key = carry
+        key, ki = jax.random.split(key)
+        logits = jnp.log(w * mind + _TINY)
+        idx = jax.random.categorical(ki, logits)
+        c = points[idx]
+        centers = centers.at[i].set(c)
+        d2 = jnp.sum((points - c) ** 2, axis=-1)
+        dnew = d2 if power == 2.0 else jnp.sqrt(jnp.maximum(d2, 0.0))
+        mind = jnp.minimum(mind, dnew)
+        return centers, mind, key
+
+    centers, _, _ = jax.lax.fori_loop(1, k, body, (centers, mind, key))
+    return centers
+
+
+def _kmeans_update(points, weights, centers, k):
+    """One weighted Lloyd step for the k-means objective."""
+    d2, assign = min_dist_argmin(points, centers)
+    oh = jax.nn.one_hot(assign, k, dtype=points.dtype)
+    ww = oh * weights[:, None]
+    sums = ww.T @ points                       # (k, d)
+    counts = jnp.sum(ww, axis=0)               # (k,)
+    new = sums / jnp.where(counts > _EPS, counts, 1.0)[:, None]
+    new = jnp.where((counts > _EPS)[:, None], new, centers)
+    c = jnp.sum(weights * d2)
+    return new, c
+
+
+def _kmedian_update(points, weights, centers, k, weiszfeld_iters=4):
+    """One weighted alternating step for k-median: assign + per-cluster
+    Weiszfeld geometric-median refinement."""
+    d2, assign = min_dist_argmin(points, centers)
+    oh = jax.nn.one_hot(assign, k, dtype=points.dtype)
+    memb = oh * jnp.maximum(weights, 0.0)[:, None]   # (n, k)
+
+    def wbody(_, y):
+        # distance of every point to its cluster's current median estimate
+        dist = jnp.sqrt(
+            jnp.maximum(pairwise_sq_dists(points, y), _EPS)
+        )                                           # (n, k)
+        inv = memb / dist                           # (n, k)
+        denom = jnp.sum(inv, axis=0)                # (k,)
+        num = inv.T @ points                        # (k, d)
+        ynew = num / jnp.where(denom > _EPS, denom, 1.0)[:, None]
+        return jnp.where((denom > _EPS)[:, None], ynew, y)
+
+    new = jax.lax.fori_loop(0, weiszfeld_iters, wbody, centers)
+    c = jnp.sum(weights * jnp.sqrt(jnp.maximum(d2, 0.0)))
+    return new, c
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "objective", "k"))
+def lloyd(
+    points: Array,
+    centers: Array,
+    weights: Optional[Array] = None,
+    iters: int = 10,
+    objective: str = "kmeans",
+    k: Optional[int] = None,
+) -> Tuple[Array, Array]:
+    """Weighted Lloyd iterations. Returns (centers, cost_history (iters,)).
+
+    Handles negative weights (signed coreset measures): clusters whose total
+    weight is <= eps keep their previous center.
+    """
+    k = centers.shape[0] if k is None else k
+    w = jnp.ones((points.shape[0],), points.dtype) if weights is None else weights
+    upd = _kmeans_update if objective == "kmeans" else _kmedian_update
+
+    def body(centers, _):
+        new, c = upd(points, w, centers, k)
+        return new, c
+
+    centers, hist = jax.lax.scan(body, centers, None, length=iters)
+    return centers, hist
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "lloyd_iters", "objective",
+                                    "restarts"))
+def solve(
+    key: Array,
+    points: Array,
+    k: int,
+    weights: Optional[Array] = None,
+    lloyd_iters: int = 10,
+    objective: str = "kmeans",
+    restarts: int = 1,
+) -> Tuple[Array, Array]:
+    """Constant-approximation solver: k-means++ seeding + Lloyd refinement,
+    best of ``restarts`` independent seedings (k-means++ is only O(log k) in
+    expectation; restarts make the constant-approximation assumption of
+    Theorem 1 hold in practice).
+
+    This is the ``A_alpha`` subroutine of Algorithm 2 and the local solver
+    ``B_i`` of Algorithm 1. Returns (centers (k,d), final cost scalar).
+    """
+
+    def one(ki):
+        centers = kmeans_pp_init(ki, points, k, weights=weights,
+                                 objective=objective)
+        centers, _ = lloyd(points, centers, weights=weights,
+                           iters=lloyd_iters, objective=objective)
+        c = cost(points, centers, weights=weights, objective=objective)
+        return centers, c
+
+    if restarts == 1:
+        return one(key)
+    all_centers, costs = jax.lax.map(one, jax.random.split(key, restarts))
+    best = jnp.argmin(costs)
+    return all_centers[best], costs[best]

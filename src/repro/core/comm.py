@@ -1,0 +1,83 @@
+"""Communication-cost ledger.
+
+The paper measures communication in "number of points transmitted"; we keep
+that unit (``points``) and also derive bytes (``(d+1) * 4`` bytes per weighted
+point, ``4`` per scalar) so the LM-side roofline and the clustering-side
+experiments share one currency. Every algorithm in ``repro.core`` returns a
+``CommLedger`` alongside its result.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core.topology import Graph, SpanningTree
+
+
+@dataclasses.dataclass
+class CommLedger:
+    """Counts of transmitted units, broken down by phase."""
+
+    scalars: float = 0.0          # single float values (local costs)
+    points: float = 0.0           # weighted d-dim points
+    messages: float = 0.0         # individual edge transmissions
+    dim: int = 0                  # point dimensionality (for bytes)
+
+    def add(self, other: "CommLedger") -> "CommLedger":
+        return CommLedger(
+            scalars=self.scalars + other.scalars,
+            points=self.points + other.points,
+            messages=self.messages + other.messages,
+            dim=max(self.dim, other.dim),
+        )
+
+    @property
+    def bytes(self) -> float:
+        return 4.0 * self.scalars + 4.0 * (self.dim + 1) * self.points
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "scalars": self.scalars,
+            "points": self.points,
+            "messages": self.messages,
+            "bytes": self.bytes,
+        }
+
+
+def flood_cost(g: Graph, n_messages: int, unit_points: float = 0.0,
+               unit_scalars: float = 0.0, dim: int = 0) -> CommLedger:
+    """Algorithm 3 on a general graph: every node forwards each of the
+    ``n_messages`` distinct messages to all its neighbours exactly once
+    => sum_v deg(v) = 2m transmissions per message (Theorem 2's O(m) factor).
+    """
+    per_message = 2.0 * g.m
+    return CommLedger(
+        scalars=per_message * n_messages * unit_scalars,
+        points=per_message * n_messages * unit_points,
+        messages=per_message * n_messages,
+        dim=dim,
+    )
+
+
+def tree_up_cost(tree: SpanningTree, unit_points_per_node, dim: int = 0
+                 ) -> CommLedger:
+    """Each node's payload travels its depth edges up to the root
+    (Theorem 3's O(h) factor). ``unit_points_per_node``: scalar or seq."""
+    if not hasattr(unit_points_per_node, "__len__"):
+        unit_points_per_node = [unit_points_per_node] * tree.n
+    pts = sum(tree.depth[v] * unit_points_per_node[v] for v in range(tree.n))
+    msgs = sum(tree.depth[v] for v in range(tree.n)
+               if unit_points_per_node[v] > 0)
+    return CommLedger(points=float(pts), messages=float(msgs), dim=dim)
+
+
+def tree_broadcast_cost(tree: SpanningTree, unit_points: float = 0.0,
+                        unit_scalars: float = 0.0, dim: int = 0) -> CommLedger:
+    """Root sends one payload down every tree edge (n-1 transmissions)."""
+    edges = tree.n - 1
+    return CommLedger(
+        scalars=edges * unit_scalars,
+        points=edges * unit_points,
+        messages=float(edges),
+        dim=dim,
+    )

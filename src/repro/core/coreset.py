@@ -1,0 +1,233 @@
+"""Coreset constructions (paper Sec. 3, Algorithm 1).
+
+Two entry points:
+
+* :func:`build_coreset` -- the centralized sensitivity-sampling construction of
+  Feldman-Langberg [10] on a (possibly weighted) point set. Used as the
+  subroutine of the COMBINE and Zhang-et-al. baselines and as the reference
+  centralized construction.
+
+* :func:`distributed_coreset` -- **Algorithm 1**: every site solves its local
+  instance, the only communicated quantities are the ``n`` scalar local costs,
+  and each site then samples ``t_i = t * cost_i / sum_j cost_j`` points from
+  its own data with probability proportional to the local sensitivity
+  surrogate ``m_p = cost(p, B_i)``. (The paper writes ``m_p = 2 cost(p,B_i)``;
+  the constant cancels in both the sampling distribution and the weight
+  formula ``w_q = sum m / (t * m_q)``, so we drop it.) The union of all local
+  portions ``S_i \\cup B_i`` is an eps-coreset of the *global* data set
+  (Theorem 1).
+
+Center weights ``w_b = |P_b| - sum_{q in P_b \\cap S} w_q`` may be negative --
+the coreset is a signed measure (faithful to the paper); ``clip_negative``
+opts into the common non-negative heuristic.
+
+Everything is fixed-shape: sites sample into a ``t_buffer``-slot buffer with a
+validity mask (XLA static shapes; see DESIGN.md Sec. 7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clustering
+
+Array = jax.Array
+_TINY = 1e-30
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["points", "weights"], meta_fields=[])
+@dataclasses.dataclass
+class Coreset:
+    """Weighted summary: invalid slots carry weight exactly 0."""
+
+    points: Array    # (M, d)
+    weights: Array   # (M,)
+
+    @property
+    def size(self) -> int:
+        return int(self.points.shape[0])
+
+    def effective_size(self) -> Array:
+        return jnp.sum(self.weights != 0.0)
+
+    def cost(self, centers: Array, objective: str = "kmeans") -> Array:
+        return clustering.cost(self.points, centers, weights=self.weights,
+                               objective=objective)
+
+
+def sensitivities(points: Array, centers: Array, weights: Array,
+                  objective: str = "kmeans") -> Tuple[Array, Array]:
+    """Per-point sampling mass m_p = w_p * cost(p, B) and assignments."""
+    c, assign = clustering.point_costs(points, centers, objective=objective)
+    return weights * c, assign
+
+
+def weighted_choice(key: Array, masses: Array, n_draws: int) -> Array:
+    """``n_draws`` i.i.d. draws proportional to ``masses`` via inverse-CDF
+    (O(M + t log M); jax.random.categorical would materialize a
+    (n_draws, M) gumbel tensor). Zero-mass entries are never drawn."""
+    cdf = jnp.cumsum(masses)
+    total = cdf[-1]
+    u = jax.random.uniform(key, (n_draws,), masses.dtype) * total
+    idx = jnp.searchsorted(cdf, u, side="right")
+    return jnp.clip(idx, 0, masses.shape[0] - 1).astype(jnp.int32)
+
+
+def _sample_and_weight(key: Array, points: Array, m: Array, weights: Array,
+                       assign: Array, k: int, t_local: Array, t_buffer: int,
+                       total_m: Array, t_total: Array):
+    """Draw ``t_local`` (<= t_buffer) points ~ m_p; compute sample + center
+    weights. Shared by the centralized and distributed constructions."""
+    n = points.shape[0]
+    idx = weighted_choice(key, m, t_buffer)
+    valid = (jnp.arange(t_buffer) < t_local) & (total_m > _TINY)
+    # w_q = (sum_z m_z) * w_q_orig / (t * m_q); zero for invalid slots
+    m_q = m[idx]
+    w_s = jnp.where(
+        valid & (m_q > _TINY),
+        total_m * weights[idx] / (jnp.maximum(t_total, 1.0) * jnp.maximum(m_q, _TINY)),
+        0.0,
+    )
+    sampled = points[idx]
+    # center weights: w_b = W(P_b) - sum_{q in P_b cap S} w_q
+    oh = jax.nn.one_hot(assign, k, dtype=points.dtype)          # (n, k)
+    w_pb = (weights[:, None] * oh).sum(0)                        # (k,)
+    sampled_assign = assign[idx]
+    w_sb = jnp.zeros((k,), points.dtype).at[sampled_assign].add(w_s)
+    w_b = w_pb - w_sb
+    return sampled, w_s, w_b
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "t", "objective", "lloyd_iters",
+                              "clip_negative"))
+def build_coreset(
+    key: Array,
+    points: Array,
+    k: int,
+    t: int,
+    weights: Optional[Array] = None,
+    objective: str = "kmeans",
+    lloyd_iters: int = 5,
+    clip_negative: bool = False,
+) -> Coreset:
+    """Centralized [10]-style coreset of ``t`` samples + ``k`` solution
+    centers on a weighted instance. Output size t + k."""
+    n = points.shape[0]
+    w = jnp.ones((n,), points.dtype) if weights is None else weights
+    key, ks = jax.random.split(key)
+    centers = clustering.kmeans_pp_init(key, points, k, weights=w,
+                                        objective=objective)
+    centers, _ = clustering.lloyd(points, centers, weights=w,
+                                  iters=lloyd_iters, objective=objective)
+    m, assign = sensitivities(points, centers, w, objective=objective)
+    total_m = jnp.sum(m)
+    sampled, w_s, w_b = _sample_and_weight(
+        ks, points, m, w, assign, k, jnp.asarray(t), t, total_m,
+        jnp.asarray(float(t)))
+    if clip_negative:
+        w_b = jnp.maximum(w_b, 0.0)
+    return Coreset(points=jnp.concatenate([sampled, centers], axis=0),
+                   weights=jnp.concatenate([w_s, w_b], axis=0))
+
+
+def proportional_allocation(costs: Array, t: int) -> Array:
+    """Largest-remainder allocation of ``t`` samples proportional to local
+    costs: sum_i t_i == t exactly, t_i ~= t * cost_i / sum_j cost_j."""
+    total = jnp.maximum(jnp.sum(costs), _TINY)
+    frac = t * costs / total
+    base = jnp.floor(frac)
+    rem = t - jnp.sum(base).astype(jnp.int32)
+    # rank sites by fractional part, give the remainder to the top-`rem`
+    fr = frac - base
+    rank = jnp.argsort(jnp.argsort(-fr))
+    bonus = (rank < rem).astype(base.dtype)
+    return (base + bonus).astype(jnp.int32)
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["points", "weights", "t_i", "local_costs"],
+                   meta_fields=[])
+@dataclasses.dataclass
+class DistributedCoreset:
+    """Per-site local portions (Algorithm 1 output, before any sharing).
+
+    ``points``: (n_sites, t_buffer + k, d); ``weights``: (n_sites, t_buffer+k)
+    with exact zeros on invalid slots; ``t_i``: realized per-site sample
+    counts; ``local_costs``: cost(P_i, B_i) -- the Round-1 scalars.
+    """
+
+    points: Array
+    weights: Array
+    t_i: Array
+    local_costs: Array
+
+    def flatten(self) -> Coreset:
+        d = self.points.shape[-1]
+        return Coreset(points=self.points.reshape(-1, d),
+                       weights=self.weights.reshape(-1))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "t", "t_buffer", "objective", "lloyd_iters",
+                     "clip_negative"))
+def distributed_coreset(
+    key: Array,
+    site_points: Array,          # (n_sites, M, d) padded
+    site_mask: Array,            # (n_sites, M) bool
+    k: int,
+    t: int,
+    t_buffer: Optional[int] = None,
+    objective: str = "kmeans",
+    lloyd_iters: int = 5,
+    clip_negative: bool = False,
+) -> DistributedCoreset:
+    """Algorithm 1 over all sites at once (vmapped host simulation).
+
+    The only cross-site quantities used are ``local_costs`` (Round 1: n
+    scalars) and their sum -- exactly the paper's communication pattern. The
+    SPMD/mesh execution of the same math lives in
+    :mod:`repro.core.distributed`.
+    """
+    n_sites, M, d = site_points.shape
+    t_buffer = t if t_buffer is None else t_buffer
+    w_site = site_mask.astype(site_points.dtype)
+
+    keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
+
+    # -- Round 1: local constant-approximation solves ------------------------
+    def local_solve(ki, pts, w):
+        centers = clustering.kmeans_pp_init(ki, pts, k, weights=w,
+                                            objective=objective)
+        centers, _ = clustering.lloyd(pts, centers, weights=w,
+                                      iters=lloyd_iters, objective=objective)
+        m, assign = sensitivities(pts, centers, w, objective=objective)
+        return centers, m, assign
+
+    centers, m, assign = jax.vmap(local_solve)(keys[:, 0], site_points, w_site)
+    local_costs = m.sum(axis=1)                      # == cost(P_i, B_i)
+
+    # -- the single communicated aggregate -----------------------------------
+    total_m = jnp.sum(local_costs)
+    t_i = proportional_allocation(local_costs, t)
+
+    # -- Round 2: local sampling ---------------------------------------------
+    def local_sample(ki, pts, m_i, w_i, a_i, ti):
+        return _sample_and_weight(ki, pts, m_i, w_i, a_i, k, ti, t_buffer,
+                                  total_m, jnp.asarray(float(t)))
+
+    sampled, w_s, w_b = jax.vmap(local_sample)(
+        keys[:, 1], site_points, m, w_site, assign, t_i)
+    if clip_negative:
+        w_b = jnp.maximum(w_b, 0.0)
+
+    points = jnp.concatenate([sampled, centers], axis=1)
+    weights = jnp.concatenate([w_s, w_b], axis=1)
+    return DistributedCoreset(points=points, weights=weights, t_i=t_i,
+                              local_costs=local_costs)

@@ -1,0 +1,175 @@
+"""Communication-graph topologies used by the paper's experiments.
+
+Numpy-based (host-side orchestration data, never traced). Graphs are
+represented by a sorted edge list ``edges: list[tuple[int,int]]`` with i<j plus
+``n``; helpers derive adjacency lists, degrees, BFS spanning trees and
+diameters. Generators: Erdos-Renyi G(n,p) (paper: p=0.3), 2D grid, and
+Barabasi-Albert preferential attachment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    n: int
+    edges: Tuple[Tuple[int, int], ...]
+
+    @property
+    def m(self) -> int:
+        return len(self.edges)
+
+    def adjacency(self) -> List[List[int]]:
+        adj: List[List[int]] = [[] for _ in range(self.n)]
+        for i, j in self.edges:
+            adj[i].append(j)
+            adj[j].append(i)
+        return adj
+
+    def degrees(self) -> np.ndarray:
+        deg = np.zeros(self.n, dtype=np.int64)
+        for i, j in self.edges:
+            deg[i] += 1
+            deg[j] += 1
+        return deg
+
+
+def _components(n: int, edges) -> List[List[int]]:
+    parent = list(range(n))
+
+    def find(a):
+        while parent[a] != a:
+            parent[a] = parent[parent[a]]
+            a = parent[a]
+        return a
+
+    for i, j in edges:
+        ri, rj = find(i), find(j)
+        if ri != rj:
+            parent[ri] = rj
+    comps: dict = {}
+    for v in range(n):
+        comps.setdefault(find(v), []).append(v)
+    return list(comps.values())
+
+
+def _connect(rng: np.random.Generator, n: int, edges: set) -> set:
+    """Add random edges between components until connected."""
+    comps = _components(n, edges)
+    while len(comps) > 1:
+        a = rng.choice(comps[0])
+        b = rng.choice(comps[1])
+        edges.add((min(a, b), max(a, b)))
+        comps = _components(n, edges)
+    return edges
+
+
+def erdos_renyi(n: int, p: float = 0.3, seed: int = 0) -> Graph:
+    """G(n, p), forced connected by bridging components (paper Sec. 5)."""
+    rng = np.random.default_rng(seed)
+    mask = rng.random((n, n)) < p
+    edges = {(i, j) for i in range(n) for j in range(i + 1, n) if mask[i, j]}
+    edges = _connect(rng, n, edges)
+    return Graph(n, tuple(sorted(edges)))
+
+
+def grid(rows: int, cols: int) -> Graph:
+    """rows x cols 2D grid graph (diameter Theta(sqrt(n)))."""
+    edges = []
+    for r in range(rows):
+        for c in range(cols):
+            v = r * cols + c
+            if c + 1 < cols:
+                edges.append((v, v + 1))
+            if r + 1 < rows:
+                edges.append((v, v + cols))
+    return Graph(rows * cols, tuple(sorted(edges)))
+
+
+def preferential(n: int, m_attach: int = 2, seed: int = 0) -> Graph:
+    """Barabasi-Albert preferential attachment: each new node attaches to
+    ``m_attach`` existing nodes with probability proportional to degree."""
+    rng = np.random.default_rng(seed)
+    m0 = max(m_attach, 2)
+    edges = {(i, j) for i in range(m0) for j in range(i + 1, m0)}  # seed clique
+    deg = np.zeros(n, dtype=np.float64)
+    for i, j in edges:
+        deg[i] += 1
+        deg[j] += 1
+    for v in range(m0, n):
+        probs = deg[:v] / deg[:v].sum()
+        targets = rng.choice(v, size=min(m_attach, v), replace=False, p=probs)
+        for t in targets:
+            edges.add((min(v, int(t)), max(v, int(t))))
+            deg[v] += 1
+            deg[t] += 1
+    return Graph(n, tuple(sorted(edges)))
+
+
+@dataclasses.dataclass(frozen=True)
+class SpanningTree:
+    n: int
+    root: int
+    parent: Tuple[int, ...]   # parent[root] == -1
+    depth: Tuple[int, ...]
+
+    @property
+    def height(self) -> int:
+        return int(max(self.depth))
+
+    def children(self) -> List[List[int]]:
+        ch: List[List[int]] = [[] for _ in range(self.n)]
+        for v, p in enumerate(self.parent):
+            if p >= 0:
+                ch[p].append(v)
+        return ch
+
+    def bottom_up_order(self) -> List[int]:
+        """Leaves first, root last."""
+        return sorted(range(self.n), key=lambda v: -self.depth[v])
+
+
+def bfs_spanning_tree(g: Graph, root: int = 0) -> SpanningTree:
+    """Breadth-first spanning tree (the paper restricts Zhang et al. to a BFS
+    tree from a uniformly random root)."""
+    adj = g.adjacency()
+    parent = [-2] * g.n
+    depth = [0] * g.n
+    parent[root] = -1
+    frontier = [root]
+    while frontier:
+        nxt = []
+        for v in frontier:
+            for u in adj[v]:
+                if parent[u] == -2:
+                    parent[u] = v
+                    depth[u] = depth[v] + 1
+                    nxt.append(u)
+        frontier = nxt
+    if any(p == -2 for p in parent):
+        raise ValueError("graph is not connected")
+    return SpanningTree(g.n, root, tuple(parent), tuple(depth))
+
+
+def diameter(g: Graph) -> int:
+    """Exact diameter by n BFS passes (n is small in all experiments)."""
+    adj = g.adjacency()
+    best = 0
+    for s in range(g.n):
+        dist = [-1] * g.n
+        dist[s] = 0
+        frontier = [s]
+        while frontier:
+            nxt = []
+            for v in frontier:
+                for u in adj[v]:
+                    if dist[u] < 0:
+                        dist[u] = dist[v] + 1
+                        nxt.append(u)
+            frontier = nxt
+        best = max(best, max(dist))
+    return best

@@ -1,0 +1,121 @@
+"""Coreset-based distributed data selection -- the paper's technique as a
+first-class feature of the training data pipeline.
+
+Each data-parallel shard holds a pool of candidate examples. Examples are
+embedded (mean-pooled token embeddings from the model's own embedding table),
+and Algorithm 1 runs over the embedding space: local k-means solves, a single
+scalar (local cost) exchanged per shard, then cost-proportional sensitivity
+sampling. The selected examples + per-example weights form a
+coverage-preserving training subset whose weighted loss approximates the
+full-pool loss for *any* model state in the embedding space's cost geometry
+-- at a communication cost of one scalar per shard plus the subset itself
+(vs shipping every shard's pool).
+
+Returns example *indices* (not just points), because the trainer needs to
+fetch the actual sequences.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clustering
+from repro.core.coreset import proportional_allocation
+
+Array = jax.Array
+_TINY = 1e-30
+
+
+def embed_examples(embed_table: Array, tokens: Array) -> Array:
+    """Mean-pooled token embeddings: tokens (..., L) -> (..., d) f32."""
+    emb = embed_table.astype(jnp.float32)[tokens]
+    return jnp.mean(emb, axis=-2)
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["indices", "weights", "t_i", "local_costs"],
+                   meta_fields=[])
+@dataclasses.dataclass
+class Selection:
+    """Per-site selected example indices and weights. Invalid slots have
+    weight exactly 0 (their index is arbitrary)."""
+
+    indices: Array      # (n_sites, t_buffer + k) int32, site-local indices
+    weights: Array      # (n_sites, t_buffer + k) f32
+    t_i: Array          # (n_sites,)
+    local_costs: Array  # (n_sites,)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "t", "t_buffer", "lloyd_iters"))
+def select_coreset(
+    key: Array,
+    embeddings: Array,        # (n_sites, M, d) f32
+    mask: Array,              # (n_sites, M) bool
+    k: int,
+    t: int,
+    t_buffer: int | None = None,
+    lloyd_iters: int = 5,
+) -> Selection:
+    """Algorithm 1 over example embeddings, returning indices.
+
+    The coreset's "solution centers" are mapped back to data: the example
+    nearest each local center joins the selection, carrying the center weight
+    w_b = |P_b| - sum_{q in P_b cap S} w_q.
+    """
+    n_sites, M, d = embeddings.shape
+    t_buffer = t if t_buffer is None else t_buffer
+    w_site = mask.astype(jnp.float32)
+    keys = jax.random.split(key, 2 * n_sites).reshape(n_sites, 2, -1)
+
+    def local_solve(ki, pts, w):
+        centers = clustering.kmeans_pp_init(ki, pts, k, weights=w)
+        centers, _ = clustering.lloyd(pts, centers, weights=w,
+                                      iters=lloyd_iters)
+        d2, assign = clustering.min_dist_argmin(pts, centers)
+        m = w * d2
+        # nearest real example per center (masked argmin over the column)
+        dc = clustering.pairwise_sq_dists(centers, pts)
+        dc = jnp.where(w[None, :] > 0, dc, jnp.inf)
+        center_idx = jnp.argmin(dc, axis=1).astype(jnp.int32)
+        return m, assign, center_idx
+
+    m, assign, center_idx = jax.vmap(local_solve)(
+        keys[:, 0], embeddings, w_site)
+    local_costs = m.sum(axis=1)
+    total_m = jnp.sum(local_costs)
+    t_i = proportional_allocation(local_costs, t)
+
+    def local_sample(ki, m_i, w_i, a_i, ti, c_idx):
+        from repro.core.coreset import weighted_choice
+        idx = weighted_choice(ki, m_i, t_buffer)
+        valid = (jnp.arange(t_buffer) < ti) & (total_m > _TINY)
+        m_q = m_i[idx]
+        w_s = jnp.where(valid & (m_q > _TINY),
+                        total_m * w_i[idx] / (float(t) * jnp.maximum(m_q, _TINY)),
+                        0.0)
+        oh = jax.nn.one_hot(a_i, k, dtype=jnp.float32)
+        w_pb = (w_i[:, None] * oh).sum(0)
+        w_sb = jnp.zeros((k,), jnp.float32).at[a_i[idx]].add(w_s)
+        w_b = w_pb - w_sb
+        return (jnp.concatenate([idx.astype(jnp.int32), c_idx]),
+                jnp.concatenate([w_s, w_b]))
+
+    indices, weights = jax.vmap(local_sample)(
+        keys[:, 1], m, w_site, assign, t_i, center_idx)
+    return Selection(indices=indices, weights=weights, t_i=t_i,
+                     local_costs=local_costs)
+
+
+def gather_selected(site_tokens: Array, sel: Selection
+                    ) -> Dict[str, Array]:
+    """site_tokens (n_sites, M, L) -> selected tokens + weights, flattened
+    over sites: {"tokens": (n_sites*(t_buffer+k), L), "weights": (...)}."""
+    n_sites = site_tokens.shape[0]
+    toks = jax.vmap(lambda tt, ii: tt[ii])(site_tokens, sel.indices)
+    return {"tokens": toks.reshape(-1, site_tokens.shape[-1]),
+            "weights": sel.weights.reshape(-1)}

@@ -1,0 +1,105 @@
+"""Safe jit'd wrappers around the Pallas kernels.
+
+Handles: shape padding to tile multiples (points padded with zeros + weight
+0, centers padded with a huge sentinel coordinate so padded rows never win
+the argmin), dtype policy (inputs f32/bf16, accumulation f32), interpret-mode
+auto-selection on CPU (the kernels TARGET TPU; on this CPU container they
+run under ``interpret=True``), and the VMEM-residency fallback for
+:func:`lloyd_stats` when k*d exceeds the resident budget.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.distance_argmin import distance_argmin as _distance_argmin
+from repro.kernels.lloyd_update import lloyd_stats as _lloyd_stats
+
+Array = jax.Array
+
+_CENTER_SENTINEL = 1.0e15
+# (k, d) f32 resident block budget for the fused lloyd kernel (~4 MB).
+_LLOYD_RESIDENT_FLOATS = 1 << 20
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
+def _pad_dim(x: Array, axis: int, multiple: int, value: float = 0.0) -> Array:
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def min_dist_argmin(points: Array, centers: Array, block_n: int = 256,
+                    block_k: int = 256,
+                    interpret: Optional[bool] = None
+                    ) -> Tuple[Array, Array]:
+    """Fused min-distance/argmin: (n,d),(k,d) -> ((n,) f32, (n,) i32)."""
+    n, d = points.shape
+    k = centers.shape[0]
+    block_n = min(block_n, max(8, 1 << (n - 1).bit_length()))
+    block_k = min(block_k, max(8, 1 << (k - 1).bit_length()))
+    p = _pad_dim(_pad_dim(points, 1, 128), 0, block_n)
+    c = _pad_dim(centers, 1, 128)
+    c = _pad_dim(c, 0, block_k, value=_CENTER_SENTINEL)
+    md, am = _distance_argmin(p, c, block_n=block_n, block_k=block_k,
+                              interpret=_auto_interpret(interpret))
+    return md[:n, 0], am[:n, 0]
+
+
+def lloyd_stats(points: Array, centers: Array,
+                weights: Optional[Array] = None, block_n: int = 256,
+                interpret: Optional[bool] = None
+                ) -> Tuple[Array, Array, Array]:
+    """Fused Lloyd statistics: returns (sums (k,d) f32, counts (k,) f32,
+    cost () f32). Falls back to kernel-1 + jnp segment ops when the (k, d)
+    center block cannot stay VMEM-resident."""
+    n, d = points.shape
+    k = centers.shape[0]
+    w = jnp.ones((n,), jnp.float32) if weights is None else weights
+    d_pad = -(-d // 128) * 128
+    k_pad = -(-k // 8) * 8
+    if k_pad * d_pad > _LLOYD_RESIDENT_FLOATS:
+        # two-pass fallback: fused assignment kernel + XLA one-hot matmul
+        min_d2, assign = min_dist_argmin(points, centers, block_n=block_n,
+                                         interpret=interpret)
+        oh = jax.nn.one_hot(assign, k, dtype=jnp.float32) * w[:, None]
+        sums = oh.T @ points.astype(jnp.float32)
+        counts = jnp.sum(oh, axis=0)
+        cost = jnp.sum(w * min_d2)
+        return sums, counts, cost
+
+    block_n = min(block_n, max(8, 1 << (n - 1).bit_length()))
+    p = _pad_dim(_pad_dim(points, 1, 128), 0, block_n)
+    c = _pad_dim(centers, 1, 128)
+    c = _pad_dim(c, 0, 8, value=_CENTER_SENTINEL)
+    wp = _pad_dim(w.astype(jnp.float32)[:, None], 0, block_n)
+    sums, counts, cost = _lloyd_stats(p, c, wp, block_n=block_n,
+                                      interpret=_auto_interpret(interpret))
+    return sums[:k, :d], counts[:k, 0], cost[0, 0]
+
+
+def lloyd_step(points: Array, centers: Array,
+               weights: Optional[Array] = None,
+               interpret: Optional[bool] = None) -> Tuple[Array, Array]:
+    """One full weighted Lloyd iteration via the fused kernel: returns
+    (new_centers (k,d), cost ()). Empty / non-positive-mass clusters keep
+    their previous center (matches repro.core.clustering semantics)."""
+    sums, counts, cost = lloyd_stats(points, centers, weights,
+                                     interpret=interpret)
+    eps = 1e-12
+    new = sums / jnp.where(counts > eps, counts, 1.0)[:, None]
+    new = jnp.where((counts > eps)[:, None], new, centers.astype(jnp.float32))
+    return new.astype(centers.dtype), cost

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantics the kernels must match (assert_allclose in
+tests/test_kernels.py across shape/dtype sweeps). They materialize the full
+(n, k) distance matrix -- exactly what the fused kernels avoid.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def min_dist_argmin_ref(points: Array, centers: Array
+                        ) -> Tuple[Array, Array]:
+    """(n,d),(k,d) -> min squared distance (n,) f32 and argmin (n,) i32."""
+    p = points.astype(jnp.float32)
+    c = centers.astype(jnp.float32)
+    p2 = jnp.sum(p * p, axis=-1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=-1)
+    d2 = jnp.maximum(p2 + c2[None, :] - 2.0 * (p @ c.T), 0.0)
+    return jnp.min(d2, axis=-1), jnp.argmin(d2, axis=-1).astype(jnp.int32)
+
+
+def lloyd_stats_ref(points: Array, centers: Array,
+                    weights: Optional[Array] = None
+                    ) -> Tuple[Array, Array, Array]:
+    """One fused Lloyd statistics pass.
+
+    Returns (sums (k,d) f32, counts (k,) f32, cost () f32) where
+    sums[c] = sum_{p: argmin(p)=c} w_p * p, counts[c] = sum w_p,
+    cost = sum_p w_p * min_d2(p).
+    """
+    p = points.astype(jnp.float32)
+    w = (jnp.ones((p.shape[0],), jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    min_d2, assign = min_dist_argmin_ref(points, centers)
+    k = centers.shape[0]
+    oh = jax.nn.one_hot(assign, k, dtype=jnp.float32) * w[:, None]
+    sums = oh.T @ p
+    counts = jnp.sum(oh, axis=0)
+    cost = jnp.sum(w * min_d2)
+    return sums, counts, cost

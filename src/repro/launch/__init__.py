@@ -1,0 +1,4 @@
+from repro.launch import ft, mesh, shapes
+from repro.launch.mesh import make_mesh, make_production_mesh
+
+__all__ = ["ft", "mesh", "shapes", "make_mesh", "make_production_mesh"]

@@ -1,0 +1,255 @@
+"""Abstract input specs (ShapeDtypeStruct + NamedSharding) for every
+(architecture x input shape) cell -- the dry run lowers against these; no
+device memory is ever allocated for the full configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch.shapes import SHAPES, ShapeSpec
+from repro.models import cache_spec, forward, init_params, make_positions
+from repro.models.config import ModelConfig
+from repro.models.sharding import param_shardings, resolve, set_mesh
+from repro.optim import adamw
+from repro.train.train_step import TrainConfig, make_train_step
+
+PyTree = Any
+
+
+def _sds(tree: PyTree, shardings: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        tree, shardings)
+
+
+def _divisible_spec(dims, shape, mesh: Mesh, layout: str = "tp") -> P:
+    fixed = []
+    for d, size in zip(dims, shape):
+        r = resolve(d, mesh, layout)
+        names = (r,) if isinstance(r, str) else (r or ())
+        total = 1
+        for nm in names:
+            total *= mesh.shape[nm]
+        fixed.append(r if total > 1 and size % total == 0 else None)
+    return P(*fixed)
+
+
+def _cache_shardings(cache_abs: PyTree, mesh: Mesh) -> PyTree:
+    """KV caches: batch over data, *length over model* (flash-decode layout;
+    works for MQA where heads cannot shard). States: heads/width over
+    model."""
+
+    def one(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        last = names[-1]
+        lead = len(leaf.shape)
+
+        def dims(*ds):
+            return (None,) * (lead - len(ds)) + ds
+
+        if last in ("k", "v"):
+            d = dims("data", "model", None, None)
+        elif last in ("k_scale", "v_scale"):
+            d = dims("data", "model", None)
+        elif last == "pos":
+            d = dims("data", "model")
+        elif last == "conv":
+            d = dims("data", None, "model")
+        elif last == "ssm":
+            d = dims("data", "model", None, None)
+        elif last == "h":
+            d = dims("data", "model")
+        else:
+            d = (None,) * lead
+        return NamedSharding(mesh, _divisible_spec(d, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache_abs)
+
+
+def _opt_shardings(params_shardings: PyTree, mesh: Mesh) -> PyTree:
+    return {"m": params_shardings, "v": params_shardings,
+            "step": NamedSharding(mesh, P())}
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeSpec,
+                         mesh: Mesh) -> int:
+    """Per-microbatch global batch of 32 sequences at 4k (activation
+    memory; see DESIGN.md Sec. 6); 16 for >50B-param models -- but never
+    below the batch-sharding ways (microbatches must still shard over
+    pod x data)."""
+    if shape.kind != "train":
+        return 1
+    ways = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    per_mb = 16 if cfg.param_count() > 50e9 else 32
+    per_mb = max(per_mb, ways)
+    return max(shape.global_batch // per_mb, 1)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    cfg: ModelConfig
+    fn: Callable
+    args: Tuple            # ShapeDtypeStructs (sharded)
+    donate: Tuple[int, ...]
+    microbatches: int = 1
+
+    def lower(self):
+        return jax.jit(self.fn, donate_argnums=self.donate).lower(*self.args)
+
+
+def _serve_param_sds(params_abs, pshard, mesh: Mesh,
+                     cfg: Optional[ModelConfig] = None):
+    """Serving params: bf16 (no f32 master / optimizer state at inference)
+    and -- when the TP-sharded weights fit comfortably -- replicated over
+    the data axis instead of FSDP, killing the per-layer parameter
+    all-gathers that otherwise dominate the decode collective term."""
+    def to_bf16(a):
+        dt = jnp.bfloat16 if jnp.issubdtype(a.dtype, jnp.floating) else a.dtype
+        return jax.ShapeDtypeStruct(a.shape, dt)
+
+    p16 = jax.tree.map(to_bf16, params_abs)
+    bytes_per_model_shard = sum(
+        a.size * a.dtype.itemsize for a in jax.tree.leaves(p16)
+    ) / mesh.shape["model"]
+    # 2.5 GB replication threshold: conservative for the CPU dry-run (XLA
+    # CPU hoists a one-off f32 copy of loop-invariant bf16 weights; TPU has
+    # native bf16 dots and could replicate up to ~10 GB/shard). MoE archs
+    # keep FSDP: their expert tables dwarf the per-token active weights.
+    is_moe = cfg is not None and cfg.n_experts > 0
+    if bytes_per_model_shard <= 2.5e9 and not is_moe:
+        def drop_data(ns):
+            spec = P(*[None if r in ("data", ("data",)) or
+                       (isinstance(r, tuple) and "data" in r) else r
+                       for r in ns.spec])
+            return NamedSharding(mesh, spec)
+        pshard = jax.tree.map(drop_data, pshard)
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        p16, pshard)
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               tc: Optional[TrainConfig] = None,
+               cfg_override: Optional[ModelConfig] = None,
+               layout: str = "tp") -> Cell:
+    shape = SHAPES[shape_name]
+    cfg = cfg_override or configs.get(arch)
+    params_abs = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    pshard = param_shardings(params_abs, mesh, layout)
+    if shape.kind in ("prefill", "decode"):
+        params_sds = _serve_param_sds(params_abs, pshard, mesh, cfg)
+    else:
+        params_sds = _sds(params_abs, pshard)
+    batch_spec = _divisible_spec(("batch", None),
+                                 (shape.global_batch, shape.seq_len), mesh,
+                                 layout)
+    bsh = NamedSharding(mesh, batch_spec)
+
+    if shape.kind == "train":
+        mb = default_microbatches(cfg, shape, mesh)
+        tc = tc or TrainConfig(microbatches=mb, remat="full")
+        if tc.bf16_params:
+            opt_abs = jax.eval_shape(
+                lambda p: adamw.init(p, keep_master=True), params_abs)
+            params_abs = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(
+                    a.shape, jnp.bfloat16
+                    if jnp.issubdtype(a.dtype, jnp.floating) else a.dtype),
+                params_abs)
+            params_sds = _sds(params_abs, pshard)
+            opt_sh = _opt_shardings(pshard, mesh)
+            opt_sh["master"] = pshard
+            opt_sds = _sds(opt_abs, opt_sh)
+        else:
+            opt_abs = jax.eval_shape(lambda: adamw.init(params_abs))
+            opt_sds = _sds(opt_abs, _opt_shardings(pshard, mesh))
+        batch = {
+            "tokens": jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len), jnp.int32, sharding=bsh),
+            "labels": jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len), jnp.int32, sharding=bsh),
+        }
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+        ts = make_train_step(cfg, tc)
+
+        def fn(params, opt_state, batch, step):
+            with set_mesh(mesh, layout):
+                return ts(params, opt_state, batch, step)
+
+        return Cell(arch, shape, cfg, fn,
+                    (params_sds, opt_sds, batch, step), donate=(0, 1),
+                    microbatches=tc.microbatches)
+
+    if shape.kind == "prefill":
+        tokens = jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32, sharding=bsh)
+        cache_abs0 = cache_spec(cfg, shape.global_batch, shape.seq_len)
+        cache_bytes0 = sum(a.size * a.dtype.itemsize
+                           for a in jax.tree.leaves(cache_abs0)) / mesh.size
+        if cache_bytes0 > 2.5e9 and cfg.kv_cache_dtype != "int8":
+            cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+
+        def fn(params, tokens):
+            from repro.models import init_cache
+            with set_mesh(mesh, layout):
+                B = tokens.shape[0]
+                cache = init_cache(cfg, B, shape.seq_len)
+                pos = make_positions(tokens, cfg)
+                logits, cache, _ = forward(params, tokens, pos, cfg,
+                                           cache=cache)
+                return logits[:, -1], cache
+
+        return Cell(arch, shape, cfg, fn, (params_sds, tokens), donate=())
+
+    # decode: one new token against a seq_len cache. If the bf16 cache alone
+    # would eat most of the 16 GB HBM budget, serve with the int8-quantized
+    # cache (2x saving; accuracy impact tested in tests/test_models.py).
+    cache_abs = cache_spec(cfg, shape.global_batch, shape.seq_len)
+    cache_bytes = sum(a.size * a.dtype.itemsize
+                      for a in jax.tree.leaves(cache_abs)) / mesh.size
+    if cache_bytes > 2.5e9 and cfg.kv_cache_dtype != "int8":
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+        cache_abs = cache_spec(cfg, shape.global_batch, shape.seq_len)
+    cache_sds = _sds(cache_abs, _cache_shardings(cache_abs, mesh))
+    tok_spec = _divisible_spec(("batch", None), (shape.global_batch, 1), mesh)
+    token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32,
+                                 sharding=NamedSharding(mesh, tok_spec))
+    pos_spec = _divisible_spec(("batch",), (shape.global_batch,), mesh)
+    positions = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32,
+                                     sharding=NamedSharding(mesh, pos_spec))
+
+    def fn(params, token, positions):
+        with set_mesh(mesh, layout):
+            pos = positions[:, None]
+            if cfg.mrope_sections is not None:
+                pos = jnp.broadcast_to(pos[:, None, :],
+                                       (token.shape[0], 3, 1))
+            def run(cache):
+                logits, cache, _ = forward(params, token, pos, cfg,
+                                           cache=cache)
+                return logits[:, 0], cache
+            return run
+
+    # close over cache as a positional arg for donation
+    def fn2(params, token, positions, cache):
+        return fn(params, token, positions)(cache)
+
+    return Cell(arch, shape, cfg, fn2,
+                (params_sds, token, positions, cache_sds), donate=(3,))
+
+
+def input_specs(arch: str, shape_name: str, mesh: Mesh) -> Tuple:
+    """The (fn, kwargs) pair the dry run lowers: fn is the jit-able step
+    (train_step / prefill_step / decode_step) and the returned structs are
+    weak-type-correct, shardable, allocation-free stand-ins."""
+    cell = build_cell(arch, shape_name, mesh)
+    return cell.fn, cell.args

@@ -1,0 +1,193 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3_8b \
+        --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/run1
+
+Features: arbitrary (data, model) mesh on the local devices, resume from the
+latest checkpoint, async checkpointing, heartbeat for the fault-tolerance
+supervisor, failure injection (REPRO_FAIL_AT_STEP), and coreset-based data
+selection (--data-selection coreset) -- the paper's technique in the
+training data plane.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.data import BigramLM, embed_examples, gather_selected, select_coreset
+from repro.launch.ft import Heartbeat
+from repro.launch.mesh import make_mesh
+from repro.models import init_params
+from repro.models.sharding import param_shardings, set_mesh
+from repro.optim import adamw
+from repro.train import TrainConfig, make_train_step
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_8b", choices=configs.ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (smoke) config")
+    ap.add_argument("--width", type=int, default=0,
+                    help="override d_model/d_ff scale for ~100M runs")
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mesh", default="1x1",
+                    help="DATAxMODEL, e.g. 2x4 (needs that many devices)")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--heartbeat", default="")
+    ap.add_argument("--data-selection", choices=["none", "coreset"],
+                    default="none")
+    ap.add_argument("--selection-pool", type=int, default=512,
+                    help="candidate pool size per selection round")
+    ap.add_argument("--selection-frac", type=float, default=0.25)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default="")
+    return ap.parse_args(argv)
+
+
+def build_cfg(args):
+    import dataclasses as dc
+    cfg = (configs.get_reduced(args.arch) if args.reduced
+           else configs.get(args.arch))
+    if args.width:
+        cfg = dc.replace(
+            cfg, d_model=args.width,
+            d_ff=args.width * 4 if cfg.d_ff else 0,
+            head_dim=max(args.width // max(cfg.n_heads, 1), 8)
+            if cfg.n_heads else 0,
+            lru_width=args.width if cfg.lru_width else 0)
+    if args.layers:
+        cfg = dc.replace(cfg, n_layers=args.layers)
+    return cfg
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    cfg = build_cfg(args)
+    dshape = tuple(int(x) for x in args.mesh.split("x"))
+    mesh = make_mesh(dshape, ("data", "model"))
+    tc = TrainConfig(peak_lr=args.lr, total_steps=args.steps,
+                     warmup_steps=max(args.steps // 20, 5),
+                     microbatches=args.microbatches, remat="full")
+
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    opt_state = adamw.init(params)
+    start_step = 0
+    ckpt = None
+    if args.ckpt_dir:
+        ckpt = AsyncCheckpointer(args.ckpt_dir, keep_last=3)
+        if latest_step(args.ckpt_dir) is not None:
+            (params, opt_state), start_step = restore(
+                args.ckpt_dir, target=(params, opt_state))
+            print(f"[train] resumed from step {start_step}")
+
+    pshard = param_shardings(params, mesh)
+    params = jax.device_put(params, pshard)
+    opt_state = jax.device_put(
+        opt_state, {"m": pshard, "v": pshard,
+                    "step": NamedSharding(mesh, P())})
+
+    ts = make_train_step(cfg, tc)
+
+    def stepper(params, opt_state, batch, step):
+        with set_mesh(mesh):
+            return ts(params, opt_state, batch, step)
+
+    step_fn = jax.jit(stepper, donate_argnums=(0, 1))
+    data = BigramLM(cfg.vocab_size)
+    hb = Heartbeat(args.heartbeat) if args.heartbeat else None
+    fail_at = int(os.environ.get("REPRO_FAIL_AT_STEP", "-1"))
+    bsh = NamedSharding(mesh, P("data", None))
+
+    sel_batches = None
+    if args.data_selection == "coreset":
+        sel_batches = _coreset_pool(args, cfg, params, mesh, data)
+
+    metrics_log = []
+    t_last = time.time()
+    for step in range(start_step, args.steps):
+        if step == fail_at:
+            print(f"[train] INJECTED FAILURE at step {step}", flush=True)
+            os._exit(42)
+        if sel_batches is not None:
+            batch = sel_batches[step % len(sel_batches)]
+        else:
+            batch = data.batch(step, args.batch, args.seq)
+        batch = jax.device_put(batch, {"tokens": bsh, "labels": bsh})
+        params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                             jnp.asarray(step, jnp.int32))
+        if hb:
+            hb.beat(step)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            dt = time.time() - t_last
+            t_last = time.time()
+            print(f"[train] step={step} loss={m['loss']:.4f} "
+                  f"ce={m['ce']:.4f} gnorm={m['grad_norm']:.3f} "
+                  f"lr={m['lr']:.2e} ({dt:.2f}s)", flush=True)
+            metrics_log.append({"step": step, **m})
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, (params, opt_state))
+    if ckpt:
+        ckpt.save(args.steps, (params, opt_state))
+        ckpt.wait()
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(metrics_log, f)
+    print("[train] done")
+    return metrics_log
+
+
+def _coreset_pool(args, cfg, params, mesh, data):
+    """Build a coreset-selected training set from a candidate pool
+    (Algorithm 1 over example embeddings; see repro.data.selection)."""
+    n_sites = max(mesh.shape["data"], 2)
+    pool = data.batch(10_000_019, args.selection_pool, args.seq)
+    toks = np.asarray(pool["tokens"])
+    labs = np.asarray(pool["labels"])
+    per = args.selection_pool // n_sites
+    site_tokens = jnp.asarray(
+        toks[: per * n_sites].reshape(n_sites, per, -1))
+    emb = embed_examples(params["embed"]["table"], site_tokens)
+    mask = jnp.ones(emb.shape[:2], bool)
+    t = max(int(args.selection_frac * per * n_sites), 8)
+    sel = select_coreset(jax.random.PRNGKey(1), emb, mask, k=8, t=t)
+    chosen = gather_selected(site_tokens, sel)
+    keep = np.asarray(chosen["weights"]) > 0
+    sel_toks = np.asarray(chosen["tokens"])[keep]
+    print(f"[train] coreset selection kept {keep.sum()} / "
+          f"{args.selection_pool} examples "
+          f"(comm: {n_sites} scalars + selection)")
+    # rebuild batches from the selected subset (labels = shifted tokens of
+    # the same bigram stream, recomputed by lookup)
+    lab_lookup = {tuple(t): l for t, l in zip(toks.tolist(), labs.tolist())}
+    sel_labs = np.asarray([lab_lookup[tuple(t)] for t in sel_toks.tolist()])
+    batches = []
+    B = args.batch
+    for i in range(max(len(sel_toks) // B, 1)):
+        sl = slice(i * B, (i + 1) * B)
+        if len(sel_toks[sl]) < B:
+            break
+        batches.append({"tokens": jnp.asarray(sel_toks[sl]),
+                        "labels": jnp.asarray(sel_labs[sl])})
+    return batches or None
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Model zoo: unified block-pattern LM covering dense / MoE / SSM / hybrid /
+VLM-backbone / audio-backbone families."""
+
+from repro.models import blocks, config, layers, model, moe, rglru, sharding, ssd
+from repro.models.config import ModelConfig
+from repro.models.model import (cache_spec, forward, init_cache, init_params,
+                                make_positions)
+
+__all__ = [
+    "blocks", "config", "layers", "model", "moe", "rglru", "sharding", "ssd",
+    "ModelConfig", "cache_spec", "forward", "init_cache", "init_params",
+    "make_positions",
+]

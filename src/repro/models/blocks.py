@@ -1,0 +1,112 @@
+"""Residual blocks: one sequence-mixer ("attn" | "local" | "ssd" | "rglru")
+plus -- for attention and RG-LRU blocks -- a (dense or MoE) MLP."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding
+from repro.models.config import ModelConfig
+from repro.models.layers import (AttnCacheSpec, attention_apply,
+                                 attention_init, mlp_apply, mlp_init,
+                                 rmsnorm_apply, rmsnorm_init)
+from repro.models.moe import moe_apply, moe_init
+from repro.models.rglru import rglru_apply, rglru_cache_init, rglru_init
+from repro.models.ssd import ssd_apply, ssd_cache_init, ssd_init
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def _has_mlp(cfg: ModelConfig, kind: str) -> bool:
+    if kind in ("attn", "local"):
+        return cfg.d_ff > 0 or cfg.n_experts > 0
+    if kind == "rglru":
+        return cfg.d_ff > 0
+    return False
+
+
+def block_init(key: Array, cfg: ModelConfig, kind: str) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Params = {"ln1": rmsnorm_init(d, cfg)}
+    if kind in ("attn", "local"):
+        p["attn"] = attention_init(ks[0], cfg)
+    elif kind == "ssd":
+        p["ssd"] = ssd_init(ks[0], cfg)
+    elif kind == "rglru":
+        p["rec"] = rglru_init(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.post_norms:
+        p["post_ln1"] = rmsnorm_init(d, cfg)
+    if _has_mlp(cfg, kind):
+        p["ln2"] = rmsnorm_init(d, cfg)
+        if cfg.n_experts and kind in ("attn", "local"):
+            p["moe"] = moe_init(ks[1], cfg)
+        else:
+            p["mlp"] = mlp_init(ks[1], cfg)
+        if cfg.post_norms:
+            p["post_ln2"] = rmsnorm_init(d, cfg)
+    return p
+
+
+def block_apply(
+    p: Params,
+    x: Array,
+    positions: Array,
+    cfg: ModelConfig,
+    kind: str,
+    cache: Optional[Params] = None,
+) -> Tuple[Array, Optional[Params], Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm_apply(p["ln1"], x, cfg.rms_eps)
+    if kind in ("attn", "local"):
+        h, new_cache = attention_apply(p["attn"], h, positions, cfg, kind,
+                                       cache)
+    elif kind == "ssd":
+        h, new_cache = ssd_apply(p["ssd"], h, cfg, cache)
+    else:  # rglru
+        h, new_cache = rglru_apply(p["rec"], h, cfg, cache)
+    if cfg.post_norms:
+        h = rmsnorm_apply(p["post_ln1"], h, cfg.rms_eps)
+    # sequence-parallel residual (Megatron-SP): the stream lives sharded
+    # (batch, seq/model); mixers gather the sequence dim on entry and
+    # reduce-scatter on exit. Constraining the mixer OUTPUT (not just the
+    # post-add residual) pins the boundary exactly at the row-parallel
+    # matmul so GSPMD emits a reduce-scatter, never a full all-reduce.
+    # Keeps the remat activation stash 1/model_axis of the naive size.
+    if h.shape[1] > 1:
+        h = sharding.constrain(h, "batch", "model", None)
+    x = x + h
+    x = sharding.constrain(x, "batch", "model", None)
+
+    if _has_mlp(cfg, kind):
+        h = rmsnorm_apply(p["ln2"], x, cfg.rms_eps)
+        if "moe" in p:
+            h, aux = moe_apply(p["moe"], h, cfg)
+        else:
+            h = mlp_apply(p["mlp"], h, cfg)
+        if cfg.post_norms:
+            h = rmsnorm_apply(p["post_ln2"], h, cfg.rms_eps)
+        if h.shape[1] > 1:
+            h = sharding.constrain(h, "batch", "model", None)
+        x = x + h
+        x = sharding.constrain(x, "batch", "model", None)
+    return x, new_cache, aux
+
+
+def block_cache_init(batch: int, max_len: int, cfg: ModelConfig,
+                     kind: str) -> Params:
+    if kind == "attn":
+        return AttnCacheSpec(max_len).init(batch, cfg)
+    if kind == "local":
+        return AttnCacheSpec(min(cfg.window, max_len)).init(batch, cfg)
+    if kind == "ssd":
+        return ssd_cache_init(batch, cfg)
+    if kind == "rglru":
+        return rglru_cache_init(batch, cfg)
+    raise ValueError(kind)

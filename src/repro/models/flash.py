@@ -1,0 +1,148 @@
+"""Memory-efficient causal attention with a flash-style custom VJP.
+
+Pure-JAX autodiff of online-softmax attention saves every probability block
+(the full B x H x L^2 matrix, ~4.3 GB/layer for qwen2-72b at 4k) across the
+backward -- even under remat, because the inner scans stash their carries.
+This custom_vjp stores only (q, k, v, out, m, l) -- O(B L H hd) -- and
+*recomputes* the probability blocks chunk-by-chunk in the backward, exactly
+like the FlashAttention backward pass.
+
+Forward math matches layers._attention_rect (same chunking, same masking);
+assumes attn_logit_softcap == 0 (true for every assigned arch -- gemma3
+uses QK-norm, not soft-capping); layers.attention_apply falls back to the
+plain path when a softcap is set.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+_NEG_INF = -1e30
+
+
+def _fit(chunk: int, length: int) -> int:
+    chunk = min(chunk, length)
+    while length % chunk:
+        chunk -= 1
+    return chunk
+
+
+def _fwd_impl(q, k, v, q_pos, k_pos, q_chunk, kv_chunk):
+    """Returns out (B, Lq, KV, G, hd) f32 plus (m, l) (B, KV, G, Lq) f32."""
+    B, Lq, KV, G, hd = q.shape
+    kc = _fit(kv_chunk, k.shape[1])
+    qc = _fit(q_chunk, Lq)
+    nk = k.shape[1] // kc
+    nq = Lq // qc
+    scale = 1.0 / math.sqrt(hd)
+    ks = k.reshape(B, nk, kc, KV, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kc, KV, hd).transpose(1, 0, 2, 3, 4)
+    kps = k_pos.reshape(nk, kc)
+
+    def per_q(args):
+        q_blk, qp = args
+
+        def body(carry, inp):
+            acc, m, l = carry
+            k_blk, v_blk, kp = inp
+            s = jnp.einsum("bqkgh,bskh->bkgqs", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = kp[None, :] <= qp[:, None]
+            s = jnp.where(mask[None, None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v_blk.dtype),
+                            v_blk, preferred_element_type=jnp.float32)
+            acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, qc, KV, G, hd), jnp.float32)
+        m0 = jnp.full((B, KV, G, qc), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (ks, vs, kps))
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return out, m, l
+
+    if nq == 1:
+        out, m, l = per_q((q, q_pos))
+        return out, m, l
+    qs = q.reshape(B, nq, qc, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    qps = q_pos.reshape(nq, qc)
+    outs, ms, ls = jax.lax.map(per_q, (qs, qps))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Lq, KV, G, hd)
+    m = jnp.concatenate(list(ms.transpose(0, 1, 2, 3, 4)), axis=-1) \
+        if False else ms.transpose(1, 2, 3, 0, 4).reshape(B, KV, G, Lq)
+    l = ls.transpose(1, 2, 3, 0, 4).reshape(B, KV, G, Lq)
+    return out, m, l
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def flash_attention(q, k, v, q_pos, k_pos, q_chunk=2048, kv_chunk=4096):
+    """q (B, Lq, KV, G, hd) f32/bf16; k, v (B, Lkv, KV, hd); positions 1-D.
+    Returns (B, Lq, KV, G, hd) in q.dtype."""
+    out, _, _ = _fwd_impl(q.astype(jnp.float32), k.astype(jnp.float32),
+                          v.astype(jnp.float32), q_pos, k_pos, q_chunk,
+                          kv_chunk)
+    return out.astype(q.dtype)
+
+
+def _flash_fwd(q, k, v, q_pos, k_pos, q_chunk, kv_chunk):
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    out, m, l = _fwd_impl(qf, kf, vf, q_pos, k_pos, q_chunk, kv_chunk)
+    dtype_token = jnp.zeros((0,), q.dtype)   # carries the primal dtype
+    return out.astype(q.dtype), (qf, kf, vf, q_pos, k_pos, out, m, l,
+                                 dtype_token)
+
+
+def _flash_bwd(q_chunk, kv_chunk, res, dout):
+    qf, kf, vf, q_pos, k_pos, out, m, l, dtype_token = res
+    in_dtype = dtype_token.dtype
+    B, Lq, KV, G, hd = qf.shape
+    Lk = kf.shape[1]
+    kc = _fit(kv_chunk, Lk)
+    nk = Lk // kc
+    scale = 1.0 / math.sqrt(hd)
+    do = dout.astype(jnp.float32)
+    linv = 1.0 / jnp.maximum(l, 1e-30)                     # (B,KV,G,Lq)
+    # delta = sum_h dout * out  (B, KV, G, Lq)
+    delta = jnp.einsum("bqkgh,bqkgh->bkgq", do, out)
+
+    ks = kf.reshape(B, nk, kc, KV, hd).transpose(1, 0, 2, 3, 4)
+    vs = vf.reshape(B, nk, kc, KV, hd).transpose(1, 0, 2, 3, 4)
+    kps = k_pos.reshape(nk, kc)
+
+    def body(dq_acc, inp):
+        k_blk, v_blk, kp = inp
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = kp[None, :] <= q_pos[:, None]
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        p = jnp.exp(s - m[..., None]) * linv[..., None]    # (B,KV,G,Lq,kc)
+        # dv_j = p^T dout
+        dv = jnp.einsum("bkgqs,bqkgh->bskh", p, do)
+        # dp = dout v^T ; ds = p * (dp - delta)
+        dp = jnp.einsum("bqkgh,bskh->bkgqs", do, v_blk)
+        ds = p * (dp - delta[..., None])
+        dq_acc = dq_acc + jnp.einsum("bkgqs,bskh->bqkgh", ds,
+                                     k_blk) * scale
+        dk = jnp.einsum("bkgqs,bqkgh->bskh", ds, qf) * scale
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros_like(qf)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (ks, vs, kps))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, Lk, KV, hd)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, Lk, KV, hd)
+    return (dq.astype(in_dtype), dk.astype(in_dtype), dv.astype(in_dtype),
+            None, None)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

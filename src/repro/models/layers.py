@@ -1,0 +1,461 @@
+"""Common neural layers, pure JAX pytrees (no flax).
+
+Conventions:
+* params are nested dicts of jnp arrays; ``*_init(key, cfg)`` builds them,
+  ``*_apply(params, ...)`` runs them.
+* activations flow in ``cfg.dtype`` (bf16), norms/softmax/rope accumulate in
+  f32, params live in ``cfg.param_dtype`` (f32 master copies).
+* attention is *chunked* (online-softmax over KV blocks, flash-style in pure
+  XLA) so the (L, L) score matrix never materializes in HBM -- required for
+  the 32k-prefill dry-run cells to fit. Local (sliding-window) attention uses
+  banded slicing: O(L * window) compute, not masked O(L^2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+_NEG_INF = -1e30
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key: Array, d_in: int, d_out: int, cfg: ModelConfig,
+               bias: bool = False) -> Params:
+    w = jax.random.normal(key, (d_in, d_out), _pdtype(cfg)) / math.sqrt(d_in)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), _pdtype(cfg))
+    return p
+
+
+def dense_apply(p: Params, x: Array) -> Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(d: int, cfg: ModelConfig) -> Params:
+    return {"scale": jnp.ones((d,), _pdtype(cfg))}
+
+
+def rmsnorm_apply(p: Params, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions: Array, head_dim: int, theta: float) -> Array:
+    """positions (..., L) -> angles (..., L, head_dim//2) in f32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def _mrope_angles(positions: Array, head_dim: int, theta: float,
+                  sections: Tuple[int, ...]) -> Array:
+    """M-RoPE (Qwen2-VL): positions (B, 3, L) carry (temporal, h, w) ids;
+    the head_dim//2 frequency slots are split into per-axis sections."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang_all = positions.astype(jnp.float32)[..., None] * freqs  # (B,3,L,half)
+    parts = []
+    off = 0
+    for axis, sec in enumerate(sections):
+        parts.append(ang_all[:, axis, :, off:off + sec])
+        off += sec
+    return jnp.concatenate(parts, axis=-1)                       # (B, L, half)
+
+
+def apply_rope(x: Array, positions: Array, theta: float,
+               sections: Optional[Tuple[int, ...]] = None) -> Array:
+    """x (B, L, H, hd); positions (B, L) or (B, 3, L) for M-RoPE."""
+    hd = x.shape[-1]
+    if sections is not None:
+        ang = _mrope_angles(positions, hd, theta, sections)
+    else:
+        ang = _rope_angles(positions, hd, theta)
+    cos = jnp.cos(ang)[:, :, None, :]                            # (B, L, 1, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention_init(key: Array, cfg: ModelConfig) -> Params:
+    d, qd = cfg.d_model, cfg.n_heads * cfg.head_dim
+    kvd = cfg.n_kv_heads * cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, qd, cfg, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, kvd, cfg, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, kvd, cfg, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], qd, d, cfg),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(cfg.head_dim, cfg)
+        p["k_norm"] = rmsnorm_init(cfg.head_dim, cfg)
+    return p
+
+
+def _qkv(p: Params, x: Array, positions: Array, cfg: ModelConfig,
+         kind: str) -> Tuple[Array, Array, Array]:
+    B, L, _ = x.shape
+    q = dense_apply(p["wq"], x).reshape(B, L, cfg.n_heads, cfg.head_dim)
+    k = dense_apply(p["wk"], x).reshape(B, L, cfg.n_kv_heads, cfg.head_dim)
+    v = dense_apply(p["wv"], x).reshape(B, L, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q, cfg.rms_eps)
+        k = rmsnorm_apply(p["k_norm"], k, cfg.rms_eps)
+    theta = cfg.rope_theta_local if kind == "local" else cfg.rope_theta
+    q = apply_rope(q, positions, theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def _fit_chunk(chunk: int, length: int) -> int:
+    """Largest divisor of ``length`` that is <= chunk (static shapes)."""
+    chunk = min(chunk, length)
+    while length % chunk:
+        chunk -= 1
+    return chunk
+
+
+def _scores(q: Array, k: Array, softcap: float) -> Array:
+    """q (B, qc, KV, G, hd), k (B, kc, KV, hd) -> (B, KV, G, qc, kc) f32."""
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                   preferred_element_type=jnp.float32)
+    s = s / math.sqrt(q.shape[-1])
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def _attention_rect(q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
+                    cfg: ModelConfig, kv_chunk: int,
+                    q_chunk: int = 2048) -> Array:
+    """Online-softmax over KV chunks (full causal rectangle with masking),
+    processed one Q chunk at a time so the f32 accumulator is
+    (B, q_chunk, H, hd), never (B, Lq, H, hd).
+
+    q (B, Lq, H, hd); k, v (B, Lkv, KV, hd); q_pos (Lq,), k_pos (Lkv,).
+    Masked positions cost FLOPs (the rectangle is computed then masked) --
+    the exact-triangle variant is a Perf-iteration option, see DESIGN.md.
+    """
+    B, Lq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q_chunk = _fit_chunk(q_chunk, Lq)
+    nq = Lq // q_chunk
+    nk = k.shape[1] // kv_chunk
+    ks = k.reshape(B, nk, kv_chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kv_chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    kps = k_pos.reshape(nk, kv_chunk)
+
+    def per_q_chunk(args):
+        q_blk, qp = args                     # (B, qc, H, hd), (qc,)
+        qg = q_blk.reshape(B, q_chunk, KV, G, hd)
+
+        def body(carry, inp):
+            acc, m, l = carry
+            k_blk, v_blk, kp = inp
+            s = _scores(qg, k_blk, cfg.attn_logit_softcap)  # (B,KV,G,qc,kc)
+            mask = kp[None, :] <= qp[:, None]               # (qc, kc)
+            s = jnp.where(mask[None, None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v_blk.dtype),
+                            v_blk, preferred_element_type=jnp.float32)
+            acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, q_chunk, KV, G, hd), jnp.float32)
+        m0 = jnp.full((B, KV, G, q_chunk), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (ks, vs, kps))
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return out.reshape(B, q_chunk, H, hd).astype(q.dtype)
+
+    if nq == 1:
+        return per_q_chunk((q, q_pos))
+    qs = q.reshape(B, nq, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    qps = q_pos.reshape(nq, q_chunk)
+    outs = jax.lax.map(per_q_chunk, (qs, qps))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Lq, H, hd)
+
+
+def _attention_banded(q: Array, k: Array, v: Array, q_pos: Array,
+                      k_pos: Array, cfg: ModelConfig, q_chunk: int) -> Array:
+    """Sliding-window attention: each q chunk attends to a static-width band
+    [chunk_start - window, chunk_end). O(L * window) compute."""
+    B, L, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    w = cfg.window
+    q_chunk = min(q_chunk, L)
+    nq = L // q_chunk
+    # pad keys left by w so every band slice is in-bounds
+    kp = jnp.pad(k, ((0, 0), (w, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (w, 0), (0, 0), (0, 0)))
+    kpos_p = jnp.pad(k_pos + 1, (w, 0)) - 1   # padded slots get pos -1 (invalid)
+
+    qg = q.reshape(B, nq, q_chunk, KV, G, hd)
+    qpg = q_pos.reshape(nq, q_chunk)
+
+    def per_chunk(i, q_blk, qp):
+        start = i * q_chunk
+        k_band = jax.lax.dynamic_slice_in_dim(kp, start, w + q_chunk, axis=1)
+        v_band = jax.lax.dynamic_slice_in_dim(vp, start, w + q_chunk, axis=1)
+        kp_band = jax.lax.dynamic_slice_in_dim(kpos_p, start, w + q_chunk)
+        s = _scores(q_blk, k_band, cfg.attn_logit_softcap)  # (B,KV,G,qc,w+qc)
+        mask = ((kp_band[None, :] <= qp[:, None]) &
+                (kp_band[None, :] > qp[:, None] - w) &
+                (kp_band[None, :] >= 0))
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v_band.dtype), v_band,
+                        preferred_element_type=jnp.float32)
+        out = pv / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return out.reshape(B, q_chunk, H, hd).astype(q.dtype)
+
+    outs = jax.lax.map(
+        lambda args: per_chunk(*args),
+        (jnp.arange(nq), qg.transpose(1, 0, 2, 3, 4, 5), qpg))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, L, H, hd)
+
+
+def _attention_decode(q: Array, k_cache: Array, v_cache: Array,
+                      slot_pos: Array, cur_pos: Array, cfg: ModelConfig,
+                      kind: str) -> Array:
+    """Single-token decode against a cache. q (B, 1, H, hd);
+    k/v_cache (B, S, KV, hd); slot_pos (B, S) absolute position held by each
+    cache slot (-1 = empty); cur_pos (B,) per-sequence positions (slots may
+    be at different generation depths -- continuous batching)."""
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd)
+    s = _scores(qg, k_cache, cfg.attn_logit_softcap)  # (B,KV,G,1,S)
+    valid = (slot_pos >= 0) & (slot_pos <= cur_pos[:, None])
+    if kind == "local":
+        valid &= slot_pos > (cur_pos[:, None] - cfg.window)
+    s = jnp.where(valid[:, None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def _quant_kv(x: Array) -> Tuple[Array, Array]:
+    """int8 KV quantization, per (batch, slot, head) absmax scale."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequant_kv(q: Array, scale: Array, dtype) -> Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCacheSpec:
+    """Cache layout for one attention layer: ring buffer of ``size`` slots
+    (size == window for local layers, max_len for global). With
+    cfg.kv_cache_dtype == "int8" the K/V payloads are quantized (2x HBM
+    saving vs bf16) with per-(slot, head) f32 scales."""
+    size: int
+
+    def init(self, batch: int, cfg: ModelConfig) -> Params:
+        kvd = (batch, self.size, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.kv_cache_dtype == "int8":
+            sc = (batch, self.size, cfg.n_kv_heads)
+            return {
+                "k": jnp.zeros(kvd, jnp.int8),
+                "v": jnp.zeros(kvd, jnp.int8),
+                "k_scale": jnp.zeros(sc, jnp.float32),
+                "v_scale": jnp.zeros(sc, jnp.float32),
+                "pos": jnp.full((batch, self.size), -1, jnp.int32),
+            }
+        return {
+            "k": jnp.zeros(kvd, _dtype(cfg)),
+            "v": jnp.zeros(kvd, _dtype(cfg)),
+            "pos": jnp.full((batch, self.size), -1, jnp.int32),
+        }
+
+
+def attention_apply(
+    p: Params,
+    x: Array,
+    positions: Array,
+    cfg: ModelConfig,
+    kind: str,                      # "attn" | "local"
+    cache: Optional[Params] = None,
+    q_chunk: int = 2048,
+    kv_chunk: int = 4096,
+) -> Tuple[Array, Optional[Params]]:
+    """Modes: cache is None -> training/scoring full pass (returns y, None).
+    cache given & L > 1 -> prefill (fills cache). cache given & L == 1 ->
+    single-token decode (updates ring cache)."""
+    B, L, _ = x.shape
+    q, k, v = _qkv(p, x, positions, cfg, kind)
+
+    int8_cache = cfg.kv_cache_dtype == "int8"
+    if cache is not None and L == 1:
+        cur = positions[:, -1] if positions.ndim == 2 else positions[:, 0, -1]
+        S = cache["pos"].shape[1]
+        slot = cur % S                                           # (B,)
+        bidx = jnp.arange(B)
+        new_cache = {}
+        if int8_cache:
+            kq, ksc = _quant_kv(k[:, 0])
+            vq, vsc = _quant_kv(v[:, 0])
+            kc8 = cache["k"].at[bidx, slot].set(kq)
+            vc8 = cache["v"].at[bidx, slot].set(vq)
+            ks8 = cache["k_scale"].at[bidx, slot].set(ksc)
+            vs8 = cache["v_scale"].at[bidx, slot].set(vsc)
+            k_cache = _dequant_kv(kc8, ks8, k.dtype)
+            v_cache = _dequant_kv(vc8, vs8, v.dtype)
+            new_cache.update({"k": kc8, "v": vc8, "k_scale": ks8,
+                              "v_scale": vs8})
+        else:
+            k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
+            v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
+            new_cache.update({"k": k_cache, "v": v_cache})
+        pos_arr = cache["pos"].at[bidx, slot].set(cur.astype(jnp.int32))
+        y = _attention_decode(q, k_cache, v_cache, pos_arr, cur, cfg, kind)
+        new_cache["pos"] = pos_arr
+    else:
+        q_pos = positions[0] if positions.ndim == 2 else positions[0, 0]
+        kv_chunk = _fit_chunk(kv_chunk, L)
+        q_chunk = _fit_chunk(q_chunk, L)
+        if kind == "local":
+            y = _attention_banded(q, k, v, q_pos, q_pos, cfg, q_chunk)
+        elif cfg.attn_logit_softcap == 0.0:
+            # flash custom-VJP path: O(B L H hd) residuals, probability
+            # blocks recomputed in the backward (repro.models.flash)
+            from repro.models.flash import flash_attention
+            KV = k.shape[2]
+            qg = q.reshape(B, L, KV, cfg.n_heads // KV, cfg.head_dim)
+            y = flash_attention(qg, k, v, q_pos, q_pos, q_chunk,
+                                kv_chunk).reshape(B, L, cfg.n_heads,
+                                                  cfg.head_dim)
+        else:
+            y = _attention_rect(q, k, v, q_pos, q_pos, cfg, kv_chunk)
+        new_cache = None
+        if cache is not None:
+            S = cache["pos"].shape[1]
+            kw, vw = k, v
+            scales = {}
+            if int8_cache:
+                kw, ksc = _quant_kv(k)
+                vw, vsc = _quant_kv(v)
+            if S >= L:
+                kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], kw, 0, 1)
+                vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], vw, 0, 1)
+                if int8_cache:
+                    scales = {
+                        "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                            cache["k_scale"], ksc, 0, 1),
+                        "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                            cache["v_scale"], vsc, 0, 1),
+                    }
+                prow = jnp.broadcast_to(q_pos.astype(jnp.int32)[None], (B, L))
+                pc = jax.lax.dynamic_update_slice_in_dim(
+                    cache["pos"], prow, 0, 1)
+            else:  # ring: keep last S tokens, aligned so slot == pos % S
+                shift = (L - S) % S
+                kc = jnp.roll(kw[:, L - S:], shift, axis=1)
+                vc = jnp.roll(vw[:, L - S:], shift, axis=1)
+                if int8_cache:
+                    scales = {"k_scale": jnp.roll(ksc[:, L - S:], shift, 1),
+                              "v_scale": jnp.roll(vsc[:, L - S:], shift, 1)}
+                prow = jnp.roll(q_pos[L - S:].astype(jnp.int32), shift)
+                pc = jnp.broadcast_to(prow[None], (B, S))
+            new_cache = {"k": kc, "v": vc, "pos": pc, **scales}
+
+    y = y.reshape(B, L, cfg.n_heads * cfg.head_dim)
+    return dense_apply(p["wo"], y), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: Array, cfg: ModelConfig, d_ff: Optional[int] = None
+             ) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(ks[1], cfg.d_model, d_ff, cfg),
+        "w_out": dense_init(ks[2], d_ff, cfg.d_model, cfg),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = dense_init(ks[0], cfg.d_model, d_ff, cfg)
+    return p
+
+
+def mlp_apply(p: Params, x: Array, cfg: ModelConfig) -> Array:
+    act = jax.nn.silu if cfg.mlp_act == "silu" else jax.nn.gelu
+    if cfg.mlp_gated:
+        g = act(dense_apply(p["w_gate"], x))
+        return dense_apply(p["w_out"], g * dense_apply(p["w_in"], x))
+    return dense_apply(p["w_out"], act(dense_apply(p["w_in"], x)))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embedding_init(key: Array, cfg: ModelConfig) -> Params:
+    p = {"table": jax.random.normal(
+        key, (cfg.vocab_padded, cfg.d_model), _pdtype(cfg)) * 0.02}
+    return p
+
+
+def embedding_apply(p: Params, tokens: Array, cfg: ModelConfig) -> Array:
+    x = p["table"].astype(_dtype(cfg))[tokens]
+    if cfg.emb_scale_by_sqrt_dim:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def lm_head_apply(p: Params, x: Array, cfg: ModelConfig) -> Array:
+    """x (B, L, d) -> logits (B, L, vocab_padded) in f32."""
+    logits = jnp.einsum("bld,vd->blv", x, p["table"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    if cfg.final_logit_softcap > 0.0:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits

@@ -1,0 +1,195 @@
+"""Language model: embedding -> scan(periods of the block pattern) ->
+remainder blocks -> final norm -> (tied or untied) LM head.
+
+Execution structure (compile-time + memory critical):
+
+* outer ``lax.scan`` over ``n_layers // period`` periods (params stacked on
+  a leading dim) keeps HLO size flat in depth;
+* within a period, each maximal *run* of one block kind (gemma3: 5 local +
+  1 global; recurrentgemma: 2 rglru + 1 local) executes as an **inner
+  scan**, so only ONE layer's parameter gradients are materialized at a
+  time in the backward pass -- without this, a 6-layer period holds six
+  full unsharded f32 weight-gradient sets live simultaneously (~10 GB for
+  gemma3-27b) and blows the per-device HBM budget;
+* the ``n_layers % period`` remainder blocks run the same way (remat'd).
+
+Works in three modes:
+  * train/score:   forward(params, tokens, positions)          -> logits
+  * prefill:       forward(..., cache=init_cache(...))         -> logits, cache
+  * decode:        forward with L == 1 and a cache             -> logits, cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding
+from repro.models.blocks import block_apply, block_cache_init, block_init
+from repro.models.config import ModelConfig
+from repro.models.layers import (embedding_apply, embedding_init,
+                                 lm_head_apply, rmsnorm_apply, rmsnorm_init)
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def _stack_init(key: Array, cfg: ModelConfig, kind: str, *lead: int
+                ) -> Params:
+    """Init a block stacked over leading dims (n_periods and/or run_len)."""
+    if not lead:
+        return block_init(key, cfg, kind)
+    n = lead[0]
+    ks = jax.random.split(key, n)
+    return jax.vmap(lambda k: _stack_init(k, cfg, kind, *lead[1:]))(ks)
+
+
+def init_params(key: Array, cfg: ModelConfig) -> Params:
+    cfg.validate()
+    k_embed, k_head, k_layers = jax.random.split(key, 3)
+    params: Params = {
+        "embed": embedding_init(k_embed, cfg),
+        "final_norm": rmsnorm_init(cfg.d_model, cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embedding_init(k_head, cfg)
+
+    scan_params: Params = {}
+    if cfg.n_full_periods > 0:
+        for r, (kind, rlen) in enumerate(cfg.runs()):
+            kr = jax.random.fold_in(k_layers, r)
+            if rlen == 1:
+                scan_params[str(r)] = _stack_init(kr, cfg, kind,
+                                                  cfg.n_full_periods)
+            else:
+                scan_params[str(r)] = _stack_init(kr, cfg, kind,
+                                                  cfg.n_full_periods, rlen)
+    rem_params: Params = {}
+    for r, (kind, rlen) in enumerate(cfg.remainder_runs()):
+        kr = jax.random.fold_in(k_layers, 1000 + r)
+        rem_params[str(r)] = (_stack_init(kr, cfg, kind, rlen) if rlen > 1
+                              else block_init(kr, cfg, kind))
+    params["layers"] = {"scan": scan_params, "rem": rem_params}
+    return params
+
+
+def _stack_cache(one: Params, *lead: int) -> Params:
+    for n in reversed(lead):
+        one = jax.tree.map(
+            lambda a, n=n: jnp.broadcast_to(a[None],
+                                            (n,) + a.shape).copy(), one)
+    return one
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    scan_cache: Params = {}
+    if cfg.n_full_periods > 0:
+        for r, (kind, rlen) in enumerate(cfg.runs()):
+            one = block_cache_init(batch, max_len, cfg, kind)
+            lead = ((cfg.n_full_periods,) if rlen == 1
+                    else (cfg.n_full_periods, rlen))
+            scan_cache[str(r)] = _stack_cache(one, *lead)
+    rem_cache: Params = {}
+    for r, (kind, rlen) in enumerate(cfg.remainder_runs()):
+        one = block_cache_init(batch, max_len, cfg, kind)
+        rem_cache[str(r)] = _stack_cache(one, rlen) if rlen > 1 else one
+    return {"scan": scan_cache, "rem": rem_cache}
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    """Abstract (ShapeDtypeStruct) cache pytree -- used by the dry run."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def _run_apply(run_params: Params, x: Array, positions: Array,
+               cfg: ModelConfig, kind: str, rlen: int,
+               run_cache: Optional[Params], remat: str):
+    """Apply one run: a single block (rlen == 1) or an inner scan over the
+    run's stacked layers (one layer's grads live at a time)."""
+    if rlen == 1:
+        body = block_apply
+        if remat == "full":
+            body = jax.checkpoint(block_apply, prevent_cse=False,
+                                  static_argnums=(3, 4))
+        return body(run_params, x, positions, cfg, kind, run_cache)
+
+    def scan_body(carry, xs):
+        x, aux = carry
+        pp, pc = xs
+        x, nc, a = block_apply(pp, x, positions, cfg, kind, pc)
+        return (x, aux + a), nc
+
+    body = scan_body
+    if remat == "full":
+        body = jax.checkpoint(scan_body, prevent_cse=False)
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (run_params, run_cache))
+    return x, new_cache, aux
+
+
+def forward(
+    params: Params,
+    tokens: Array,
+    positions: Array,
+    cfg: ModelConfig,
+    cache: Optional[Params] = None,
+    remat: str = "none",             # "none" | "full"
+    head: bool = True,               # False: return final-norm hidden state
+) -> Tuple[Array, Optional[Params], Array]:
+    """Returns (logits (B, L, vocab_padded) f32, new_cache | None, aux).
+    With ``head=False`` the first element is the normalized hidden state
+    (B, L, d) instead (the chunked-CE loss applies the head itself)."""
+    x = embedding_apply(params["embed"], tokens, cfg)
+    x = sharding.constrain(x, "batch", "model", None)   # sequence-parallel
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: Params = {"scan": {}, "rem": {}}
+    runs = cfg.runs()
+
+    if cfg.n_full_periods > 0:
+        def period_body(carry, xs):
+            x, aux = carry
+            pp, pc = xs
+            ncs: Params = {}
+            for r, (kind, rlen) in enumerate(runs):
+                c_r = None if pc is None else pc.get(str(r))
+                x, nc, a = _run_apply(pp[str(r)], x, positions, cfg, kind,
+                                      rlen, c_r, remat)
+                ncs[str(r)] = nc
+                aux = aux + a
+            return (x, aux), ncs
+
+        scan_cache_in = None if cache is None else cache["scan"]
+        (x, aux_total), scan_cache_out = jax.lax.scan(
+            period_body, (x, aux_total),
+            (params["layers"]["scan"], scan_cache_in))
+        new_cache["scan"] = scan_cache_out
+
+    for r, (kind, rlen) in enumerate(cfg.remainder_runs()):
+        c_r = None if cache is None else cache["rem"].get(str(r))
+        x, nc, a = _run_apply(params["layers"]["rem"][str(r)], x, positions,
+                              cfg, kind, rlen, c_r, remat)
+        new_cache["rem"][str(r)] = nc
+        aux_total = aux_total + a
+
+    x = rmsnorm_apply(params["final_norm"], x, cfg.rms_eps)
+    if not head:
+        return x, (new_cache if cache is not None else None), aux_total
+    head_p = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = lm_head_apply(head_p, x, cfg)
+    logits = sharding.constrain(logits, "batch", None, "model")
+    return logits, (new_cache if cache is not None else None), aux_total
+
+
+def make_positions(tokens: Array, cfg: ModelConfig,
+                   offset: Array | int = 0) -> Array:
+    """Default position ids. (B, L) for standard RoPE; (B, 3, L) with
+    identical t/h/w ids for M-RoPE text-only inputs (the VLM frontend stub
+    supplies real 3-axis ids for image patches)."""
+    B, L = tokens.shape
+    pos = jnp.arange(L, dtype=jnp.int32)[None] + offset
+    pos = jnp.broadcast_to(pos, (B, L))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[:, None, :], (B, 3, L))
+    return pos

@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Temporal mixing: y = W_out( GeLU(W_g x) * RG-LRU(conv1d(W_x x)) ), where the
+RG-LRU is the gated diagonal linear recurrence
+
+    r_t = sigmoid(W_a xi_t + b_a)          recurrence gate
+    i_t = sigmoid(W_i xi_t + b_i)          input gate
+    log a_t = -c * softplus(Lambda) * r_t  (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * xi_t)
+
+Training uses an associative scan over the sequence (the recurrence is
+diagonal, so (a, b) pairs compose associatively); decode is a single O(1)
+state update -- which is why recurrentgemma runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_apply, dense_init
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+_C = 8.0
+
+
+def rglru_init(key: Array, cfg: ModelConfig) -> Params:
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    pdt = jnp.dtype(cfg.param_dtype)
+    # Lambda init so that a^c spans ~(0.9, 0.999) as in Griffin
+    u = jax.random.uniform(ks[0], (w,), pdt, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / (2.0 * _C)) - 1.0)
+    return {
+        "w_gate": dense_init(ks[1], d, w, cfg),      # GeLU branch
+        "w_x": dense_init(ks[2], d, w, cfg),         # recurrent branch
+        "conv_w": jax.random.normal(ks[3], (cfg.conv_width, w), pdt)
+        / math.sqrt(cfg.conv_width),
+        "conv_b": jnp.zeros((w,), pdt),
+        "w_a": dense_init(ks[4], w, w, cfg),
+        "w_i": dense_init(ks[5], w, w, cfg),
+        "Lambda": lam,
+        "w_out": dense_init(jax.random.fold_in(key, 7), w, d, cfg),
+    }
+
+
+def _gates(p: Params, xi: Array) -> Tuple[Array, Array]:
+    """Returns (log_a (B,L,W) f32, gated_input (B,L,W) f32)."""
+    xf = xi.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense_apply(p["w_a"], xi).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense_apply(p["w_i"], xi).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["Lambda"].astype(jnp.float32)) * r
+    a2 = jnp.exp(2.0 * log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * xf)
+    return log_a, b
+
+
+def _conv_causal(x: Array, w: Array, b: Array,
+                 state: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Depthwise causal conv; returns (y, new_state (B, W-1, C))."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = jnp.zeros_like(x)
+    for i in range(W):
+        y = y + xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+    return y + b.astype(x.dtype), xp[:, -(W - 1):]
+
+
+def rglru_apply(p: Params, u: Array, cfg: ModelConfig,
+                cache: Optional[Params] = None
+                ) -> Tuple[Array, Optional[Params]]:
+    """u (B, L, d). Cache = {"conv": (B, W-1, lru), "h": (B, lru) f32}."""
+    B_, L, _ = u.shape
+    gate = jax.nn.gelu(dense_apply(p["w_gate"], u))
+    xi = dense_apply(p["w_x"], u)
+
+    conv_state = cache["conv"] if cache is not None else None
+    xi, new_conv = _conv_causal(xi, p["conv_w"], p["conv_b"], conv_state)
+
+    log_a, b = _gates(p, xi)
+
+    if cache is not None and L == 1:
+        h = cache["h"] * jnp.exp(log_a[:, 0]) + b[:, 0]          # (B, W)
+        y = h[:, None, :]
+        new_cache = {"conv": new_conv, "h": h}
+    else:
+        h0 = cache["h"] if cache is not None else jnp.zeros(
+            (B_, cfg.lru_width), jnp.float32)
+        # prepend h0 as a pseudo-step: h_t = a_t h_{t-1} + b_t
+        a_seq = jnp.exp(log_a)
+        a_all = jnp.concatenate([jnp.ones((B_, 1, cfg.lru_width)), a_seq], 1)
+        b_all = jnp.concatenate([h0[:, None, :], b], 1)
+
+        def combine(x, y):
+            a1, b1 = x
+            a2, b2 = y
+            return a1 * a2, a2 * b1 + b2
+
+        _, hs = jax.lax.associative_scan(combine, (a_all, b_all), axis=1)
+        y = hs[:, 1:]                                            # (B, L, W)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"conv": new_conv, "h": hs[:, -1]}
+
+    out = dense_apply(p["w_out"], (y.astype(u.dtype) * gate))
+    return out, new_cache
+
+
+def rglru_cache_init(batch: int, cfg: ModelConfig) -> Params:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width),
+                          jnp.dtype(cfg.dtype)),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }

@@ -1,0 +1,168 @@
+"""Mesh-aware sharding rules.
+
+``set_mesh(mesh)`` installs a mesh for the duration of a ``with`` block;
+``constrain(x, *dims)`` applies ``with_sharding_constraint`` using *logical*
+dim names resolved against that mesh (no-op when no mesh is installed, so
+model code runs unchanged on a single device).
+
+Logical dims:
+    "batch"  -> ("pod", "data") when the mesh has a pod axis else ("data",)
+    "data"   -> FSDP/ZeRO axis
+    "model"  -> tensor/expert-parallel axis
+    None     -> replicated
+
+Layouts (the beyond-paper §Perf lever):
+    "tp"   (default) -- Megatron-style: TP+SP over "model", FSDP over
+           "data", batch over (pod, data).
+    "fsdp" -- ZeRO-3 only: no tensor parallelism; batch shards over EVERY
+           axis (pod, data, model) and parameters FSDP over (data, model)
+           jointly. No activation collectives at all; parameters stream
+           layer-by-layer.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def _current_layout() -> str:
+    return getattr(_state, "layout", "tp")
+
+
+@contextlib.contextmanager
+def set_mesh(mesh: Optional[Mesh], layout: str = "tp"):
+    prev = _current_mesh()
+    prev_layout = _current_layout()
+    _state.mesh = mesh
+    _state.layout = layout
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+        _state.layout = prev_layout
+
+
+def resolve(dim: Optional[str], mesh: Mesh, layout: Optional[str] = None):
+    layout = layout or _current_layout()
+    if dim is None:
+        return None
+    if dim == "batch":
+        axes = ("pod",) if "pod" in mesh.axis_names else ()
+        axes += ("data",)
+        if layout == "fsdp":
+            axes += ("model",)
+        return axes
+    if layout == "fsdp":
+        if dim == "model":
+            return None                    # no tensor parallelism
+        if dim == "data":
+            return ("data", "model")       # ZeRO over both axes
+    return dim
+
+
+def spec(*dims: Optional[str], mesh: Optional[Mesh] = None) -> P:
+    mesh = mesh or _current_mesh()
+    if mesh is None:
+        return P()
+    return P(*[resolve(d, mesh) for d in dims])
+
+
+def constrain(x: jax.Array, *dims: Optional[str]) -> jax.Array:
+    """Sharding constraint by logical dim names; no-op without a mesh, and
+    skips axes whose size does not divide the mesh axis."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    resolved = []
+    for d, size in zip(dims, x.shape):
+        r = resolve(d, mesh)
+        names = (r,) if isinstance(r, str) else (r or ())
+        total = 1
+        for nm in names:
+            total *= mesh.shape[nm]
+        resolved.append(r if total > 0 and size % max(total, 1) == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))
+
+
+def named_sharding(mesh: Mesh, *dims: Optional[str]) -> NamedSharding:
+    return NamedSharding(mesh, P(*[resolve(d, mesh) for d in dims]))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules
+# ---------------------------------------------------------------------------
+
+def _rule_for(path: Tuple[str, ...], shape: Tuple[int, ...]) -> Tuple:
+    """Map a param path to logical dims. FSDP ("data") on one large dim, TP
+    ("model") on the head/ff/vocab/expert dim."""
+    name = "/".join(path)
+    nd = len(shape)
+
+    def lead(*dims):
+        """Pad with None for stacked scan dims (leading extras)."""
+        return (None,) * (nd - len(dims)) + tuple(dims)
+
+    if name.endswith("/b") or "norm" in name or name.endswith("scale"):
+        return (None,) * nd
+    if "embed/table" in name or "lm_head/table" in name:
+        return lead("model", "data")                     # vocab TP, d FSDP
+    if "experts" in name:
+        # (E, d, ff) or (E, ff, d)
+        if "w_out" in name:
+            return lead("model", None, "data")           # EP on E
+        return lead("model", "data", None)
+    if "router" in name:
+        return lead("data", None)
+    if any(s in name for s in ("wq/w", "wk/w", "wv/w", "w_gate/w", "w_in/w",
+                               "in_proj/w", "w_x/w", "w_a/w", "w_i/w")):
+        return lead("data", "model")                     # col-parallel
+    if any(s in name for s in ("wo/w", "w_out/w", "out_proj/w")):
+        return lead("model", "data")                     # row-parallel
+    if "conv_w" in name:
+        return lead(None, "model")
+    if name.endswith("Lambda") or "A_log" in name or name.endswith("/D") \
+            or "dt_bias" in name:
+        return lead("model") if nd >= 1 else ()
+    if nd >= 2:
+        return lead("data", None)
+    return (None,) * nd
+
+
+def param_specs(params: Any, mesh: Mesh, layout: Optional[str] = None):
+    """PartitionSpec pytree matching ``params``; dims that do not divide the
+    mesh axis fall back to replicated."""
+    layout = layout or _current_layout()
+
+    def one(path, leaf):
+        names = tuple(
+            getattr(k, "key", getattr(k, "name", str(k))) for k in path)
+        dims = _rule_for(names, leaf.shape)
+        fixed = []
+        for d, size in zip(dims, leaf.shape):
+            r = resolve(d, mesh, layout)
+            ax = (r,) if isinstance(r, str) else (r or ())
+            total = 1
+            for nm in ax:
+                total *= mesh.shape[nm]
+            fixed.append(d if size % max(total, 1) == 0 else None)
+        return P(*[resolve(d, mesh, layout) for d in fixed])
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params: Any, mesh: Mesh, layout: Optional[str] = None):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh, layout),
+        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,200 @@
+"""Mamba-2 SSD (state-space duality) mixer, chunked for the MXU.
+
+The chunked formulation (Dao & Gu 2024, Sec. 6) splits the sequence into
+chunks: intra-chunk interactions are a masked (chunk x chunk) matmul -- MXU
+friendly -- and inter-chunk interactions flow through a tiny (H, P, N) state
+carried by a scan over chunks. Decode maintains (conv_state, ssm_state) and
+costs O(1) per token -- this is why mamba2 runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_apply, dense_init, rmsnorm_apply
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def _conv_dim(cfg: ModelConfig) -> int:
+    return cfg.ssm_dinner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def ssd_init(key: Array, cfg: ModelConfig) -> Params:
+    d, din, h = cfg.d_model, cfg.ssm_dinner, cfg.ssm_nheads
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    pdt = jnp.dtype(cfg.param_dtype)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * din + 2 * gn + h, cfg),
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_width, _conv_dim(cfg)),
+                                    pdt) / math.sqrt(cfg.conv_width),
+        "conv_b": jnp.zeros((_conv_dim(cfg),), pdt),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=pdt)),
+        "D": jnp.ones((h,), pdt),
+        "dt_bias": jnp.zeros((h,), pdt),
+        "norm_scale": jnp.ones((din,), pdt),
+        "out_proj": dense_init(ks[2], din, d, cfg),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv via shifted adds: x (B, L, C), w (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    y = jnp.zeros_like(x)
+    for i in range(W):
+        y = y + xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+    return y + b.astype(x.dtype)
+
+
+def _segsum(x: Array) -> Array:
+    """x (..., c) -> (..., c, c): out[i, j] = sum_{j < k <= i} x[k], -inf
+    above the diagonal."""
+    c = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array,
+                chunk: int, initial_state: Optional[Array] = None
+                ) -> Tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    x (b, l, h, p); dt (b, l, h) (post-softplus); A (h,) negative;
+    B, C (b, l, h, n) (already expanded from groups to heads).
+    Returns (y (b, l, h, p), final_state (b, h, p, n)). All f32.
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    nc = l // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, h, n)
+    Cc = C.reshape(b, nc, chunk, h, n)
+
+    x_dt = xc * dtc[..., None]
+    dA = dtc * A                                     # (b, nc, c, h)
+    dA_h = dA.transpose(0, 1, 3, 2)                  # (b, nc, h, c)
+    dA_cs = jnp.cumsum(dA_h, axis=-1)                # (b, nc, h, c)
+
+    # intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(dA_h))                       # (b, nc, h, c, c)
+    CB = jnp.einsum("bzchn,bzshn->bzhcs", Cc, Bc)
+    y_diag = jnp.einsum("bzhcs,bzshp->bzchp", CB * L, x_dt)
+
+    # chunk summaries -> inter-chunk recurrence
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)  # (b, nc, h, c)
+    states = jnp.einsum("bzchn,bzhc,bzchp->bzhpn", Bc, decay_states, x_dt)
+    chunk_decay = jnp.exp(dA_cs[..., -1])            # (b, nc, h)
+
+    s0 = (jnp.zeros((b, h, p, n), x.dtype) if initial_state is None
+          else initial_state)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry                            # emit state *entering* chunk
+
+    final, prev = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    prev = prev.transpose(1, 0, 2, 3, 4)             # (b, nc, h, p, n)
+
+    decay_out = jnp.exp(dA_cs)                       # (b, nc, h, c)
+    y_off = jnp.einsum("bzchn,bzhpn,bzhc->bzchp", Cc, prev, decay_out)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt: Array):
+    din, h = cfg.ssm_dinner, cfg.ssm_nheads
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    z, xBC, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * gn], axis=-1)
+    return z, xBC, dt
+
+
+def _expand_groups(v: Array, cfg: ModelConfig) -> Array:
+    """(..., G*N) -> (..., H, N): heads within a group share B/C."""
+    g, n, h = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    v = v.reshape(v.shape[:-1] + (g, n))
+    return jnp.repeat(v, h // g, axis=-2)
+
+
+def ssd_apply(p: Params, u: Array, cfg: ModelConfig,
+              cache: Optional[Params] = None
+              ) -> Tuple[Array, Optional[Params]]:
+    """Full SSD block: in_proj -> causal conv -> SSD -> gated norm ->
+    out_proj. u (B, L, d). With a cache and L == 1, runs the O(1) decode
+    step; with a cache and L > 1, runs chunked prefill and writes the final
+    (conv, ssm) states into the cache."""
+    B_, L, _ = u.shape
+    h, pdim, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    din = cfg.ssm_dinner
+    zxbcdt = dense_apply(p["in_proj"], u)
+    z, xBC, dt_raw = _split_in_proj(cfg, zxbcdt)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if cache is not None and L == 1:
+        window = jnp.concatenate([cache["conv"], xBC], axis=1)  # (B, W, C)
+        conv_out = (jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                               p["conv_w"].astype(jnp.float32))
+                    + p["conv_b"].astype(jnp.float32))
+        xBC_t = jax.nn.silu(conv_out)[:, None, :]               # (B, 1, C)
+        new_conv = window[:, 1:]
+        x, Bv, Cv = jnp.split(
+            xBC_t, [din, din + cfg.ssm_ngroups * n], axis=-1)
+        x = x.reshape(B_, 1, h, pdim).astype(jnp.float32)
+        Bh = _expand_groups(Bv, cfg).astype(jnp.float32)        # (B,1,H,N)
+        Ch = _expand_groups(Cv, cfg).astype(jnp.float32)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))  # (B,1,H)
+        dA = jnp.exp(dt[..., 0, :] * A)                           # (B,H)
+        x_dt = x[:, 0] * dt[:, 0, :, None]                        # (B,H,P)
+        new_state = (cache["ssm"] * dA[..., None, None]
+                     + jnp.einsum("bhn,bhp->bhpn", Bh[:, 0], x_dt))
+        y = jnp.einsum("bhn,bhpn->bhp", Ch[:, 0], new_state)[:, None]
+        y = y + p["D"].astype(jnp.float32)[None, None, :, None] * x
+        new_cache = {"conv": new_conv, "ssm": new_state}
+    else:
+        conv = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+        x, Bv, Cv = jnp.split(conv, [din, din + cfg.ssm_ngroups * n], axis=-1)
+        x = x.reshape(B_, L, h, pdim).astype(jnp.float32)
+        Bh = _expand_groups(Bv, cfg).astype(jnp.float32)
+        Ch = _expand_groups(Cv, cfg).astype(jnp.float32)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+        chunk = min(cfg.ssm_chunk, L)
+        while L % chunk:
+            chunk -= 1
+        y, final_state = ssd_chunked(x * 1.0, dt, A, Bh, Ch, chunk)
+        y = y + p["D"].astype(jnp.float32)[None, None, :, None] * x
+        new_cache = None
+        if cache is not None:
+            W = cache["conv"].shape[1]
+            tail = jnp.pad(xBC, ((0, 0), (max(W - L, 0), 0), (0, 0)))[:, -W:]
+            new_cache = {"conv": tail, "ssm": final_state}
+
+    y = y.reshape(B_, L, din)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm_apply({"scale": p["norm_scale"]}, y.astype(u.dtype),
+                      cfg.rms_eps)
+    return dense_apply(p["out_proj"], y), new_cache
+
+
+def ssd_cache_init(batch: int, cfg: ModelConfig) -> Params:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, _conv_dim(cfg)),
+                          jnp.dtype(cfg.dtype)),
+        "ssm": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim,
+                          cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,4 @@
+from repro.optim import adamw, compression, schedule
+from repro.optim.adamw import AdamWConfig
+
+__all__ = ["adamw", "compression", "schedule", "AdamWConfig"]

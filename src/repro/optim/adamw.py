@@ -1,0 +1,109 @@
+"""AdamW from scratch (no optax): decoupled weight decay, bias-corrected
+moments, global-norm clipping. Optimizer state inherits the parameter
+sharding (FSDP over ``data``), i.e. ZeRO-style sharded optimizer state."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    # params whose path contains any of these substrings skip weight decay
+    no_decay: Tuple[str, ...] = ("scale", "norm", "b", "Lambda", "A_log",
+                                 "D", "dt_bias", "pos")
+
+
+def init(params: PyTree, keep_master: bool = False) -> Dict[str, PyTree]:
+    """``keep_master=True``: mixed-precision training -- compute params are
+    bf16 and the optimizer carries the f32 master copy (+ f32 moments)."""
+    zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+    state = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if keep_master:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree: PyTree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float
+                        ) -> Tuple[PyTree, Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def _decay_mask(params: PyTree, cfg: AdamWConfig) -> PyTree:
+    def one(path, leaf):
+        name = "/".join(
+            getattr(k, "key", getattr(k, "name", str(k))) for k in path)
+        skip = any(s in name.split("/")[-1] or s in name
+                   for s in cfg.no_decay) or leaf.ndim <= 1
+        return 0.0 if skip else 1.0
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def update(
+    grads: PyTree,
+    state: Dict[str, PyTree],
+    params: PyTree,
+    lr: Array,
+    cfg: AdamWConfig = AdamWConfig(),
+) -> Tuple[PyTree, Dict[str, PyTree], Dict[str, Array]]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.grad_clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    decay = _decay_mask(params, cfg)
+    masters = state.get("master", params)
+
+    def upd(g, m, v, p, dm):
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        pf = p.astype(jnp.float32)
+        step_vec = mhat / (jnp.sqrt(vhat) + cfg.eps) \
+            + cfg.weight_decay * dm * pf
+        return pf - lr * step_vec, m, v
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], masters, decay)
+    new_master = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda nm, p: nm.astype(p.dtype),
+                              new_master, params)
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if "master" in state:
+        new_state["master"] = new_master
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

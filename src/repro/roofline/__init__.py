@@ -1,0 +1,4 @@
+from repro.roofline import hlo, report
+from repro.roofline.report import RooflineReport, build_report
+
+__all__ = ["hlo", "report", "RooflineReport", "build_report"]

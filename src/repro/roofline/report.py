@@ -1,0 +1,166 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+Hardware model (TPU v5e-class, per chip):
+    peak bf16 compute   197 TFLOP/s
+    HBM bandwidth       819 GB/s
+    ICI link bandwidth  ~50 GB/s  (DCN between pods ~25 GB/s assumed)
+
+    compute term   = dot_FLOPs_per_device / 197e12
+    memory term    = HBM_bytes_per_device / 819e9
+    collective term = ICI link bytes / 50e9 + DCN bytes / 25e9
+
+FLOPs and collective bytes come from the loop-aware HLO parse
+(repro.roofline.hlo); the memory term uses min(parsed result-bytes upper
+bound, analytic traffic) -- parsed bytes ignore fusion VMEM residency, the
+analytic term is the param+activation traffic floor; both are reported.
+
+MODEL_FLOPS = 6 * N(active) * tokens for training, 2 * N(active) * tokens
+for inference; the ratio MODEL_FLOPS / HLO_FLOPs shows how much compiled
+compute is "useful" (remat and masked-attention waste push it down).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional
+
+from repro.models.config import ModelConfig
+from repro.roofline import hlo as hlo_mod
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 25e9
+HBM_PER_CHIP = 16e9
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    # parsed, per device
+    hlo_dot_flops: float
+    hlo_elementwise_flops: float
+    hlo_result_bytes: float
+    ici_bytes: float
+    dcn_bytes: float
+    collective_counts: Dict[str, float]
+    collective_bytes_by_kind: Dict[str, float]
+    # XLA-reported
+    xla_flops: float
+    xla_bytes: float
+    peak_memory_bytes: float
+    # analytic
+    model_flops_total: float
+    analytic_hbm_bytes: float
+    # terms (seconds)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_flop_ratio: float = 0.0
+    roofline_fraction: float = 0.0
+
+    def finalize(self) -> "RooflineReport":
+        self.compute_s = self.hlo_dot_flops / PEAK_FLOPS
+        mem_bytes = min(self.hlo_result_bytes, self.analytic_hbm_bytes) \
+            if self.analytic_hbm_bytes > 0 else self.hlo_result_bytes
+        self.memory_s = mem_bytes / HBM_BW
+        self.collective_s = self.ici_bytes / ICI_BW + self.dcn_bytes / DCN_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        per_dev_model = self.model_flops_total / max(self.n_devices, 1)
+        self.useful_flop_ratio = (per_dev_model
+                                  / max(self.hlo_dot_flops, 1.0))
+        # fraction of the compute roofline the dominant-term-limited step
+        # achieves: useful flops / (peak * step_time_lower_bound)
+        step_t = max(terms.values())
+        self.roofline_fraction = (per_dev_model / PEAK_FLOPS) / max(step_t,
+                                                                    1e-30)
+        return self
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    def row(self) -> str:
+        return (f"{self.arch},{self.shape},{self.mesh},"
+                f"{self.compute_s:.4e},{self.memory_s:.4e},"
+                f"{self.collective_s:.4e},{self.bottleneck},"
+                f"{self.useful_flop_ratio:.3f},{self.roofline_fraction:.3f}")
+
+
+def model_flops(cfg: ModelConfig, kind: str, seq_len: int,
+                global_batch: int) -> float:
+    """6*N*D (train) / 2*N*D (inference) with N = active params."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = seq_len * global_batch
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = seq_len * global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * global_batch
+
+
+def analytic_hbm_bytes(cfg: ModelConfig, kind: str, seq_len: int,
+                       global_batch: int, n_devices: int,
+                       microbatches: int = 1) -> float:
+    """Per-device HBM traffic floor: parameters read (+ optimizer state
+    read/write for training) once per step plus KV/state cache traffic for
+    decode. Activations are assumed VMEM/fusion resident at the floor."""
+    n = cfg.param_count()
+    if kind == "train":
+        # fwd reads params (bf16 cast) per microbatch; grads + adam m,v f32
+        param_traffic = (2.0 * n * microbatches      # fwd+bwd reads, bf16
+                         + 4.0 * n * 4               # grad w + m/v rw f32
+                         )
+        return param_traffic / n_devices
+    if kind == "prefill":
+        return 2.0 * n / n_devices
+    # decode: params once + full KV/state cache read per token
+    cache = 0.0
+    kinds = (list(cfg.pattern) * cfg.n_full_periods
+             + list(cfg.remainder_kinds))
+    for k in kinds:
+        if k == "attn":
+            cache += (2 * global_batch * seq_len * cfg.n_kv_heads
+                      * cfg.head_dim * 2)
+        elif k == "local":
+            cache += (2 * global_batch * min(cfg.window, seq_len)
+                      * cfg.n_kv_heads * cfg.head_dim * 2)
+        elif k == "ssd":
+            cache += (global_batch * cfg.ssm_nheads * cfg.ssm_headdim
+                      * cfg.ssm_state * 4)
+        elif k == "rglru":
+            cache += global_batch * cfg.lru_width * 4
+    return (2.0 * cfg.active_param_count() + cache) / n_devices
+
+
+def build_report(arch: str, shape_name: str, mesh_name: str, cfg: ModelConfig,
+                 kind: str, seq_len: int, global_batch: int, n_devices: int,
+                 hlo_text: str, xla_cost: Optional[Dict],
+                 peak_memory: float, pod_block: Optional[int],
+                 microbatches: int = 1) -> RooflineReport:
+    ana = hlo_mod.analyze(hlo_text, pod_block=pod_block)
+    rep = RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, n_devices=n_devices,
+        hlo_dot_flops=ana.dot_flops,
+        hlo_elementwise_flops=ana.elementwise_flops,
+        hlo_result_bytes=ana.result_bytes,
+        ici_bytes=ana.ici_collective_bytes,
+        dcn_bytes=ana.dcn_collective_bytes,
+        collective_counts=ana.collective_counts,
+        collective_bytes_by_kind=ana.collective_bytes_by_kind,
+        xla_flops=float((xla_cost or {}).get("flops", 0.0)),
+        xla_bytes=float((xla_cost or {}).get("bytes accessed", 0.0)),
+        peak_memory_bytes=peak_memory,
+        model_flops_total=model_flops(cfg, kind, seq_len, global_batch),
+        analytic_hbm_bytes=analytic_hbm_bytes(cfg, kind, seq_len,
+                                              global_batch, n_devices,
+                                              microbatches),
+    )
+    return rep.finalize()

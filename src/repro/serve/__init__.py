@@ -1,0 +1,3 @@
+from repro.serve.engine import Engine, Request, generate, make_serve_steps
+
+__all__ = ["Engine", "Request", "generate", "make_serve_steps"]

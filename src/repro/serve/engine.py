@@ -1,0 +1,177 @@
+"""Serving: prefill + decode steps and a slot-based batched engine.
+
+``make_serve_steps(cfg, batch, max_len)`` builds the two jit-able pure
+functions the dry run lowers:
+
+  * ``prefill_step(params, tokens)            -> (last_logits, cache)``
+  * ``decode_step(params, token, pos, cache)  -> (logits, cache)``
+
+``Engine`` adds continuous-batching-lite on top: a fixed number of slots,
+each with its own sequence; finished sequences free their slot for the next
+request. Single-host demo quality -- the production serving story is the
+decode_step sharded over the mesh (KV cache length-sharded over ``model``,
+batch over ``data``; see DESIGN.md Sec. 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import forward, init_cache, make_positions
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def make_serve_steps(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, tokens):
+        B, L = tokens.shape
+        cache = init_cache(cfg, B, max_len)
+        pos = make_positions(tokens, cfg)
+        logits, cache, _ = forward(params, tokens, pos, cfg, cache=cache)
+        return logits[:, -1], cache
+
+    def decode_step(params, token, pos_scalar, cache):
+        """token (B, 1); pos_scalar () current position of the new token."""
+        pos = make_positions(token, cfg, offset=pos_scalar)
+        logits, cache, _ = forward(params, token, pos, cfg, cache=cache)
+        return logits[:, 0], cache
+
+    return prefill_step, decode_step
+
+
+def sample_token(key: Array, logits: Array, temperature: float = 0.0,
+                 vocab_size: Optional[int] = None) -> Array:
+    if vocab_size is not None and logits.shape[-1] != vocab_size:
+        logits = jnp.where(jnp.arange(logits.shape[-1]) < vocab_size,
+                           logits, -1e30)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+def generate(
+    params,
+    cfg: ModelConfig,
+    prompt: Array,               # (B, Lp)
+    n_new: int,
+    temperature: float = 0.0,
+    key: Optional[Array] = None,
+) -> Array:
+    """Greedy/temperature generation; returns (B, Lp + n_new)."""
+    B, Lp = prompt.shape
+    max_len = Lp + n_new
+    prefill_step, decode_step = make_serve_steps(cfg, max_len)
+    prefill = jax.jit(prefill_step)
+    decode = jax.jit(decode_step)
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    logits, cache = prefill(params, prompt)
+    toks = [prompt]
+    tok = sample_token(key, logits, temperature, cfg.vocab_size)[:, None]
+    for t in range(n_new - 1):
+        toks.append(tok)
+        key, kt = jax.random.split(key)
+        logits, cache = decode(params, tok, jnp.asarray(Lp + t), cache)
+        tok = sample_token(kt, logits, temperature, cfg.vocab_size)[:, None]
+    toks.append(tok)
+    return jnp.concatenate(toks, axis=1)
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray
+    max_new: int
+    out: Optional[np.ndarray] = None
+
+
+class Engine:
+    """Slot-based batched decoding over a shared jit'd decode step.
+
+    All slots decode in lockstep (one jit call per step for the whole batch);
+    each slot tracks its own absolute position via per-slot position ids.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, n_slots: int = 4,
+                 max_len: int = 512):
+        self.params, self.cfg = params, cfg
+        self.n_slots, self.max_len = n_slots, max_len
+        self.cache = init_cache(cfg, n_slots, max_len)
+        self.positions = np.zeros(n_slots, np.int64)
+        self.active: List[Optional[Request]] = [None] * n_slots
+        self.tokens = np.zeros((n_slots, 1), np.int32)
+        self._decode = jax.jit(self._decode_fn)
+        self._prefill_one = jax.jit(self._prefill_fn)
+
+    def _decode_fn(self, params, token, positions, cache):
+        # per-slot positions: (B,) -> (B, 1) position ids
+        B = token.shape[0]
+        pos = positions.astype(jnp.int32)[:, None]
+        if self.cfg.mrope_sections is not None:
+            pos = jnp.broadcast_to(pos[:, None, :], (B, 3, 1))
+        logits, cache, _ = forward(params, token, pos, self.cfg, cache=cache)
+        return logits[:, 0], cache
+
+    def _prefill_fn(self, params, tokens):
+        # single-request prefill into a fresh single-slot cache
+        cache = init_cache(self.cfg, 1, self.max_len)
+        pos = make_positions(tokens, self.cfg)
+        logits, cache, _ = forward(params, tokens, pos, self.cfg, cache=cache)
+        return logits[:, -1], cache
+
+    @staticmethod
+    def _merge_slot(full, one, s):
+        """Write a 1-sequence cache leaf into slot s of the batched cache.
+        The batch axis is wherever the two shapes differ (scan-stacked
+        leaves carry a leading period-count dim)."""
+        axis = 0
+        for i, (a, b) in enumerate(zip(full.shape, one.shape)):
+            if a != b:
+                axis = i
+                break
+        idx = [slice(None)] * full.ndim
+        idx[axis] = slice(s, s + 1)
+        return full.at[tuple(idx)].set(one)
+
+    def submit(self, req: Request) -> bool:
+        for s in range(self.n_slots):
+            if self.active[s] is None:
+                logits, c1 = self._prefill_one(
+                    self.params, jnp.asarray(req.prompt[None]))
+                self.cache = jax.tree.map(
+                    lambda full, one: self._merge_slot(full, one, s),
+                    self.cache, c1)
+                self.active[s] = req
+                req.out = req.prompt.copy()
+                self.tokens[s, 0] = int(jnp.argmax(logits[0]))
+                self.positions[s] = len(req.prompt)
+                return True
+        return False
+
+    def step(self):
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(self.tokens),
+            jnp.asarray(self.positions), self.cache)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out = np.concatenate([req.out, self.tokens[s]])
+            self.tokens[s, 0] = nxt[s]
+            self.positions[s] += 1
+            if len(req.out) - len(req.prompt) >= req.max_new:
+                self.active[s] = None
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        pending = list(requests)
+        done: List[Request] = []
+        while pending or any(r is not None for r in self.active):
+            while pending and self.submit(pending[0]):
+                done.append(pending.pop(0))
+            self.step()
+        return done

@@ -1,0 +1,6 @@
+from repro.train import loss, pipeline, train_step
+from repro.train.loss import lm_loss
+from repro.train.train_step import TrainConfig, init_state, make_train_step
+
+__all__ = ["loss", "pipeline", "train_step", "lm_loss", "TrainConfig",
+           "init_state", "make_train_step"]

@@ -1,0 +1,95 @@
+"""Cross-entropy loss with padded-vocab masking, z-loss and MoE aux loss.
+
+Two evaluation paths: :func:`lm_loss` over full logits, and
+:func:`chunked_lm_loss` which applies the LM head + CE one sequence chunk
+at a time under remat -- the (B, L, vocab) f32 logits tensor (2-34 GB for
+the assigned configs) never materializes, in forward OR backward."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import lm_head_apply
+
+Array = jax.Array
+
+
+def lm_loss(
+    logits: Array,            # (B, L, vocab_padded) f32
+    labels: Array,            # (B, L) i32
+    cfg: ModelConfig,
+    mask: Optional[Array] = None,
+    aux: Optional[Array] = None,
+    z_coef: float = 1e-4,
+) -> Tuple[Array, Dict[str, Array]]:
+    logits = logits.astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab_size:
+        pad = jnp.arange(logits.shape[-1]) >= cfg.vocab_size
+        logits = jnp.where(pad[None, None, :], -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)                     # (B, L)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    m = jnp.ones_like(nll) if mask is None else mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(m), 1.0)
+    ce = jnp.sum(nll * m) / denom
+    zl = jnp.sum(jnp.square(lse) * m) / denom
+    total = ce + z_coef * zl
+    metrics = {"ce": ce, "z_loss": zl,
+               "ppl_proxy": jnp.exp(jnp.minimum(ce, 20.0))}
+    if aux is not None:
+        total = total + cfg.router_aux_coef * aux
+        metrics["moe_aux"] = aux
+    metrics["loss"] = total
+    return total, metrics
+
+
+def chunked_lm_loss(
+    head_params: Dict[str, Array],
+    hidden: Array,            # (B, L, d) -- final-norm output
+    labels: Array,            # (B, L) i32
+    cfg: ModelConfig,
+    chunk: int = 512,
+    aux: Optional[Array] = None,
+    z_coef: float = 1e-4,
+) -> Tuple[Array, Dict[str, Array]]:
+    """CE computed scanning over sequence chunks; the per-chunk logits are
+    recomputed in the backward pass (jax.checkpoint), so peak memory holds
+    one (B, chunk, vocab) block instead of (B, L, vocab)."""
+    B, L, d = hidden.shape
+    chunk = min(chunk, L)
+    while L % chunk:
+        chunk -= 1
+    nc = L // chunk
+    xs = hidden.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        nll_sum, z_sum = carry
+        xc, lc = inp
+        logits = lm_head_apply(head_params, xc, cfg).astype(jnp.float32)
+        if cfg.vocab_padded != cfg.vocab_size:
+            pad = jnp.arange(logits.shape[-1]) >= cfg.vocab_size
+            logits = jnp.where(pad[None, None, :], -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return (nll_sum + jnp.sum(lse - ll),
+                z_sum + jnp.sum(jnp.square(lse))), None
+
+    wrapped = jax.checkpoint(body, prevent_cse=False)
+    (nll, zl), _ = jax.lax.scan(
+        wrapped, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xs, ls))
+    denom = float(B * L)
+    ce = nll / denom
+    zl = zl / denom
+    total = ce + z_coef * zl
+    metrics = {"ce": ce, "z_loss": zl,
+               "ppl_proxy": jnp.exp(jnp.minimum(ce, 20.0))}
+    if aux is not None:
+        total = total + cfg.router_aux_coef * aux
+        metrics["moe_aux"] = aux
+    metrics["loss"] = total
+    return total, metrics

@@ -1,0 +1,21 @@
+import os
+
+# Tests run on the single real CPU device; SPMD tests spawn subprocesses with
+# their own XLA_FLAGS (the 512-device dry run must NOT leak in here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def gaussian_mixture():
+    """Well-separated 5-cluster mixture in R^10 (paper's synthetic setup,
+    scaled down)."""
+    rng = np.random.default_rng(0)
+    k, d, per = 5, 10, 800
+    centers = 4.0 * rng.standard_normal((k, d))
+    pts = np.concatenate(
+        [centers[i] + 0.1 * rng.standard_normal((per, d)) for i in range(k)]
+    ).astype(np.float32)
+    return pts, centers

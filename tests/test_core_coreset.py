@@ -1,0 +1,129 @@
+"""Coreset construction tests: exact algebraic identities of Algorithm 1 plus
+statistical epsilon-coreset quality (Definition 1 / Theorem 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clustering
+from repro.core.coreset import (build_coreset, distributed_coreset,
+                                proportional_allocation)
+from repro.core.partition import pad_partition, partition_indices
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mixture(seed=0, n_per=400, k=4, d=6, sigma=0.15):
+    rng = np.random.default_rng(seed)
+    centers = 3.0 * rng.standard_normal((k, d))
+    pts = np.concatenate(
+        [centers[i] + sigma * rng.standard_normal((n_per, d)) for i in range(k)]
+    ).astype(np.float32)
+    return pts
+
+
+def _sites(pts, n_sites=6, method="weighted", seed=1):
+    idx = partition_indices(pts, n_sites, method, seed=seed)
+    sp, sm = pad_partition(pts, idx)
+    return jnp.asarray(sp), jnp.asarray(sm)
+
+
+def test_total_weight_preserved_exactly():
+    """sum of coreset weights == |P|: the signed center weights are built to
+    cancel the sampled mass exactly (Eq. (1) in the paper)."""
+    pts = _mixture()
+    sp, sm = _sites(pts)
+    dc = distributed_coreset(KEY, sp, sm, k=4, t=150)
+    total = float(jnp.sum(dc.weights))
+    assert abs(total - len(pts)) < 1e-2 * len(pts) * 1e-3 + 0.5
+
+
+def test_unbiasedness_identity():
+    """sum_q w_q m_q == sum_p m_p (each sampled slot contributes exactly
+    total_m / t): holds deterministically, not just in expectation."""
+    pts = _mixture(seed=2)
+    sp, sm = _sites(pts, method="uniform", seed=3)
+    dc = distributed_coreset(KEY, sp, sm, k=4, t=128)
+    # recompute m for the *sampled* points against their local solutions is
+    # awkward post-hoc; instead verify the per-slot invariant: every valid
+    # sampled slot has weight w_q = total_m / (t * m_q) => w_q > 0 and the
+    # number of valid slots == t.
+    n_sites, M, d = sp.shape
+    sampled_w = np.asarray(dc.weights[:, :-4])  # t_buffer slots (k=4 centers at end)
+    assert int(np.sum(sampled_w > 0)) == int(np.sum(np.asarray(dc.t_i)))
+    assert int(np.sum(np.asarray(dc.t_i))) == 128
+
+
+def test_proportional_allocation_sums_to_t():
+    for seed in range(10):
+        rng = np.random.default_rng(seed)
+        costs = jnp.asarray(np.abs(rng.standard_normal(7)).astype(np.float32))
+        t_i = proportional_allocation(costs, 100)
+        assert int(jnp.sum(t_i)) == 100
+        frac = np.asarray(100 * costs / jnp.sum(costs))
+        assert np.all(np.abs(np.asarray(t_i) - frac) <= 1.0 + 1e-5)
+
+
+@pytest.mark.parametrize("objective", ["kmeans", "kmedian"])
+def test_coreset_approximates_cost_on_random_centers(objective):
+    """Definition 1: coreset cost within eps of true cost for arbitrary
+    center sets (statistical; generous t and tolerance)."""
+    pts = _mixture(seed=4)
+    sp, sm = _sites(pts, method="weighted", seed=5)
+    dc = distributed_coreset(KEY, sp, sm, k=4, t=600, objective=objective)
+    cs = dc.flatten()
+    pts_j = jnp.asarray(pts)
+    max_err = 0.0
+    for trial in range(8):
+        x = jax.random.normal(jax.random.PRNGKey(100 + trial), (4, pts.shape[1]))
+        true_c = float(clustering.cost(pts_j, x, objective=objective))
+        cs_c = float(cs.cost(x, objective=objective))
+        max_err = max(max_err, abs(cs_c / true_c - 1.0))
+    assert max_err < 0.15, f"coreset rel err {max_err}"
+
+
+def test_coreset_supports_good_solutions():
+    """Solving on the coreset gives a solution whose *true* cost is close to
+    solving on the full data (Theorem 2's (1+eps)alpha chain)."""
+    pts = _mixture(seed=6)
+    pts_j = jnp.asarray(pts)
+    sp, sm = _sites(pts, method="weighted", seed=7)
+    dc = distributed_coreset(KEY, sp, sm, k=4, t=400)
+    cs = dc.flatten()
+    c_cs = clustering.kmeans_pp_init(KEY, cs.points, 4,
+                                     weights=jnp.maximum(cs.weights, 0))
+    c_cs, _ = clustering.lloyd(cs.points, c_cs, weights=cs.weights, iters=10)
+    _, full_cost = clustering.solve(KEY, pts_j, 4, restarts=4)
+    coreset_sol_cost = float(clustering.cost(pts_j, c_cs))
+    assert coreset_sol_cost < 1.3 * float(full_cost)
+
+
+def test_centralized_build_coreset_weight_identities():
+    pts = jnp.asarray(_mixture(seed=8))
+    cs = build_coreset(KEY, pts, k=4, t=200)
+    assert cs.points.shape == (204, pts.shape[1])
+    np.testing.assert_allclose(float(jnp.sum(cs.weights)), pts.shape[0],
+                               rtol=1e-5)
+
+
+def test_clip_negative_option():
+    pts = jnp.asarray(_mixture(seed=9))
+    cs = build_coreset(KEY, pts, k=4, t=200, clip_negative=True)
+    assert float(jnp.min(cs.weights)) >= 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_sites=st.integers(2, 8),
+       t=st.sampled_from([64, 128, 256]))
+def test_property_weight_preservation_any_partition(seed, n_sites, t):
+    """Property: for any partition skew and sample budget, the distributed
+    coreset preserves total mass and allocates exactly t samples."""
+    pts = _mixture(seed=seed, n_per=150, k=3, d=4)
+    idx = partition_indices(pts, n_sites, "weighted", seed=seed)
+    sp, sm = pad_partition(pts, idx)
+    dc = distributed_coreset(jax.random.PRNGKey(seed), jnp.asarray(sp),
+                             jnp.asarray(sm), k=3, t=t)
+    assert int(jnp.sum(dc.t_i)) == t
+    np.testing.assert_allclose(float(jnp.sum(dc.weights)), len(pts),
+                               rtol=1e-4)

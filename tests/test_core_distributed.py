@@ -1,0 +1,114 @@
+"""End-to-end Algorithm 2 tests (simulation + baselines + SPMD subprocess)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (baselines, bfs_spanning_tree, clustering,
+                        distributed_kmeans, distributed_kmeans_tree,
+                        erdos_renyi, grid)
+from repro.core.partition import pad_partition, partition_indices
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(n_sites=9, method="weighted", seed=0):
+    rng = np.random.default_rng(seed)
+    k, d = 4, 8
+    centers = 3.0 * rng.standard_normal((k, d))
+    pts = np.concatenate(
+        [centers[i] + 0.15 * rng.standard_normal((500, d)) for i in range(k)]
+    ).astype(np.float32)
+    idx = partition_indices(pts, n_sites, method, seed=seed + 1)
+    sp, sm = pad_partition(pts, idx)
+    return pts, jnp.asarray(sp), jnp.asarray(sm), k
+
+
+def test_distributed_kmeans_quality_and_ledger():
+    pts, sp, sm, k = _setup()
+    g = erdos_renyi(9, 0.3, seed=3)
+    res = distributed_kmeans(KEY, sp, sm, k, t=300, graph=g)
+    _, full = clustering.solve(KEY, jnp.asarray(pts), k, restarts=4)
+    ratio = float(clustering.cost(jnp.asarray(pts), res.centers) / full)
+    assert ratio < 1.25, f"cost ratio {ratio}"
+    # Theorem 2 ledger structure: scalars = 2mn, points = 2m * sum|D_i|
+    assert res.ledger.scalars == 2 * g.m * g.n
+    assert res.ledger.points == 2 * g.m * (300 + g.n * k)
+
+
+def test_distributed_kmeans_tree_ledger_uses_depths():
+    pts, sp, sm, k = _setup()
+    g = grid(3, 3)
+    tree = bfs_spanning_tree(g, root=0)
+    res = distributed_kmeans_tree(KEY, sp, sm, k, t=300, tree=tree)
+    # up-pass point traffic bounded by h * sum|D_i|; exact value uses depths
+    assert res.ledger.points <= tree.height * (300 + g.n * k) + k * (g.n - 1)
+    _, full = clustering.solve(KEY, jnp.asarray(pts), k, restarts=4)
+    ratio = float(clustering.cost(jnp.asarray(pts), res.centers) / full)
+    assert ratio < 1.25
+
+
+def test_combine_baseline_quality():
+    pts, sp, sm, k = _setup(method="uniform")
+    cs = baselines.combine(KEY, sp, sm, k, t_total=300)
+    c = clustering.kmeans_pp_init(KEY, cs.points, k,
+                                  weights=jnp.maximum(cs.weights, 0))
+    c, _ = clustering.lloyd(cs.points, c, weights=cs.weights, iters=10)
+    _, full = clustering.solve(KEY, jnp.asarray(pts), k, restarts=4)
+    assert float(clustering.cost(jnp.asarray(pts), c) / full) < 1.3
+
+
+def test_zhang_baseline_runs_and_ledger():
+    pts, sp, sm, k = _setup(n_sites=9)
+    g = grid(3, 3)
+    tree = bfs_spanning_tree(g, root=0)
+    cs, ledger = baselines.zhang_tree(KEY, np.asarray(sp), np.asarray(sm),
+                                      tree, k, s=80)
+    assert ledger.points == (g.n - 1) * (80 + k)
+    np.testing.assert_allclose(float(jnp.sum(cs.weights)), len(pts), rtol=1e-3)
+    c = clustering.kmeans_pp_init(KEY, cs.points, k,
+                                  weights=jnp.maximum(cs.weights, 0))
+    c, _ = clustering.lloyd(cs.points, c, weights=cs.weights, iters=10)
+    _, full = clustering.solve(KEY, jnp.asarray(pts), k, restarts=4)
+    assert float(clustering.cost(jnp.asarray(pts), c) / full) < 1.5
+
+
+SPMD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import spmd_distributed_kmeans, clustering
+    from repro.core.partition import partition_indices, pad_partition
+
+    rng = np.random.default_rng(0)
+    k, d = 4, 8
+    centers = 3.0 * rng.standard_normal((k, d))
+    pts = np.concatenate([centers[i] + 0.15 * rng.standard_normal((400, d))
+                          for i in range(k)]).astype(np.float32)
+    idx = partition_indices(pts, 8, "weighted", seed=1)
+    sp, sm = pad_partition(pts, idx)
+    mesh = jax.make_mesh((8,), ("sites",))
+    c, lc = spmd_distributed_kmeans(mesh, "sites", jax.random.PRNGKey(0),
+                                    jnp.asarray(sp), jnp.asarray(sm), k, t=256)
+    _, full = clustering.solve(jax.random.PRNGKey(0), jnp.asarray(pts), k,
+                               restarts=4)
+    ratio = float(clustering.cost(jnp.asarray(pts), c) / full)
+    assert ratio < 1.3, f"spmd ratio {ratio}"
+    assert np.asarray(lc).shape == (8,)
+    print("SPMD_OK", ratio)
+""")
+
+
+def test_spmd_distributed_kmeans_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SPMD_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "SPMD_OK" in out.stdout, out.stdout + out.stderr

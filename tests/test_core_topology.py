@@ -1,0 +1,114 @@
+"""Graph topology, message passing (Algorithm 3), and partition tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology
+from repro.core.comm import flood_cost, tree_broadcast_cost, tree_up_cost
+from repro.core.message_passing import flood, flood_scalars
+from repro.core.partition import pad_partition, partition_indices
+
+
+@pytest.mark.parametrize("maker", [
+    lambda s: topology.erdos_renyi(12, 0.3, seed=s),
+    lambda s: topology.grid(3, 4),
+    lambda s: topology.preferential(12, 2, seed=s),
+])
+def test_graphs_connected(maker):
+    for seed in range(3):
+        g = maker(seed)
+        res = flood(g)
+        assert all(len(r) == g.n for r in res.received), "graph not connected"
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 20), p=st.floats(0.1, 0.9),
+       seed=st.integers(0, 10_000))
+def test_flood_reaches_everyone_and_counts_2mn(n, p, seed):
+    """Algorithm 3: every node ends with all n messages; each node forwards
+    each message to all neighbours exactly once => 2*m*n transmissions."""
+    g = topology.erdos_renyi(n, p, seed=seed)
+    res = flood(g)
+    assert all(r == set(range(n)) for r in res.received)
+    assert res.transmissions == 2 * g.m * g.n
+    assert res.rounds <= topology.diameter(g) + 1
+
+
+def test_flood_scalars_tables():
+    g = topology.grid(3, 3)
+    vals = [float(i * i) for i in range(g.n)]
+    tables, res = flood_scalars(g, vals)
+    for v in range(g.n):
+        assert tables[v] == {i: float(i * i) for i in range(g.n)}
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 25), seed=st.integers(0, 10_000))
+def test_bfs_tree_height_vs_diameter(n, seed):
+    g = topology.erdos_renyi(n, 0.3, seed=seed)
+    diam = topology.diameter(g)
+    tree = topology.bfs_spanning_tree(g, root=0)
+    assert tree.height <= diam
+    assert 2 * tree.height >= diam
+    # parent pointers form a tree rooted at 0
+    assert tree.parent[0] == -1
+    for v in range(1, n):
+        assert 0 <= tree.parent[v] < n
+        assert tree.depth[v] == tree.depth[tree.parent[v]] + 1
+
+
+def test_grid_diameter():
+    g = topology.grid(4, 4)
+    assert topology.diameter(g) == 6  # (rows-1)+(cols-1)
+
+
+def test_flood_cost_ledger():
+    g = topology.grid(3, 3)  # n=9, m=12
+    led = flood_cost(g, n_messages=9, unit_scalars=1.0)
+    assert led.scalars == 2 * 12 * 9
+    led2 = flood_cost(g, n_messages=9, unit_points=10.0, dim=5)
+    assert led2.points == 2 * 12 * 90
+    assert led2.bytes == 4 * 6 * led2.points
+
+
+def test_tree_costs():
+    g = topology.grid(3, 3)
+    tree = topology.bfs_spanning_tree(g, root=0)
+    up = tree_up_cost(tree, 7.0, dim=3)
+    assert up.points == 7.0 * sum(tree.depth)
+    down = tree_broadcast_cost(tree, unit_points=5.0, dim=3)
+    assert down.points == 5.0 * (g.n - 1)
+
+
+@pytest.mark.parametrize("method", ["uniform", "similarity", "weighted"])
+def test_partition_is_a_partition(method):
+    rng = np.random.default_rng(0)
+    data = rng.standard_normal((500, 8)).astype(np.float32)
+    idx = partition_indices(data, 7, method, seed=1)
+    allix = np.concatenate(idx)
+    assert len(allix) == 500
+    assert len(np.unique(allix)) == 500
+    assert all(len(i) > 0 for i in idx)
+
+
+def test_degree_partition_skews_to_high_degree():
+    g = topology.preferential(10, 2, seed=0)
+    deg = g.degrees()
+    rng = np.random.default_rng(0)
+    data = rng.standard_normal((5000, 4)).astype(np.float32)
+    idx = partition_indices(data, g.n, "degree", seed=1, degrees=deg)
+    sizes = np.array([len(i) for i in idx])
+    # site sizes correlate with degree
+    corr = np.corrcoef(sizes, deg)[0, 1]
+    assert corr > 0.7
+
+
+def test_pad_partition_masks():
+    rng = np.random.default_rng(0)
+    data = rng.standard_normal((100, 3)).astype(np.float32)
+    idx = partition_indices(data, 4, "weighted", seed=0)
+    sp, sm = pad_partition(data, idx)
+    assert sp.shape[0] == 4 and sp.shape[2] == 3
+    assert sm.sum() == 100
+    # padded slots are zero
+    assert np.all(sp[~sm] == 0)

@@ -1,0 +1,87 @@
+"""Coreset-based data selection (the paper's technique in the data plane) +
+synthetic data pipeline tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import (BigramLM, embed_examples, gather_selected,
+                        paper_dataset, paper_dataset_names, select_coreset)
+
+
+def test_bigram_batches_deterministic_and_learnable():
+    gen = BigramLM(vocab_size=512, seed=0)
+    b1 = gen.batch(3, 4, 16)
+    b2 = gen.batch(3, 4, 16)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    # labels are next tokens
+    assert b1["tokens"].shape == (4, 16)
+    assert int(jnp.max(b1["tokens"])) < 256  # active vocab slice
+
+
+def test_paper_dataset_shapes():
+    for name in paper_dataset_names():
+        pts, k = paper_dataset(name, scale=0.02)
+        assert pts.ndim == 2 and np.isfinite(pts).all()
+        assert k >= 5
+
+
+def test_select_coreset_preserves_mass_and_budget():
+    rng = np.random.default_rng(0)
+    n_sites, M, d = 4, 200, 16
+    emb = jnp.asarray(rng.standard_normal((n_sites, M, d)).astype(np.float32))
+    mask = jnp.ones((n_sites, M), bool)
+    sel = select_coreset(jax.random.PRNGKey(0), emb, mask, k=5, t=100)
+    assert int(jnp.sum(sel.t_i)) == 100
+    total_w = float(jnp.sum(sel.weights))
+    np.testing.assert_allclose(total_w, n_sites * M, rtol=1e-3)
+    # indices in range
+    assert int(jnp.max(sel.indices)) < M
+
+
+def test_selection_weighted_cost_approximates_pool_cost():
+    """The selected weighted subset approximates the k-means cost of the
+    full pool on random centers (Definition 1 applied to embeddings)."""
+    rng = np.random.default_rng(1)
+    n_sites, M, d = 4, 300, 8
+    emb_np = np.concatenate([
+        c + 0.3 * rng.standard_normal((n_sites, M // 4, d))
+        for c in 3.0 * rng.standard_normal((4, d))], axis=1
+    ).astype(np.float32)
+    emb = jnp.asarray(emb_np)
+    mask = jnp.ones((n_sites, M), bool)
+    sel = select_coreset(jax.random.PRNGKey(1), emb, mask, k=4, t=400)
+    flat = emb.reshape(-1, d)
+    sel_pts = jax.vmap(lambda e, i: e[i])(emb, sel.indices).reshape(-1, d)
+    sel_w = sel.weights.reshape(-1)
+    from repro.core import clustering
+    errs = []
+    for trial in range(5):
+        x = jax.random.normal(jax.random.PRNGKey(10 + trial), (4, d))
+        full = float(clustering.cost(flat, x))
+        approx = float(clustering.cost(sel_pts, x, weights=sel_w))
+        errs.append(abs(approx / full - 1))
+    assert max(errs) < 0.2, errs
+
+
+def test_gather_selected_layout():
+    rng = np.random.default_rng(2)
+    n_sites, M, L = 3, 50, 12
+    toks = jnp.asarray(rng.integers(0, 100, size=(n_sites, M, L)),
+                       jnp.int32)
+    emb = jnp.asarray(rng.standard_normal((n_sites, M, 4)).astype(np.float32))
+    mask = jnp.ones((n_sites, M), bool)
+    sel = select_coreset(jax.random.PRNGKey(2), emb, mask, k=3, t=20)
+    out = gather_selected(toks, sel)
+    assert out["tokens"].shape == (n_sites * (20 + 3), L)
+    assert out["weights"].shape == (n_sites * 23,)
+
+
+def test_embed_examples_shape():
+    table = jnp.asarray(np.random.default_rng(0)
+                        .standard_normal((64, 8)).astype(np.float32))
+    toks = jnp.asarray(np.random.default_rng(1)
+                       .integers(0, 64, size=(2, 5, 10)), jnp.int32)
+    emb = embed_examples(table, toks)
+    assert emb.shape == (2, 5, 8)

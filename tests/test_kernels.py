@@ -1,0 +1,111 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode on CPU) vs the
+pure-jnp oracles in repro.kernels.ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+SHAPES = [
+    (8, 4, 3),       # tiny, everything padded
+    (100, 5, 10),    # paper's synthetic dims
+    (256, 128, 128), # exactly tile-aligned
+    (300, 17, 90),   # ragged everywhere (YearPredictionMSD dims)
+    (1024, 50, 32),  # ColorHistogram-ish
+    (513, 257, 129), # off-by-one on every axis
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _data(n, k, d, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    pts = rng.standard_normal((n, d)).astype(np.float32)
+    ctr = rng.standard_normal((k, d)).astype(np.float32)
+    w = np.abs(rng.standard_normal(n)).astype(np.float32)
+    return (jnp.asarray(pts, dtype), jnp.asarray(ctr, dtype), jnp.asarray(w))
+
+
+@pytest.mark.parametrize("n,k,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_distance_argmin_matches_ref(n, k, d, dtype):
+    pts, ctr, _ = _data(n, k, d, dtype)
+    md, am = ops.min_dist_argmin(pts, ctr)
+    md_ref, am_ref = ref.min_dist_argmin_ref(pts, ctr)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(md), np.asarray(md_ref),
+                               rtol=tol, atol=tol)
+    # argmin may differ only where two centers are effectively tied
+    diff = np.asarray(am) != np.asarray(am_ref)
+    if diff.any():
+        d_kernel = np.asarray(md)[diff]
+        d_oracle = np.asarray(md_ref)[diff]
+        np.testing.assert_allclose(d_kernel, d_oracle, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,k,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_lloyd_stats_matches_ref(n, k, d, dtype):
+    pts, ctr, w = _data(n, k, d, dtype)
+    sums, counts, cost = ops.lloyd_stats(pts, ctr, w)
+    sums_r, counts_r, cost_r = ref.lloyd_stats_ref(pts, ctr, w)
+    tol = 1e-4 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(counts_r),
+                               rtol=tol, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(sums_r),
+                               rtol=tol, atol=max(tol * 10, 1e-3))
+    np.testing.assert_allclose(float(cost), float(cost_r), rtol=5e-3)
+
+
+def test_lloyd_stats_large_k_fallback_path():
+    """k*d beyond the VMEM-resident budget must route through the two-pass
+    fallback and still match the oracle."""
+    pts, ctr, w = _data(512, 1100, 1024, jnp.float32)
+    sums, counts, cost = ops.lloyd_stats(pts, ctr, w)
+    sums_r, counts_r, cost_r = ref.lloyd_stats_ref(pts, ctr, w)
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(counts_r),
+                               rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(float(cost), float(cost_r), rtol=1e-3)
+
+
+def test_lloyd_step_matches_clustering_update():
+    from repro.core import clustering
+    pts, ctr, w = _data(300, 8, 16, jnp.float32)
+    new_k, cost_k = ops.lloyd_step(pts, ctr, w)
+    # one reference weighted Lloyd step
+    new_r, cost_r = clustering._kmeans_update(pts, w, ctr, 8)
+    np.testing.assert_allclose(np.asarray(new_k), np.asarray(new_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(cost_k), float(cost_r), rtol=1e-4)
+
+
+def test_zero_weight_points_do_not_contribute():
+    pts, ctr, w = _data(128, 4, 8, jnp.float32)
+    w = w.at[64:].set(0.0)
+    sums_a, counts_a, cost_a = ops.lloyd_stats(pts, ctr, w)
+    sums_b, counts_b, cost_b = ops.lloyd_stats(pts[:64], ctr, w[:64])
+    np.testing.assert_allclose(np.asarray(sums_a), np.asarray(sums_b),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(cost_a), float(cost_b), rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 400), k=st.integers(1, 70), d=st.integers(1, 150),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_distance_argmin_any_shape(n, k, d, seed):
+    pts, ctr, _ = _data(n, k, d, jnp.float32, seed=seed)
+    md, am = ops.min_dist_argmin(pts, ctr)
+    md_ref, am_ref = ref.min_dist_argmin_ref(pts, ctr)
+    np.testing.assert_allclose(np.asarray(md), np.asarray(md_ref),
+                               rtol=1e-4, atol=1e-4)
+    assert md.shape == (n,) and am.shape == (n,)
+    assert int(jnp.max(am)) < k
+
+
+def test_block_size_sweep_invariance():
+    pts, ctr, _ = _data(512, 64, 32, jnp.float32)
+    md0, am0 = ops.min_dist_argmin(pts, ctr, block_n=64, block_k=16)
+    md1, am1 = ops.min_dist_argmin(pts, ctr, block_n=256, block_k=64)
+    np.testing.assert_allclose(np.asarray(md0), np.asarray(md1), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(am0), np.asarray(am1))

@@ -1,0 +1,118 @@
+"""AdamW, schedules and gradient compression tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import AdamWConfig, adamw, compression, schedule
+
+
+def _quadratic_problem(seed=0, d=20):
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((d, d)).astype(np.float32)
+    A = A @ A.T / d + np.eye(d, dtype=np.float32)
+    b = rng.standard_normal(d).astype(np.float32)
+
+    def loss(x):
+        return 0.5 * x @ jnp.asarray(A) @ x - jnp.asarray(b) @ x
+
+    x_star = np.linalg.solve(A, b)
+    return loss, x_star
+
+
+def test_adamw_matches_reference_math():
+    """One step against a hand-rolled numpy AdamW."""
+    cfg = AdamWConfig(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+                      grad_clip_norm=0.0)
+    params = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    grads = {"w": jnp.asarray([0.1, -0.2, 0.3])}
+    state = adamw.init(params)
+    new_params, state, _ = adamw.update(grads, state, params,
+                                        jnp.asarray(0.01), cfg)
+    g = np.array([0.1, -0.2, 0.3])
+    m = 0.1 * g
+    v = 0.001 * g * g
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.999)
+    want = np.array([1.0, -2.0, 3.0]) - 0.01 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_params["w"]), want, rtol=1e-5)
+
+
+def test_adamw_converges_on_quadratic():
+    loss, x_star = _quadratic_problem()
+    params = {"x": jnp.zeros(20)}
+    state = adamw.init(params)
+    cfg = AdamWConfig(weight_decay=0.0, grad_clip_norm=0.0, b2=0.999)
+    for i in range(800):
+        g = jax.grad(lambda p: loss(p["x"]))(params)
+        params, state, _ = adamw.update(g, state, params,
+                                        jnp.asarray(0.05), cfg)
+    np.testing.assert_allclose(np.asarray(params["x"]), x_star, atol=0.05)
+
+
+def test_grad_clip():
+    grads = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = adamw.clip_by_global_norm(grads, 1.0)
+    np.testing.assert_allclose(float(adamw.global_norm(clipped)), 1.0,
+                               rtol=1e-5)
+    assert float(norm) > 30.0
+
+
+def test_weight_decay_skips_norms_and_biases():
+    cfg = AdamWConfig()
+    params = {"layer": {"w": jnp.ones((4, 4)), "b": jnp.ones((4,)),
+                        "scale": jnp.ones((4,))}}
+    mask = adamw._decay_mask(params, cfg)
+    assert mask["layer"]["w"] == 1.0
+    assert mask["layer"]["b"] == 0.0
+    assert mask["layer"]["scale"] == 0.0
+
+
+def test_warmup_cosine_schedule():
+    lr0 = float(schedule.warmup_cosine(0, 1e-3, 100, 1000))
+    lr_peak = float(schedule.warmup_cosine(100, 1e-3, 100, 1000))
+    lr_end = float(schedule.warmup_cosine(1000, 1e-3, 100, 1000))
+    assert lr0 == 0.0
+    np.testing.assert_allclose(lr_peak, 1e-3, rtol=1e-5)
+    np.testing.assert_allclose(lr_end, 1e-4, rtol=1e-4)
+
+
+def test_int8_quantization_bounded_error():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(1000).astype(np.float32))
+    back = compression.qdq_int8(g)
+    max_err = float(jnp.max(jnp.abs(back - g)))
+    assert max_err <= float(jnp.max(jnp.abs(g))) / 127.0 + 1e-6
+
+
+def test_topk_keeps_largest():
+    g = jnp.asarray(np.arange(100, dtype=np.float32) - 50)
+    m = compression.topk_mask(g, 0.1)
+    kept = np.nonzero(np.asarray(m))[0]
+    assert len(kept) >= 10
+    assert 0 in kept and 99 in kept  # largest magnitudes
+
+
+def test_error_feedback_convergence():
+    """SGD with int8-compressed grads + error feedback reaches the optimum
+    of a quadratic (lossy but unbiased-in-the-limit updates)."""
+    loss, x_star = _quadratic_problem(seed=1)
+    x = {"x": jnp.zeros(20)}
+    err = None
+    for i in range(1500):
+        g = jax.grad(lambda p: loss(p["x"]))(x)
+        comp, err = compression.compress_with_feedback(g, err, scheme="int8")
+        x = jax.tree.map(lambda p, c: p - 0.02 * c, x, comp)
+    np.testing.assert_allclose(np.asarray(x["x"]), x_star, atol=0.05)
+
+
+def test_topk_error_feedback_convergence():
+    loss, x_star = _quadratic_problem(seed=2)
+    x = {"x": jnp.zeros(20)}
+    err = None
+    for i in range(4000):
+        g = jax.grad(lambda p: loss(p["x"]))(x)
+        comp, err = compression.compress_with_feedback(
+            g, err, scheme="topk", topk_frac=0.25)
+        x = jax.tree.map(lambda p, c: p - 0.02 * c, x, comp)
+    np.testing.assert_allclose(np.asarray(x["x"]), x_star, atol=0.08)
