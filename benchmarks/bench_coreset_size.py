@@ -4,15 +4,23 @@ the centralized one at equal t (the paper's core claim: topology-independent
 coreset size), for both k-means and k-median.
 
 Quality metric: max over random center sets of |coreset cost / true cost -1|.
+
+Also includes a backend A/B of the *end-to-end* distributed construction
+(jnp / jnp_chunked / pallas through the dispatch layer): same key, per-
+backend wall time + quality + max weight deviation from the jnp reference,
+one JSON row per backend.
 """
 from __future__ import annotations
 
+import json
+import time
 from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backend as backend_mod
 from repro.core import clustering
 from repro.core.coreset import build_coreset, distributed_coreset
 from repro.core.partition import pad_partition, partition_indices
@@ -36,6 +44,50 @@ def _max_rel_err(cs_pts, cs_w, pts, k, objective, n_probe=6, seed=0):
     return float(np.max(errs))
 
 
+def run_backend_ab(sp, sm, pts, k, t=200, backends=None,
+                   out_rows: List[str] | None = None) -> List[str]:
+    """End-to-end Algorithm 1 through each dispatch backend: wall time,
+    coreset quality, and weight deviation vs the jnp reference. The chunked
+    entrant's chunk sits below the per-site point count so the lax.map path
+    actually executes (the registry default of 65536 would fall through to
+    dense code at these sizes)."""
+    rows = out_rows if out_rows is not None else []
+    if backends is None:
+        backends = ("jnp",
+                    backend_mod.register_backend(backend_mod.JnpChunkedBackend(
+                        max(int(sp.shape[1]) // 4, 1),
+                        name="jnp_chunked_bench")),
+                    "pallas")
+    key = jax.random.PRNGKey(0)
+    ref_backend = backend_mod.resolve_name(backends[0])
+    ref_w = None
+    for backend in backends:
+        name = backend_mod.resolve_name(backend)
+        # warm up once (trace + compile), then time the cached executable
+        dc = distributed_coreset(key, sp, sm, k, t, backend=backend)
+        dc.weights.block_until_ready()
+        t0 = time.time()
+        dc = distributed_coreset(key, sp, sm, k, t, backend=backend)
+        dc.weights.block_until_ready()
+        wall_us = (time.time() - t0) * 1e6
+        cs = dc.flatten()
+        err = _max_rel_err(cs.points, cs.weights, pts, k, "kmeans")
+        w = np.asarray(dc.weights)
+        if ref_w is None:
+            ref_w = w
+        payload = {
+            "backend": name, "t": t, "n_sites": int(sp.shape[0]),
+            "chunk": getattr(backend, "chunk", None),
+            "wall_us": round(wall_us, 1), "dist_err": round(err, 4),
+            "ref_backend": ref_backend,
+            "max_weight_dev_vs_ref": float(np.max(np.abs(w - ref_w))),
+        }
+        rows.append(f"coreset_backend_ab/{name}/t={t},{wall_us:.0f},"
+                    f"json={json.dumps(payload)}")
+        print(rows[-1], flush=True)
+    return rows
+
+
 def run(scale: float = 0.05, out_rows: List[str] | None = None,
         sizes=(100, 200, 400, 800)) -> List[str]:
     rows = out_rows if out_rows is not None else []
@@ -57,6 +109,7 @@ def run(scale: float = 0.05, out_rows: List[str] | None = None,
             rows.append(f"coreset_size/{objective}/t={t},0,"
                         f"central_err={e_central:.4f};dist_err={e_dist:.4f}")
             print(rows[-1], flush=True)
+    run_backend_ab(sp, sm, pts, k, out_rows=rows)
     return rows
 
 

@@ -1,15 +1,25 @@
-"""Kernel micro-benchmarks: fused Pallas kernels (interpret mode on this CPU
-container -- wall times are NOT TPU times) vs the jnp oracle, plus the
-ANALYTIC TPU v5e roofline for each kernel configuration.
+"""Kernel + backend-dispatch benchmarks.
 
-Analytic model per (n, k, d) tile sweep:
-    flops  = 2 n k d (distance matmul) [+ 2 n k d accumulate for lloyd]
-    bytes  = 4(nd + kd + n(out))   HBM, fused (distance matrix never stored)
-    naive  = + 4 n k               HBM for the materialized matrix
-The fused kernel's arithmetic intensity flops/bytes rises by ~k/2 vs naive.
+Two sections:
+
+1. **Backend A/B through the dispatch layer** -- the two primitive ops and
+   an end-to-end weighted Lloyd solve routed through every registered
+   backend (``jnp`` / ``jnp_chunked`` / ``pallas``). On this CPU container
+   the pallas rows run in interpret mode (wall times are NOT TPU times);
+   the same sweep on a TPU host measures the fused kernels for real. One
+   JSON row per (op, backend, shape) so the perf trajectory can track
+   backend speedups across PRs.
+
+2. **Analytic TPU v5e roofline** for each kernel configuration:
+       flops  = 2 n k d (distance matmul) [+ 2 n k d accumulate for lloyd]
+       bytes  = 4(nd + kd + n(out))   HBM, fused (distance matrix never stored)
+       naive  = + 4 n k               HBM for the materialized matrix
+   The fused kernel's arithmetic intensity flops/bytes rises by ~k/2 vs
+   naive.
 """
 from __future__ import annotations
 
+import json
 import time
 from typing import List
 
@@ -17,14 +27,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backend as backend_mod
+from repro.core import clustering
 from repro.kernels import ops, ref
 
 PEAK = 197e12
 BW = 819e9
 
+# the chunked entrant uses a chunk *below* the sweep sizes so the lax.map
+# path actually runs (the registry default of 65536 would fall through to
+# the dense code at benchmark n)
+BENCH_CHUNK = 1024
+
+
+def dispatch_entrants():
+    chunked = backend_mod.register_backend(
+        backend_mod.JnpChunkedBackend(BENCH_CHUNK, name="jnp_chunked_bench"))
+    return (("jnp", backend_mod.get_backend("jnp")),
+            ("jnp_chunked", chunked),
+            ("pallas", backend_mod.get_backend("pallas")))
+
 
 def _time(fn, *args, reps=3):
-    fn(*args)[0].block_until_ready()
+    out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
     t0 = time.time()
     for _ in range(reps):
         out = fn(*args)
@@ -32,14 +58,52 @@ def _time(fn, *args, reps=3):
     return (time.time() - t0) / reps * 1e6
 
 
-def run(out_rows: List[str] | None = None) -> List[str]:
+def _data(n, k, d, seed=0):
+    rng = np.random.default_rng(seed)
+    pts = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    ctr = jnp.asarray(rng.standard_normal((k, d)).astype(np.float32))
+    w = jnp.asarray(np.abs(rng.standard_normal(n)).astype(np.float32))
+    return pts, ctr, w
+
+
+def run_dispatch(out_rows: List[str] | None = None,
+                 shapes=((4096, 64, 32), (16384, 50, 16))) -> List[str]:
+    """A/B the registered backends on the primitive ops and an end-to-end
+    weighted Lloyd solve, all through the dispatch layer."""
+    rows = out_rows if out_rows is not None else []
+    interpreted = jax.default_backend() != "tpu"
+    for n, k, d in shapes:
+        pts, ctr, w = _data(n, k, d)
+        for name, b in dispatch_entrants():
+            t_mda = _time(jax.jit(lambda p, c: b.min_dist_argmin(p, c)),
+                          pts, ctr)
+            t_ls = _time(jax.jit(lambda p, c, ww: b.lloyd_stats(p, c, ww)),
+                         pts, ctr, w)
+            t_e2e = _time(
+                lambda p, c, ww: clustering.lloyd(p, c, weights=ww, iters=2,
+                                                  backend=b),
+                pts, ctr, w, reps=1)
+
+            payload = {
+                "backend": name,
+                "interpret": bool(interpreted and name == "pallas"),
+                "chunk": getattr(b, "chunk", None),
+                "n": n, "k": k, "d": d,
+                "min_dist_argmin_us": round(t_mda, 1),
+                "lloyd_stats_us": round(t_ls, 1),
+                "lloyd2_e2e_us": round(t_e2e, 1),
+            }
+            rows.append(f"backend_dispatch/{name}/n={n}/k={k}/d={d},"
+                        f"{t_ls:.0f},json={json.dumps(payload)}")
+            print(rows[-1], flush=True)
+    return rows
+
+
+def run_roofline(out_rows: List[str] | None = None) -> List[str]:
     rows = out_rows if out_rows is not None else []
     shapes = [(4096, 64, 128), (16384, 256, 128), (65536, 50, 128)]
     for n, k, d in shapes:
-        rng = np.random.default_rng(0)
-        pts = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
-        ctr = jnp.asarray(rng.standard_normal((k, d)).astype(np.float32))
-        w = jnp.ones((n,), jnp.float32)
+        pts, ctr, w = _data(n, k, d)
 
         t_ref = _time(jax.jit(ref.min_dist_argmin_ref), pts, ctr)
         t_pal = _time(lambda p, c: ops.min_dist_argmin(p, c), pts, ctr)
@@ -71,6 +135,13 @@ def run(out_rows: List[str] | None = None) -> List[str]:
             f"tpu_fused_us={tf*1e6:.1f};tpu_naive_us={tn*1e6:.1f};"
             f"tpu_speedup={tn/tf:.2f}")
         print(rows[-1], flush=True)
+    return rows
+
+
+def run(out_rows: List[str] | None = None) -> List[str]:
+    rows = out_rows if out_rows is not None else []
+    run_dispatch(out_rows=rows)
+    run_roofline(out_rows=rows)
     return rows
 
 

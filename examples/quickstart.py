@@ -5,8 +5,10 @@ mixture, builds the distributed coreset (Algorithm 1), clusters it
 (Algorithm 2), and compares against centralized Lloyd on the full data --
 while counting every transmitted point (Algorithm 3 ledger).
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--backend jnp|jnp_chunked|pallas]
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,7 +18,12 @@ from repro.core import (clustering, distributed_kmeans, grid,
 from repro.core.partition import pad_partition, partition_indices
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default=None,
+                    help="clustering backend: jnp | jnp_chunked | pallas "
+                         "(default: auto)")
+    args = ap.parse_args(argv)
     rng = np.random.default_rng(0)
     k, d = 5, 10
     centers = 3.0 * rng.standard_normal((k, d))
@@ -33,10 +40,10 @@ def main():
 
     key = jax.random.PRNGKey(0)
     res = distributed_kmeans(key, jnp.asarray(sp), jnp.asarray(sm), k,
-                             t=400, graph=g)
+                             t=400, graph=g, backend=args.backend)
 
     _, central_cost = clustering.solve(key, jnp.asarray(data), k,
-                                       restarts=4)
+                                       restarts=4, backend=args.backend)
     dist_cost = clustering.cost(jnp.asarray(data), res.centers)
     print(f"\ncentralized Lloyd cost : {float(central_cost):12.1f} "
           f"(ships {data.shape[0]} points)")
@@ -49,7 +56,8 @@ def main():
 
     tree = bfs_spanning_tree(g, root=0)
     res_t = distributed_kmeans_tree(key, jnp.asarray(sp), jnp.asarray(sm),
-                                    k, t=400, tree=tree)
+                                    k, t=400, tree=tree,
+                                    backend=args.backend)
     print(f"\nrooted-tree variant (h={tree.height}): "
           f"ratio {float(clustering.cost(jnp.asarray(data), res_t.centers)/central_cost):.4f}, "
           f"{res_t.ledger.points:.0f} points moved")

@@ -1,9 +1,11 @@
 """The paper's contribution: distributed coreset construction and clustering
 on general topologies (Balcan-Ehrlich-Liang 2013)."""
 
-from repro.core import baselines, clustering, comm, coreset, distributed
-from repro.core import message_passing, partition, topology
-from repro.core.clustering import (cost, kmeans_pp_init, lloyd,
+from repro.core import backend, baselines, clustering, comm, coreset
+from repro.core import distributed, message_passing, partition, topology
+from repro.core.backend import (ClusteringBackend, available_backends,
+                                get_backend, register_backend, use_backend)
+from repro.core.clustering import (cost, kmeans_pp_init, lloyd, lloyd_stats,
                                    min_dist_argmin, solve)
 from repro.core.comm import CommLedger
 from repro.core.coreset import (Coreset, DistributedCoreset, build_coreset,
@@ -15,9 +17,12 @@ from repro.core.topology import (Graph, SpanningTree, bfs_spanning_tree,
                                  diameter, erdos_renyi, grid, preferential)
 
 __all__ = [
-    "baselines", "clustering", "comm", "coreset", "distributed",
+    "backend", "baselines", "clustering", "comm", "coreset", "distributed",
     "message_passing", "partition", "topology",
-    "cost", "kmeans_pp_init", "lloyd", "min_dist_argmin", "solve",
+    "ClusteringBackend", "available_backends", "get_backend",
+    "register_backend", "use_backend",
+    "cost", "kmeans_pp_init", "lloyd", "lloyd_stats", "min_dist_argmin",
+    "solve",
     "CommLedger", "Coreset", "DistributedCoreset", "build_coreset",
     "distributed_coreset", "ClusteringResult", "distributed_kmeans",
     "distributed_kmeans_tree", "spmd_distributed_kmeans",

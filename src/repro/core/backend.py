@@ -1,0 +1,275 @@
+"""Unified clustering-backend dispatch layer (DESIGN.md Sec. 8).
+
+Every hot path of the pipeline -- Algorithm 1's local solves, D^2 seeding,
+sensitivity computation, and the final coreset solve of Algorithm 2 --
+reduces to the same two primitive ops over a (possibly weighted) point set:
+
+* ``min_dist_argmin(points, centers)``
+    ``(n, d), (k, d) -> (min_d2 (n,) f32, argmin (n,) i32)``
+* ``lloyd_stats(points, centers, weights)``
+    ``(n, d), (k, d), (n,) -> (sums (k, d) f32, counts (k,) f32, cost () f32)``
+  where ``sums[c] = sum_{p: argmin(p)=c} w_p p``, ``counts[c] = sum w_p``
+  and ``cost = sum_p w_p min_d2(p)`` -- one fused E+M statistics pass.
+
+A :class:`ClusteringBackend` supplies both; the registry maps names to
+singleton instances:
+
+* ``"jnp"``         -- dense XLA formulation, materializes the (n, k)
+                       distance block (fastest on CPU for small n*k).
+* ``"jnp_chunked"`` -- ``lax.map`` over fixed-size point chunks: bounded
+                       memory for large n, same numerics as ``"jnp"``.
+* ``"pallas"``      -- the fused TPU kernels in :mod:`repro.kernels`
+                       (flash-style online argmin + one-pass statistics;
+                       interpret mode on CPU via ``ops._auto_interpret``).
+
+Selection precedence: explicit argument (name or instance) > ambient
+default set by :func:`use_backend` > auto-detection (``"pallas"`` on TPU,
+``"jnp"`` elsewhere).
+
+All accumulation is float32 regardless of input dtype (the kernels' dtype
+policy); callers cast results back as needed.
+
+jit interaction: backend choice must be a *static* trace property, so the
+public entry points in :mod:`repro.core.clustering` etc. resolve the
+ambient default to a concrete registry name *outside* their jitted inner
+functions and pass the name through ``static_argnames``. Never call
+:func:`get_backend` with ``None`` from inside a jitted function -- the
+ambient default would be baked into a stale cache entry.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Protocol, Tuple, Union, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_EPS = 1e-12
+
+
+@runtime_checkable
+class ClusteringBackend(Protocol):
+    """The two primitive ops every numerical path dispatches through."""
+
+    name: str
+
+    def min_dist_argmin(self, points: Array, centers: Array
+                        ) -> Tuple[Array, Array]:
+        ...
+
+    def lloyd_stats(self, points: Array, centers: Array,
+                    weights: Optional[Array] = None
+                    ) -> Tuple[Array, Array, Array]:
+        ...
+
+
+BackendLike = Union[str, ClusteringBackend, None]
+
+
+# ---------------------------------------------------------------------------
+# implementations
+# ---------------------------------------------------------------------------
+
+def _dense_min_dist_argmin(points: Array, centers: Array
+                           ) -> Tuple[Array, Array]:
+    p = points.astype(jnp.float32)
+    c = centers.astype(jnp.float32)
+    p2 = jnp.sum(p * p, axis=-1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=-1)
+    d2 = jnp.maximum(p2 + c2[None, :] - 2.0 * (p @ c.T), 0.0)
+    return jnp.min(d2, axis=-1), jnp.argmin(d2, axis=-1).astype(jnp.int32)
+
+
+def _dense_lloyd_stats(points: Array, centers: Array,
+                       weights: Optional[Array] = None
+                       ) -> Tuple[Array, Array, Array]:
+    p = points.astype(jnp.float32)
+    w = (jnp.ones((p.shape[0],), jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    min_d2, assign = _dense_min_dist_argmin(points, centers)
+    k = centers.shape[0]
+    oh = jax.nn.one_hot(assign, k, dtype=jnp.float32) * w[:, None]
+    sums = oh.T @ p
+    counts = jnp.sum(oh, axis=0)
+    cost = jnp.sum(w * min_d2)
+    return sums, counts, cost
+
+
+class JnpBackend:
+    """Dense XLA-fused matmul formulation d^2 = |p|^2 + |c|^2 - 2 p.c."""
+
+    name = "jnp"
+
+    def min_dist_argmin(self, points, centers):
+        return _dense_min_dist_argmin(points, centers)
+
+    def lloyd_stats(self, points, centers, weights=None):
+        return _dense_lloyd_stats(points, centers, weights)
+
+
+class JnpChunkedBackend:
+    """Bounded-memory variant: ``lax.map`` over ``chunk``-point blocks, so
+    the materialized distance block is (chunk, k) instead of (n, k). Padded
+    tail points carry weight 0 and never contribute."""
+
+    def __init__(self, chunk: int = 65536, name: str = "jnp_chunked"):
+        self.chunk = int(chunk)
+        self.name = name
+
+    def _blocks(self, points: Array, weights: Array
+                ) -> Tuple[Array, Array]:
+        n, d = points.shape
+        pad = (-n) % self.chunk
+        pts = jnp.pad(points, ((0, pad), (0, 0)))
+        w = jnp.pad(weights, (0, pad))
+        return (pts.reshape(-1, self.chunk, d),
+                w.reshape(-1, self.chunk))
+
+    def min_dist_argmin(self, points, centers):
+        n = points.shape[0]
+        if n <= self.chunk:
+            return _dense_min_dist_argmin(points, centers)
+        pts, _ = self._blocks(points, jnp.zeros((n,), jnp.float32))
+        md, am = jax.lax.map(
+            lambda blk: _dense_min_dist_argmin(blk, centers), pts)
+        return md.reshape(-1)[:n], am.reshape(-1)[:n]
+
+    def lloyd_stats(self, points, centers, weights=None):
+        n = points.shape[0]
+        w = (jnp.ones((n,), jnp.float32) if weights is None
+             else weights.astype(jnp.float32))
+        if n <= self.chunk:
+            return _dense_lloyd_stats(points, centers, w)
+        pts, ws = self._blocks(points, w)
+        sums, counts, cost = jax.lax.map(
+            lambda args: _dense_lloyd_stats(args[0], centers, args[1]),
+            (pts, ws))
+        return sums.sum(axis=0), counts.sum(axis=0), cost.sum()
+
+
+class PallasBackend:
+    """Fused Pallas TPU kernels (interpret mode on CPU). Thin delegation to
+    the safe padded wrappers in :mod:`repro.kernels.ops`."""
+
+    def __init__(self, block_n: int = 256, block_k: int = 256,
+                 interpret: Optional[bool] = None, name: str = "pallas"):
+        self.block_n = block_n
+        self.block_k = block_k
+        self.interpret = interpret
+        self.name = name
+
+    def min_dist_argmin(self, points, centers):
+        from repro.kernels import ops as kops
+
+        return kops.min_dist_argmin(points, centers, block_n=self.block_n,
+                                    block_k=self.block_k,
+                                    interpret=self.interpret)
+
+    def lloyd_stats(self, points, centers, weights=None):
+        from repro.kernels import ops as kops
+
+        return kops.lloyd_stats(points, centers, weights,
+                                block_n=self.block_n,
+                                interpret=self.interpret)
+
+
+# ---------------------------------------------------------------------------
+# registry + ambient default
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ClusteringBackend] = {}
+_local = threading.local()
+
+
+def register_backend(backend: ClusteringBackend, name: Optional[str] = None
+                     ) -> ClusteringBackend:
+    """Add a backend instance to the registry (future GPU/Triton or sparse
+    backends are one ``register_backend`` call).
+
+    Overriding an existing name is allowed here (explicitly) but note that
+    jitted entry points cache compiled traces keyed on the *name*: traces
+    already compiled against the old instance are not invalidated."""
+    _REGISTRY[name or backend.name] = backend
+    return backend
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+register_backend(JnpBackend())
+register_backend(JnpChunkedBackend())
+register_backend(PallasBackend())
+
+
+def _auto_name() -> str:
+    """Pallas on TPU (the kernels' target); dense jnp elsewhere (interpret
+    mode is orders of magnitude slower than XLA on CPU, so it is opt-in)."""
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def default_backend_name() -> str:
+    name = getattr(_local, "default", None)
+    return name if name is not None else _auto_name()
+
+
+def resolve_name(backend: BackendLike) -> str:
+    """Resolve a selection to a concrete registry name (for use as a static
+    jit argument). Must be called *outside* jit for ``None`` to track the
+    ambient default correctly."""
+    if backend is None:
+        return default_backend_name()
+    if isinstance(backend, str):
+        if backend not in _REGISTRY:
+            raise KeyError(
+                f"unknown clustering backend {backend!r}; "
+                f"available: {available_backends()}")
+        return backend
+    name = getattr(backend, "name", None)
+    if not name:
+        raise TypeError(f"backend must be a name or ClusteringBackend, got "
+                        f"{type(backend).__name__}")
+    existing = _REGISTRY.get(name)
+    if existing is None:
+        register_backend(backend, name)
+    elif existing is not backend:
+        # never silently shadow: jit caches key on the name, so a second
+        # instance under the same name would hit the first instance's
+        # compiled traces and be silently ignored.
+        raise ValueError(
+            f"a different backend is already registered as {name!r}; give "
+            f"this instance a unique .name or call register_backend() "
+            f"explicitly to override")
+    return name
+
+
+def get_backend(backend: BackendLike = None) -> ClusteringBackend:
+    """Resolve a selection to a backend instance."""
+    if backend is not None and not isinstance(backend, str):
+        resolve_name(backend)  # validate + register
+        return backend
+    return _REGISTRY[resolve_name(backend)]
+
+
+class use_backend:
+    """Set the ambient default backend.
+
+    Works both as a plain call (``use_backend("pallas")`` -- sticky) and as
+    a context manager (restores the previous default on exit)::
+
+        with use_backend("jnp_chunked"):
+            lloyd(points, centers)          # runs chunked
+    """
+
+    def __init__(self, backend: BackendLike):
+        self._prev = getattr(_local, "default", None)
+        _local.default = resolve_name(backend)
+
+    def __enter__(self) -> ClusteringBackend:
+        return get_backend()
+
+    def __exit__(self, *exc) -> bool:
+        _local.default = self._prev
+        return False

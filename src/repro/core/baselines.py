@@ -20,7 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backend as backend_mod
 from repro.core import clustering
+from repro.core.backend import BackendLike
 from repro.core.comm import CommLedger, flood_cost
 from repro.core.coreset import Coreset, build_coreset
 from repro.core.topology import Graph, SpanningTree
@@ -36,6 +38,7 @@ def combine(
     t_total: int,
     objective: str = "kmeans",
     lloyd_iters: int = 5,
+    backend: BackendLike = None,
 ) -> Coreset:
     """Union of per-site local coresets, each of sample size t_total // n.
 
@@ -44,12 +47,13 @@ def combine(
     """
     n_sites = site_points.shape[0]
     s = max(t_total // n_sites, 1)
+    backend = backend_mod.resolve_name(backend)
     keys = jax.random.split(key, n_sites)
     w = site_mask.astype(site_points.dtype)
 
     def one(ki, pts, wi):
         cs = build_coreset(ki, pts, k, s, weights=wi, objective=objective,
-                           lloyd_iters=lloyd_iters)
+                           lloyd_iters=lloyd_iters, backend=backend)
         return cs.points, cs.weights
 
     pts, ws = jax.vmap(one)(keys, site_points, w)
@@ -76,6 +80,7 @@ def zhang_tree(
     s: int,
     objective: str = "kmeans",
     lloyd_iters: int = 5,
+    backend: BackendLike = None,
 ) -> Tuple[Coreset, CommLedger]:
     """Coreset-of-coresets, leaves to root. Host-orchestrated (the per-node
     inputs are ragged); each node's construction is the jitted
@@ -85,6 +90,7 @@ def zhang_tree(
     edge up => (n - 1) * (s + k) points total.
     """
     n_sites, M, d = site_points.shape
+    backend = backend_mod.resolve_name(backend)
     children = tree.children()
     store: List[Tuple[np.ndarray, np.ndarray]] = [None] * n_sites  # type: ignore
     keys = jax.random.split(key, n_sites)
@@ -102,7 +108,7 @@ def zhang_tree(
         ws = np.pad(ws, (0, pad))
         cs = build_coreset(keys[v], jnp.asarray(pts), k, s,
                            weights=jnp.asarray(ws), objective=objective,
-                           lloyd_iters=lloyd_iters)
+                           lloyd_iters=lloyd_iters, backend=backend)
         store[v] = (np.asarray(cs.points), np.asarray(cs.weights))
 
     root_pts, root_w = store[tree.root]

@@ -1,15 +1,18 @@
 """Centralized *weighted* clustering primitives (k-means / k-median).
 
-Pure-JAX implementations used both by the paper's algorithms (local constant
-approximation solves on each site, Algorithm 1 Round 1) and by the final
-clustering of the global coreset (Algorithm 2 Round 2). Every function supports
-per-point weights -- the coreset is a *weighted* instance, possibly with
-negative center weights -- and is jit-compatible with static ``k`` and
-iteration counts.
+Used both by the paper's algorithms (local constant approximation solves on
+each site, Algorithm 1 Round 1) and by the final clustering of the global
+coreset (Algorithm 2 Round 2). Every function supports per-point weights --
+the coreset is a *weighted* instance, possibly with negative center weights
+-- and is jit-compatible with static ``k`` and iteration counts.
 
-The distance hot loop can be routed through the Pallas fused kernel
-(``repro.kernels``) with ``backend="pallas"``; the default ``"jnp"`` path is
-the XLA-fused matmul formulation ``d^2(p,c) = |p|^2 + |c|^2 - 2 p.c``.
+Every distance/statistics hot loop dispatches through the backend registry
+(:mod:`repro.core.backend`): ``backend`` accepts a registry name
+(``"jnp"``, ``"jnp_chunked"``, ``"pallas"``), a :class:`ClusteringBackend`
+instance, or ``None`` for the ambient default (``use_backend`` /
+auto-detection). The k-means Lloyd step consumes the fused one-pass
+``lloyd_stats`` primitive -- on the Pallas backend the (n, k) distance
+matrix never exists in HBM (DESIGN.md Sec. 8).
 """
 from __future__ import annotations
 
@@ -18,6 +21,9 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import backend as backend_mod
+from repro.core.backend import BackendLike
 
 Array = jax.Array
 
@@ -37,32 +43,29 @@ def min_dist_argmin(
     points: Array,
     centers: Array,
     chunk: Optional[int] = None,
-    backend: str = "jnp",
+    backend: BackendLike = None,
 ) -> Tuple[Array, Array]:
-    """Min squared distance and argmin center per point.
+    """Min squared distance and argmin center per point, via the dispatch
+    layer. ``chunk`` bounds the materialized (chunk, k) distance block of
+    the dense jnp path for large n: it upgrades a resolved ``jnp`` backend
+    (explicit or ambient) to a chunked one, and is ignored by backends that
+    already bound their memory (pallas tiles, jnp_chunked's own chunk)."""
+    b = backend_mod.get_backend(backend)
+    if chunk is not None and type(b) is backend_mod.JnpBackend:
+        b = backend_mod.JnpChunkedBackend(chunk)
+    return b.min_dist_argmin(points, centers)
 
-    ``chunk`` bounds the materialized (chunk, k) distance block for large n.
-    ``backend="pallas"`` routes through the fused TPU kernel (see
-    ``repro.kernels.ops``).
-    """
-    if backend == "pallas":
-        from repro.kernels import ops as kops
 
-        return kops.min_dist_argmin(points, centers)
-    n = points.shape[0]
-    if chunk is None or n <= chunk:
-        d2 = pairwise_sq_dists(points, centers)
-        return jnp.min(d2, axis=-1), jnp.argmin(d2, axis=-1).astype(jnp.int32)
-    pad = (-n) % chunk
-    pts = jnp.pad(points, ((0, pad), (0, 0)))
-    pts = pts.reshape(-1, chunk, points.shape[1])
-
-    def one(block):
-        d2 = pairwise_sq_dists(block, centers)
-        return jnp.min(d2, axis=-1), jnp.argmin(d2, axis=-1).astype(jnp.int32)
-
-    md, am = jax.lax.map(one, pts)
-    return md.reshape(-1)[:n], am.reshape(-1)[:n]
+def lloyd_stats(
+    points: Array,
+    centers: Array,
+    weights: Optional[Array] = None,
+    backend: BackendLike = None,
+) -> Tuple[Array, Array, Array]:
+    """Fused weighted Lloyd statistics (sums (k,d), counts (k,), cost ())
+    via the dispatch layer."""
+    return backend_mod.get_backend(backend).lloyd_stats(
+        points, centers, weights)
 
 
 def cost(
@@ -71,9 +74,11 @@ def cost(
     weights: Optional[Array] = None,
     objective: str = "kmeans",
     chunk: Optional[int] = None,
+    backend: BackendLike = None,
 ) -> Array:
-    """Weighted clustering cost: sum_p w_p d(p, X)^2 (k-means) or ^1 (k-median)."""
-    d2, _ = min_dist_argmin(points, centers, chunk=chunk)
+    """Weighted clustering cost: sum_p w_p d(p, X)^2 (k-means) or ^1
+    (k-median)."""
+    d2, _ = min_dist_argmin(points, centers, chunk=chunk, backend=backend)
     per_point = d2 if objective == "kmeans" else jnp.sqrt(d2)
     if weights is not None:
         per_point = per_point * weights
@@ -85,36 +90,49 @@ def point_costs(
     centers: Array,
     objective: str = "kmeans",
     chunk: Optional[int] = None,
+    backend: BackendLike = None,
 ) -> Tuple[Array, Array]:
     """Per-point cost to the nearest center and the assignment (n,), (n,)."""
-    d2, assign = min_dist_argmin(points, centers, chunk=chunk)
+    d2, assign = min_dist_argmin(points, centers, chunk=chunk,
+                                 backend=backend)
     c = d2 if objective == "kmeans" else jnp.sqrt(d2)
     return c, assign
 
 
-@functools.partial(jax.jit, static_argnames=("k", "objective"))
 def kmeans_pp_init(
     key: Array,
     points: Array,
     k: int,
     weights: Optional[Array] = None,
     objective: str = "kmeans",
+    backend: BackendLike = None,
 ) -> Array:
     """k-means++ (D^2) / k-median++ (D^1) seeding with optional weights.
 
     Weight-0 points (padding) are never selected: the categorical logits are
     ``log(w * D^power)`` which is -inf for them.
     """
+    return _kmeans_pp_init(key, points, weights, k=k, objective=objective,
+                           backend=backend_mod.resolve_name(backend))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "objective", "backend"))
+def _kmeans_pp_init(key, points, weights, k, objective, backend):
+    b = backend_mod.get_backend(backend)
     n, d = points.shape
     w = jnp.ones((n,), points.dtype) if weights is None else weights
     w = jnp.maximum(w, 0.0)
     power = 1.0 if objective == "kmedian" else 2.0
 
+    def dist_to(c):
+        # distance of every point to one candidate center, via the backend
+        d2 = b.min_dist_argmin(points, c[None, :])[0]
+        return d2 if power == 2.0 else jnp.sqrt(jnp.maximum(d2, 0.0))
+
     key, k0 = jax.random.split(key)
     first = jax.random.categorical(k0, jnp.log(w + _TINY))
     centers = jnp.zeros((k, d), points.dtype).at[0].set(points[first])
-    d2 = jnp.sum((points - points[first]) ** 2, axis=-1)
-    mind = d2 if power == 2.0 else jnp.sqrt(jnp.maximum(d2, 0.0))
+    mind = dist_to(points[first])
 
     def body(i, carry):
         centers, mind, key = carry
@@ -123,32 +141,27 @@ def kmeans_pp_init(
         idx = jax.random.categorical(ki, logits)
         c = points[idx]
         centers = centers.at[i].set(c)
-        d2 = jnp.sum((points - c) ** 2, axis=-1)
-        dnew = d2 if power == 2.0 else jnp.sqrt(jnp.maximum(d2, 0.0))
-        mind = jnp.minimum(mind, dnew)
+        mind = jnp.minimum(mind, dist_to(c))
         return centers, mind, key
 
     centers, _, _ = jax.lax.fori_loop(1, k, body, (centers, mind, key))
     return centers
 
 
-def _kmeans_update(points, weights, centers, k):
-    """One weighted Lloyd step for the k-means objective."""
-    d2, assign = min_dist_argmin(points, centers)
-    oh = jax.nn.one_hot(assign, k, dtype=points.dtype)
-    ww = oh * weights[:, None]
-    sums = ww.T @ points                       # (k, d)
-    counts = jnp.sum(ww, axis=0)               # (k,)
+def _kmeans_update(points, weights, centers, k, b):
+    """One weighted Lloyd step for the k-means objective: a single fused
+    statistics pass (assignment + per-cluster sums/counts + cost)."""
+    sums, counts, c = b.lloyd_stats(points, centers, weights)
     new = sums / jnp.where(counts > _EPS, counts, 1.0)[:, None]
-    new = jnp.where((counts > _EPS)[:, None], new, centers)
-    c = jnp.sum(weights * d2)
-    return new, c
+    new = jnp.where((counts > _EPS)[:, None], new,
+                    centers.astype(jnp.float32))
+    return new.astype(centers.dtype), c
 
 
-def _kmedian_update(points, weights, centers, k, weiszfeld_iters=4):
+def _kmedian_update(points, weights, centers, k, b, weiszfeld_iters=4):
     """One weighted alternating step for k-median: assign + per-cluster
     Weiszfeld geometric-median refinement."""
-    d2, assign = min_dist_argmin(points, centers)
+    d2, assign = b.min_dist_argmin(points, centers)
     oh = jax.nn.one_hot(assign, k, dtype=points.dtype)
     memb = oh * jnp.maximum(weights, 0.0)[:, None]   # (n, k)
 
@@ -168,7 +181,6 @@ def _kmedian_update(points, weights, centers, k, weiszfeld_iters=4):
     return new, c
 
 
-@functools.partial(jax.jit, static_argnames=("iters", "objective", "k"))
 def lloyd(
     points: Array,
     centers: Array,
@@ -176,6 +188,7 @@ def lloyd(
     iters: int = 10,
     objective: str = "kmeans",
     k: Optional[int] = None,
+    backend: BackendLike = None,
 ) -> Tuple[Array, Array]:
     """Weighted Lloyd iterations. Returns (centers, cost_history (iters,)).
 
@@ -183,20 +196,26 @@ def lloyd(
     weight is <= eps keep their previous center.
     """
     k = centers.shape[0] if k is None else k
-    w = jnp.ones((points.shape[0],), points.dtype) if weights is None else weights
+    return _lloyd(points, centers, weights, iters=iters, objective=objective,
+                  k=k, backend=backend_mod.resolve_name(backend))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("iters", "objective", "k", "backend"))
+def _lloyd(points, centers, weights, iters, objective, k, backend):
+    b = backend_mod.get_backend(backend)
+    w = jnp.ones((points.shape[0],), points.dtype) if weights is None \
+        else weights
     upd = _kmeans_update if objective == "kmeans" else _kmedian_update
 
     def body(centers, _):
-        new, c = upd(points, w, centers, k)
+        new, c = upd(points, w, centers, k, b)
         return new, c
 
     centers, hist = jax.lax.scan(body, centers, None, length=iters)
     return centers, hist
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("k", "lloyd_iters", "objective",
-                                    "restarts"))
 def solve(
     key: Array,
     points: Array,
@@ -205,6 +224,7 @@ def solve(
     lloyd_iters: int = 10,
     objective: str = "kmeans",
     restarts: int = 1,
+    backend: BackendLike = None,
 ) -> Tuple[Array, Array]:
     """Constant-approximation solver: k-means++ seeding + Lloyd refinement,
     best of ``restarts`` independent seedings (k-means++ is only O(log k) in
@@ -214,13 +234,24 @@ def solve(
     This is the ``A_alpha`` subroutine of Algorithm 2 and the local solver
     ``B_i`` of Algorithm 1. Returns (centers (k,d), final cost scalar).
     """
+    return _solve(key, points, weights, k=k, lloyd_iters=lloyd_iters,
+                  objective=objective, restarts=restarts,
+                  backend=backend_mod.resolve_name(backend))
 
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "lloyd_iters", "objective",
+                                    "restarts", "backend"))
+def _solve(key, points, weights, k, lloyd_iters, objective, restarts,
+           backend):
     def one(ki):
         centers = kmeans_pp_init(ki, points, k, weights=weights,
-                                 objective=objective)
+                                 objective=objective, backend=backend)
         centers, _ = lloyd(points, centers, weights=weights,
-                           iters=lloyd_iters, objective=objective)
-        c = cost(points, centers, weights=weights, objective=objective)
+                           iters=lloyd_iters, objective=objective,
+                           backend=backend)
+        c = cost(points, centers, weights=weights, objective=objective,
+                 backend=backend)
         return centers, c
 
     if restarts == 1:

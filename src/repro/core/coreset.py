@@ -23,6 +23,10 @@ opts into the common non-negative heuristic.
 
 Everything is fixed-shape: sites sample into a ``t_buffer``-slot buffer with a
 validity mask (XLA static shapes; see DESIGN.md Sec. 7).
+
+Both constructions dispatch their distance/statistics hot loops through the
+backend registry (``backend=`` accepts ``"jnp"``/``"jnp_chunked"``/
+``"pallas"`` or ``None`` for the ambient default; DESIGN.md Sec. 8).
 """
 from __future__ import annotations
 
@@ -33,7 +37,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as backend_mod
 from repro.core import clustering
+from repro.core.backend import BackendLike
 
 Array = jax.Array
 _TINY = 1e-30
@@ -61,9 +67,11 @@ class Coreset:
 
 
 def sensitivities(points: Array, centers: Array, weights: Array,
-                  objective: str = "kmeans") -> Tuple[Array, Array]:
+                  objective: str = "kmeans", backend: BackendLike = None
+                  ) -> Tuple[Array, Array]:
     """Per-point sampling mass m_p = w_p * cost(p, B) and assignments."""
-    c, assign = clustering.point_costs(points, centers, objective=objective)
+    c, assign = clustering.point_costs(points, centers, objective=objective,
+                                       backend=backend)
     return weights * c, assign
 
 
@@ -103,9 +111,6 @@ def _sample_and_weight(key: Array, points: Array, m: Array, weights: Array,
     return sampled, w_s, w_b
 
 
-@functools.partial(
-    jax.jit, static_argnames=("k", "t", "objective", "lloyd_iters",
-                              "clip_negative"))
 def build_coreset(
     key: Array,
     points: Array,
@@ -115,17 +120,31 @@ def build_coreset(
     objective: str = "kmeans",
     lloyd_iters: int = 5,
     clip_negative: bool = False,
+    backend: BackendLike = None,
 ) -> Coreset:
     """Centralized [10]-style coreset of ``t`` samples + ``k`` solution
     centers on a weighted instance. Output size t + k."""
+    return _build_coreset(key, points, weights, k=k, t=t,
+                          objective=objective, lloyd_iters=lloyd_iters,
+                          clip_negative=clip_negative,
+                          backend=backend_mod.resolve_name(backend))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "t", "objective", "lloyd_iters",
+                              "clip_negative", "backend"))
+def _build_coreset(key, points, weights, k, t, objective, lloyd_iters,
+                   clip_negative, backend):
     n = points.shape[0]
     w = jnp.ones((n,), points.dtype) if weights is None else weights
     key, ks = jax.random.split(key)
     centers = clustering.kmeans_pp_init(key, points, k, weights=w,
-                                        objective=objective)
+                                        objective=objective, backend=backend)
     centers, _ = clustering.lloyd(points, centers, weights=w,
-                                  iters=lloyd_iters, objective=objective)
-    m, assign = sensitivities(points, centers, w, objective=objective)
+                                  iters=lloyd_iters, objective=objective,
+                                  backend=backend)
+    m, assign = sensitivities(points, centers, w, objective=objective,
+                              backend=backend)
     total_m = jnp.sum(m)
     sampled, w_s, w_b = _sample_and_weight(
         ks, points, m, w, assign, k, jnp.asarray(t), t, total_m,
@@ -138,9 +157,16 @@ def build_coreset(
 
 def proportional_allocation(costs: Array, t: int) -> Array:
     """Largest-remainder allocation of ``t`` samples proportional to local
-    costs: sum_i t_i == t exactly, t_i ~= t * cost_i / sum_j cost_j."""
-    total = jnp.maximum(jnp.sum(costs), _TINY)
-    frac = t * costs / total
+    costs: sum_i t_i == t exactly, t_i ~= t * cost_i / sum_j cost_j.
+
+    Degenerate all-zero costs (every site already solves its data exactly)
+    fall back to the uniform allocation -- the sum-to-``t`` invariant must
+    hold for any input, since Round 2 draws exactly ``t_i`` samples."""
+    n_sites = costs.shape[0]
+    total = jnp.sum(costs)
+    frac = jnp.where(total > _TINY,
+                     t * costs / jnp.maximum(total, _TINY),
+                     jnp.full_like(costs, t / n_sites))
     base = jnp.floor(frac)
     rem = t - jnp.sum(base).astype(jnp.int32)
     # rank sites by fractional part, give the remainder to the top-`rem`
@@ -173,10 +199,6 @@ class DistributedCoreset:
                        weights=self.weights.reshape(-1))
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("k", "t", "t_buffer", "objective", "lloyd_iters",
-                     "clip_negative"))
 def distributed_coreset(
     key: Array,
     site_points: Array,          # (n_sites, M, d) padded
@@ -187,6 +209,7 @@ def distributed_coreset(
     objective: str = "kmeans",
     lloyd_iters: int = 5,
     clip_negative: bool = False,
+    backend: BackendLike = None,
 ) -> DistributedCoreset:
     """Algorithm 1 over all sites at once (vmapped host simulation).
 
@@ -195,8 +218,21 @@ def distributed_coreset(
     SPMD/mesh execution of the same math lives in
     :mod:`repro.core.distributed`.
     """
-    n_sites, M, d = site_points.shape
     t_buffer = t if t_buffer is None else t_buffer
+    return _distributed_coreset(key, site_points, site_mask, k=k, t=t,
+                                t_buffer=t_buffer, objective=objective,
+                                lloyd_iters=lloyd_iters,
+                                clip_negative=clip_negative,
+                                backend=backend_mod.resolve_name(backend))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "t", "t_buffer", "objective", "lloyd_iters",
+                     "clip_negative", "backend"))
+def _distributed_coreset(key, site_points, site_mask, k, t, t_buffer,
+                         objective, lloyd_iters, clip_negative, backend):
+    n_sites, M, d = site_points.shape
     w_site = site_mask.astype(site_points.dtype)
 
     keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
@@ -204,10 +240,13 @@ def distributed_coreset(
     # -- Round 1: local constant-approximation solves ------------------------
     def local_solve(ki, pts, w):
         centers = clustering.kmeans_pp_init(ki, pts, k, weights=w,
-                                            objective=objective)
+                                            objective=objective,
+                                            backend=backend)
         centers, _ = clustering.lloyd(pts, centers, weights=w,
-                                      iters=lloyd_iters, objective=objective)
-        m, assign = sensitivities(pts, centers, w, objective=objective)
+                                      iters=lloyd_iters, objective=objective,
+                                      backend=backend)
+        m, assign = sensitivities(pts, centers, w, objective=objective,
+                                  backend=backend)
         return centers, m, assign
 
     centers, m, assign = jax.vmap(local_solve)(keys[:, 0], site_points, w_site)

@@ -22,13 +22,17 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import backend as backend_mod
 from repro.core import clustering
+from repro.core.backend import BackendLike
 from repro.core.comm import (CommLedger, flood_cost, tree_broadcast_cost,
                              tree_up_cost)
 from repro.core.coreset import (Coreset, DistributedCoreset,
                                 distributed_coreset, proportional_allocation,
                                 sensitivities, _sample_and_weight)
 from repro.core.topology import Graph, SpanningTree
+
+from repro.compat import shard_map as _shard_map
 
 Array = jax.Array
 
@@ -42,12 +46,13 @@ class ClusteringResult:
 
 
 def _solve_on_coreset(key: Array, cs: Coreset, k: int, objective: str,
-                      lloyd_iters: int) -> Array:
+                      lloyd_iters: int, backend: BackendLike = None) -> Array:
     centers = clustering.kmeans_pp_init(key, cs.points, k,
                                         weights=jnp.maximum(cs.weights, 0.0),
-                                        objective=objective)
+                                        objective=objective, backend=backend)
     centers, _ = clustering.lloyd(cs.points, centers, weights=cs.weights,
-                                  iters=lloyd_iters, objective=objective)
+                                  iters=lloyd_iters, objective=objective,
+                                  backend=backend)
     return centers
 
 
@@ -60,16 +65,19 @@ def distributed_kmeans(
     graph: Graph,
     objective: str = "kmeans",
     lloyd_iters: int = 8,
+    backend: BackendLike = None,
 ) -> ClusteringResult:
     """Algorithm 2 on a general graph. Round 1 floods n scalars (2mn
     messages); Round 2 floods the n local portions (2m * sum_i |D_i|
     points); every node then solves the identical weighted instance."""
     n_sites, _, d = site_points.shape
+    backend = backend_mod.resolve_name(backend)
     k1, k2 = jax.random.split(key)
     dc = distributed_coreset(k1, site_points, site_mask, k, t,
-                             objective=objective, lloyd_iters=lloyd_iters)
+                             objective=objective, lloyd_iters=lloyd_iters,
+                             backend=backend)
     cs = dc.flatten()
-    centers = _solve_on_coreset(k2, cs, k, objective, lloyd_iters)
+    centers = _solve_on_coreset(k2, cs, k, objective, lloyd_iters, backend)
 
     portion_pts = float(jnp.sum(dc.t_i)) + graph.n * k
     ledger = flood_cost(graph, n_messages=graph.n, unit_scalars=1.0)
@@ -87,17 +95,20 @@ def distributed_kmeans_tree(
     tree: SpanningTree,
     objective: str = "kmeans",
     lloyd_iters: int = 8,
+    backend: BackendLike = None,
 ) -> ClusteringResult:
     """Algorithm 2 restricted to a rooted tree (Theorem 3): costs are summed
     up the tree (n-1 scalars), the total is broadcast down (n-1 scalars),
     portions travel depth(v) edges to the root, the solution (k points) is
     broadcast back."""
     n_sites, _, d = site_points.shape
+    backend = backend_mod.resolve_name(backend)
     k1, k2 = jax.random.split(key)
     dc = distributed_coreset(k1, site_points, site_mask, k, t,
-                             objective=objective, lloyd_iters=lloyd_iters)
+                             objective=objective, lloyd_iters=lloyd_iters,
+                             backend=backend)
     cs = dc.flatten()
-    centers = _solve_on_coreset(k2, cs, k, objective, lloyd_iters)
+    centers = _solve_on_coreset(k2, cs, k, objective, lloyd_iters, backend)
 
     t_i = [float(x) for x in dc.t_i]
     per_node = [t_i[v] + k for v in range(tree.n)]
@@ -121,6 +132,7 @@ def spmd_distributed_kmeans_fn(
     objective: str = "kmeans",
     lloyd_iters: int = 8,
     final_lloyd_iters: int = 10,
+    backend: BackendLike = None,
 ):
     """Build the per-device function for Algorithm 1+2 under ``shard_map``.
 
@@ -128,7 +140,10 @@ def spmd_distributed_kmeans_fn(
     exactly: one scalar psum (Round 1) + one all_gather of the fixed-size
     local portion (Round 2) -- the paper's communication pattern mapped onto
     the ICI collectives that implement neighbour message passing natively.
+    The ``backend`` hot-loop selection composes with ``shard_map``: the
+    Pallas kernels run per-device on that device's shard.
     """
+    backend = backend_mod.resolve_name(backend)
 
     def per_device(key: Array, pts: Array, mask: Array):
         w = mask.astype(pts.dtype)
@@ -138,10 +153,13 @@ def spmd_distributed_kmeans_fn(
 
         # Round 1: local solve + single-scalar communication
         centers = clustering.kmeans_pp_init(k_solve, pts, k, weights=w,
-                                            objective=objective)
+                                            objective=objective,
+                                            backend=backend)
         centers, _ = clustering.lloyd(pts, centers, weights=w,
-                                      iters=lloyd_iters, objective=objective)
-        m, assign = sensitivities(pts, centers, w, objective=objective)
+                                      iters=lloyd_iters, objective=objective,
+                                      backend=backend)
+        m, assign = sensitivities(pts, centers, w, objective=objective,
+                                  backend=backend)
         local_cost = jnp.sum(m)
         total_cost = jax.lax.psum(local_cost, axis_name)       # <- Round 1
 
@@ -166,9 +184,10 @@ def spmd_distributed_kmeans_fn(
         k_final = jax.random.fold_in(key, 0)
         fc = clustering.kmeans_pp_init(k_final, cs_pts, k,
                                        weights=jnp.maximum(cs_w, 0.0),
-                                       objective=objective)
+                                       objective=objective, backend=backend)
         fc, _ = clustering.lloyd(cs_pts, fc, weights=cs_w,
-                                 iters=final_lloyd_iters, objective=objective)
+                                 iters=final_lloyd_iters, objective=objective,
+                                 backend=backend)
         return fc, local_cost[None], t_local[None]
 
     return per_device
@@ -185,6 +204,7 @@ def spmd_distributed_kmeans(
     t_buffer: Optional[int] = None,
     objective: str = "kmeans",
     lloyd_iters: int = 8,
+    backend: BackendLike = None,
 ) -> Tuple[Array, Array]:
     """Run the SPMD path on a mesh. Returns (centers (k,d), local_costs)."""
     n_sites = site_points.shape[0]
@@ -195,7 +215,7 @@ def spmd_distributed_kmeans(
     t_buffer = t_buffer if t_buffer is not None else max(
         4 * t // max(n_sites, 1), 64)
     fn = spmd_distributed_kmeans_fn(axis_name, n_sites, k, t, t_buffer,
-                                    objective, lloyd_iters)
+                                    objective, lloyd_iters, backend=backend)
 
     def device_fn(key, pts, mask):
         # collapse the per-device leading site-block dim (sites/device >= 1)
@@ -203,11 +223,10 @@ def spmd_distributed_kmeans(
         mask = mask.reshape(-1)
         return fn(key, pts, mask)
 
-    shard = jax.shard_map(
+    shard = _shard_map(
         device_fn, mesh=mesh,
         in_specs=(P(), P(axis_name), P(axis_name)),
         out_specs=(P(), P(axis_name), P(axis_name)),
-        check_vma=False,
     )
     centers, local_costs, t_i = jax.jit(shard)(key, site_points, site_mask)
     return centers, local_costs

@@ -23,7 +23,9 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as backend_mod
 from repro.core import clustering
+from repro.core.backend import BackendLike
 from repro.core.coreset import proportional_allocation
 
 Array = jax.Array
@@ -50,8 +52,6 @@ class Selection:
     local_costs: Array  # (n_sites,)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("k", "t", "t_buffer", "lloyd_iters"))
 def select_coreset(
     key: Array,
     embeddings: Array,        # (n_sites, M, d) f32
@@ -60,6 +60,7 @@ def select_coreset(
     t: int,
     t_buffer: int | None = None,
     lloyd_iters: int = 5,
+    backend: BackendLike = None,
 ) -> Selection:
     """Algorithm 1 over example embeddings, returning indices.
 
@@ -67,16 +68,28 @@ def select_coreset(
     nearest each local center joins the selection, carrying the center weight
     w_b = |P_b| - sum_{q in P_b cap S} w_q.
     """
-    n_sites, M, d = embeddings.shape
     t_buffer = t if t_buffer is None else t_buffer
+    return _select_coreset(key, embeddings, mask, k=k, t=t,
+                           t_buffer=t_buffer, lloyd_iters=lloyd_iters,
+                           backend=backend_mod.resolve_name(backend))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "t", "t_buffer", "lloyd_iters",
+                                    "backend"))
+def _select_coreset(key, embeddings, mask, k, t, t_buffer, lloyd_iters,
+                    backend):
+    n_sites, M, d = embeddings.shape
     w_site = mask.astype(jnp.float32)
     keys = jax.random.split(key, 2 * n_sites).reshape(n_sites, 2, -1)
 
     def local_solve(ki, pts, w):
-        centers = clustering.kmeans_pp_init(ki, pts, k, weights=w)
+        centers = clustering.kmeans_pp_init(ki, pts, k, weights=w,
+                                            backend=backend)
         centers, _ = clustering.lloyd(pts, centers, weights=w,
-                                      iters=lloyd_iters)
-        d2, assign = clustering.min_dist_argmin(pts, centers)
+                                      iters=lloyd_iters, backend=backend)
+        d2, assign = clustering.min_dist_argmin(pts, centers,
+                                                backend=backend)
         m = w * d2
         # nearest real example per center (masked argmin over the column)
         dc = clustering.pairwise_sq_dists(centers, pts)

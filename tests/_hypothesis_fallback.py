@@ -1,0 +1,102 @@
+"""Deterministic fallback for the ``hypothesis`` property-testing API.
+
+The test suite uses a small slice of hypothesis (``given``, ``settings``,
+``strategies.integers`` / ``floats`` / ``sampled_from`` / ``booleans``).
+Some execution environments cannot install the real package; this module
+provides a drop-in subset so the property tests still *collect and run*
+everywhere -- as seeded random sweeps rather than shrinking searches.
+
+``tests/conftest.py`` installs it into ``sys.modules["hypothesis"]`` only
+when the real package is missing; with hypothesis installed this module is
+inert. The examples are derived from a CRC of the test's qualified name, so
+runs are reproducible.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_kw) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rnd: bool(rnd.getrandbits(1)))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    seq = list(elements)
+    return SearchStrategy(lambda rnd: seq[rnd.randrange(len(seq))])
+
+
+def given(**kw_strategies):
+    def decorate(test_fn):
+        @functools.wraps(test_fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            rnd = random.Random(
+                zlib.crc32(test_fn.__qualname__.encode("utf-8")))
+            for _ in range(n):
+                drawn = {name: s.example_from(rnd)
+                         for name, s in kw_strategies.items()}
+                test_fn(*args, **kwargs, **drawn)
+
+        # pytest must not see the strategy-bound params (it would try to
+        # resolve them as fixtures): report the signature without them and
+        # drop the __wrapped__ shortcut functools.wraps installed.
+        sig = inspect.signature(test_fn)
+        kept = [p for name, p in sig.parameters.items()
+                if name not in kw_strategies]
+        del wrapper.__wrapped__
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=test_fn)
+        return wrapper
+
+    return decorate
+
+
+class settings:
+    def __init__(self, max_examples: int = DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, wrapped):
+        wrapped._fallback_max_examples = self.max_examples
+        return wrapped
+
+
+def build_module() -> types.ModuleType:
+    """Assemble importable ``hypothesis`` + ``hypothesis.strategies``."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.__doc__ = __doc__
+    hyp.given = given
+    hyp.settings = settings
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.booleans = booleans
+    st.sampled_from = sampled_from
+    st.SearchStrategy = SearchStrategy
+    hyp.strategies = st
+    return hyp

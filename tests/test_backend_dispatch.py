@@ -1,0 +1,222 @@
+"""Unified backend dispatch layer: registry semantics + numerical parity of
+the jnp / jnp_chunked / pallas backends across the full pipeline (the
+acceptance bar: pallas in interpret mode matches jnp on final coreset
+weights and clustering cost within float32 tolerance on a weighted
+instance)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backend as backend_mod
+from repro.core import clustering
+from repro.core.backend import (JnpChunkedBackend, available_backends,
+                                get_backend, use_backend)
+from repro.core.coreset import build_coreset, distributed_coreset
+from repro.core.partition import pad_partition, partition_indices
+
+KEY = jax.random.PRNGKey(0)
+BACKENDS = ["jnp", "jnp_chunked", "pallas"]
+
+
+def _weighted_instance(seed=0, n_per=250, k=4, d=8):
+    rng = np.random.default_rng(seed)
+    centers = 3.0 * rng.standard_normal((k, d))
+    pts = np.concatenate(
+        [centers[i] + 0.15 * rng.standard_normal((n_per, d))
+         for i in range(k)]).astype(np.float32)
+    w = np.abs(rng.standard_normal(len(pts))).astype(np.float32) + 0.1
+    return jnp.asarray(pts), jnp.asarray(w), k
+
+
+# -- registry semantics ------------------------------------------------------
+
+def test_registry_exposes_all_three_backends():
+    assert set(BACKENDS) <= set(available_backends())
+    for name in BACKENDS:
+        assert get_backend(name).name == name
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(KeyError, match="unknown clustering backend"):
+        get_backend("triton")
+
+
+def test_use_backend_context_sets_and_restores_default():
+    base = backend_mod.default_backend_name()
+    with use_backend("jnp_chunked") as b:
+        assert b.name == "jnp_chunked"
+        assert backend_mod.default_backend_name() == "jnp_chunked"
+        with use_backend("jnp"):
+            assert backend_mod.default_backend_name() == "jnp"
+        assert backend_mod.default_backend_name() == "jnp_chunked"
+    assert backend_mod.default_backend_name() == base
+
+
+def test_conflicting_instance_under_registered_name_raises():
+    """jit caches key on the backend *name*; a second instance under an
+    existing name must fail loudly instead of silently hitting the first
+    instance's compiled traces."""
+    imposter = JnpChunkedBackend(chunk=7, name="jnp")
+    with pytest.raises(ValueError, match="already registered"):
+        backend_mod.resolve_name(imposter)
+
+
+def test_chunk_arg_upgrades_dense_jnp_but_respects_other_backends():
+    """chunk bounds the dense jnp path's memory (explicit or ambient); it
+    must not override an explicitly or ambiently selected non-jnp backend."""
+    pts, w, k = _weighted_instance(n_per=100)
+    ctr = pts[:4]
+    ref_md, ref_am = clustering.min_dist_argmin(pts, ctr, backend="jnp")
+    # explicit jnp + chunk: chunked semantics, same numbers
+    md, am = clustering.min_dist_argmin(pts, ctr, chunk=64, backend="jnp")
+    np.testing.assert_allclose(np.asarray(md), np.asarray(ref_md),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(am), np.asarray(ref_am))
+    # ambient non-jnp default + chunk: the ambient choice wins
+    calls = []
+    orig = backend_mod.PallasBackend.min_dist_argmin
+    backend_mod.PallasBackend.min_dist_argmin = (
+        lambda self, p, c: calls.append(1) or orig(self, p, c))
+    try:
+        with use_backend("pallas"):
+            clustering.min_dist_argmin(pts, ctr, chunk=64)
+    finally:
+        backend_mod.PallasBackend.min_dist_argmin = orig
+    assert calls, "chunk= must not override the ambient pallas backend"
+
+
+def test_custom_backend_instance_is_registered_and_dispatchable():
+    b = JnpChunkedBackend(chunk=64, name="jnp_chunked_64")
+    pts, w, k = _weighted_instance()
+    ctr = pts[:k]
+    md_c, am_c = clustering.min_dist_argmin(pts, ctr, backend=b)
+    md_d, am_d = clustering.min_dist_argmin(pts, ctr, backend="jnp")
+    np.testing.assert_allclose(np.asarray(md_c), np.asarray(md_d), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(am_c), np.asarray(am_d))
+    assert "jnp_chunked_64" in available_backends()
+
+
+# -- primitive-op parity -----------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_min_dist_argmin_parity(backend):
+    pts, w, k = _weighted_instance()
+    ctr = pts[: k + 3]
+    md, am = clustering.min_dist_argmin(pts, ctr, backend=backend)
+    md_ref, am_ref = clustering.min_dist_argmin(pts, ctr, backend="jnp")
+    np.testing.assert_allclose(np.asarray(md), np.asarray(md_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(am), np.asarray(am_ref))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_lloyd_stats_parity_weighted(backend):
+    pts, w, k = _weighted_instance(seed=1)
+    ctr = pts[:6]
+    sums, counts, cost = clustering.lloyd_stats(pts, ctr, w, backend=backend)
+    sums_r, counts_r, cost_r = clustering.lloyd_stats(pts, ctr, w,
+                                                      backend="jnp")
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(counts_r),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(sums_r),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(float(cost), float(cost_r), rtol=1e-4)
+
+
+def test_chunked_backend_actually_chunks_and_matches():
+    pts, w, k = _weighted_instance(n_per=300)
+    ctr = pts[:5]
+    small = JnpChunkedBackend(chunk=128, name="_tmp_chunk128")
+    sums, counts, cost = small.lloyd_stats(pts, ctr, w)
+    sums_r, counts_r, cost_r = get_backend("jnp").lloyd_stats(pts, ctr, w)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(sums_r),
+                               rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(counts_r),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(float(cost), float(cost_r), rtol=1e-5)
+
+
+# -- end-to-end pipeline parity (acceptance criterion) -----------------------
+
+@pytest.mark.parametrize("backend", ["jnp_chunked", "pallas"])
+def test_lloyd_end_to_end_parity(backend):
+    pts, w, k = _weighted_instance(seed=2)
+    c0 = clustering.kmeans_pp_init(KEY, pts, k, weights=w, backend="jnp")
+    ref, hist_ref = clustering.lloyd(pts, c0, weights=w, iters=5,
+                                     backend="jnp")
+    got, hist = clustering.lloyd(pts, c0, weights=w, iters=5,
+                                 backend=backend)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hist), np.asarray(hist_ref),
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("backend", ["jnp_chunked", "pallas"])
+def test_build_coreset_weight_and_cost_parity(backend):
+    """Same key => same draws; the coreset weights and the cost of a probe
+    center set must agree with the jnp backend within f32 tolerance."""
+    pts, w, k = _weighted_instance(seed=3)
+    cs_ref = build_coreset(KEY, pts, k, 100, weights=w, backend="jnp")
+    cs = build_coreset(KEY, pts, k, 100, weights=w, backend=backend)
+    np.testing.assert_allclose(np.asarray(cs.weights),
+                               np.asarray(cs_ref.weights),
+                               rtol=1e-3, atol=5e-2)
+    probe = jax.random.normal(jax.random.PRNGKey(7), (k, pts.shape[1]))
+    c_ref = float(clustering.cost(cs_ref.points, probe,
+                                  weights=cs_ref.weights, backend="jnp"))
+    c_got = float(clustering.cost(cs.points, probe, weights=cs.weights,
+                                  backend=backend))
+    np.testing.assert_allclose(c_got, c_ref, rtol=1e-3)
+
+
+@pytest.mark.parametrize("backend", ["jnp_chunked", "pallas"])
+def test_distributed_coreset_weight_and_cost_parity(backend):
+    pts, w, k = _weighted_instance(seed=4)
+    pts_np = np.asarray(pts)
+    idx = partition_indices(pts_np, 5, "weighted", seed=1)
+    sp, sm = pad_partition(pts_np, idx)
+    sp, sm = jnp.asarray(sp), jnp.asarray(sm)
+    dc_ref = distributed_coreset(KEY, sp, sm, k, 128, backend="jnp")
+    dc = distributed_coreset(KEY, sp, sm, k, 128, backend=backend)
+    np.testing.assert_array_equal(np.asarray(dc.t_i), np.asarray(dc_ref.t_i))
+    np.testing.assert_allclose(np.asarray(dc.weights),
+                               np.asarray(dc_ref.weights),
+                               rtol=1e-3, atol=5e-2)
+    # the final clustering cost on the full data must agree too
+    cs_ref, cs = dc_ref.flatten(), dc.flatten()
+    c_ref = clustering.kmeans_pp_init(KEY, cs_ref.points, k,
+                                      weights=jnp.maximum(cs_ref.weights, 0),
+                                      backend="jnp")
+    c_ref, _ = clustering.lloyd(cs_ref.points, c_ref,
+                                weights=cs_ref.weights, iters=8,
+                                backend="jnp")
+    c_got = clustering.kmeans_pp_init(KEY, cs.points, k,
+                                      weights=jnp.maximum(cs.weights, 0),
+                                      backend=backend)
+    c_got, _ = clustering.lloyd(cs.points, c_got, weights=cs.weights,
+                                iters=8, backend=backend)
+    cost_ref = float(clustering.cost(pts, c_ref))
+    cost_got = float(clustering.cost(pts, c_got))
+    np.testing.assert_allclose(cost_got, cost_ref, rtol=5e-3)
+
+
+def test_negative_weight_coreset_solve_all_backends():
+    """The final coreset solve runs on a signed measure; every backend must
+    keep it finite and consistent."""
+    pts, w, k = _weighted_instance(seed=5)
+    cs = build_coreset(KEY, pts, k, 80, weights=w, backend="jnp")
+    assert float(jnp.min(cs.weights)) < 0.0  # signed measure actually occurs
+    c0 = clustering.kmeans_pp_init(KEY, cs.points, k,
+                                   weights=jnp.maximum(cs.weights, 0))
+    outs = {}
+    for b in BACKENDS:
+        c, hist = clustering.lloyd(cs.points, c0, weights=cs.weights,
+                                   iters=4, backend=b)
+        assert np.isfinite(np.asarray(c)).all()
+        outs[b] = np.asarray(c)
+    np.testing.assert_allclose(outs["jnp_chunked"], outs["jnp"],
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(outs["pallas"], outs["jnp"],
+                               rtol=1e-3, atol=1e-3)

@@ -8,7 +8,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import clustering
 from repro.core.coreset import (build_coreset, distributed_coreset,
-                                proportional_allocation)
+                                proportional_allocation, weighted_choice)
 from repro.core.partition import pad_partition, partition_indices
 
 KEY = jax.random.PRNGKey(0)
@@ -63,6 +63,68 @@ def test_proportional_allocation_sums_to_t():
         assert int(jnp.sum(t_i)) == 100
         frac = np.asarray(100 * costs / jnp.sum(costs))
         assert np.all(np.abs(np.asarray(t_i) - frac) <= 1.0 + 1e-5)
+
+
+def test_proportional_allocation_all_zero_costs_sums_to_t():
+    """Degenerate Round 1: every site solves its data exactly (cost 0).
+    The allocation must fall back to uniform and still sum exactly to t."""
+    for n_sites, t in [(7, 100), (4, 3), (8, 8), (3, 1000)]:
+        costs = jnp.zeros((n_sites,), jnp.float32)
+        t_i = proportional_allocation(costs, t)
+        assert int(jnp.sum(t_i)) == t, (n_sites, t)
+        assert int(jnp.min(t_i)) >= 0
+        # uniform fallback: no site deviates from t/n by more than 1
+        assert np.all(np.abs(np.asarray(t_i) - t / n_sites) <= 1.0)
+
+
+def test_proportional_allocation_exact_ties_sum_to_t():
+    """All sites tie on cost and on fractional part; the largest-remainder
+    bonus must hand out exactly the remainder, never more or fewer."""
+    for n_sites in (3, 6, 7):
+        for t in (10, 99, 100, 101):
+            costs = jnp.full((n_sites,), 2.5, jnp.float32)
+            t_i = proportional_allocation(costs, t)
+            assert int(jnp.sum(t_i)) == t, (n_sites, t)
+            assert np.all(np.abs(np.asarray(t_i) - t / n_sites) <= 1.0)
+
+
+def test_proportional_allocation_single_nonzero_site():
+    costs = jnp.asarray([0.0, 0.0, 5.0, 0.0], jnp.float32)
+    t_i = np.asarray(proportional_allocation(costs, 64))
+    assert t_i.sum() == 64
+    assert t_i[2] == 64  # all samples go to the only costly site
+
+
+def test_weighted_choice_zero_total_mass_yields_valid_indices():
+    """Degenerate single-cluster site: every point sits on its center, all
+    sampling masses are exactly 0. Draws must still be in-range indices
+    (their weights are zeroed downstream by the total_m > tiny guard)."""
+    masses = jnp.zeros((33,), jnp.float32)
+    idx = np.asarray(weighted_choice(jax.random.PRNGKey(3), masses, 50))
+    assert idx.dtype == np.int32
+    assert np.all((idx >= 0) & (idx < 33))
+
+
+def test_weighted_choice_near_zero_total_mass_no_nan_weights():
+    """Masses at the edge of f32 underflow: indices stay valid and the
+    downstream sample-weight formula stays finite."""
+    masses = jnp.full((16,), 1e-38, jnp.float32)
+    idx = weighted_choice(jax.random.PRNGKey(4), masses, 40)
+    assert np.all((np.asarray(idx) >= 0) & (np.asarray(idx) < 16))
+    # single-site distributed construction over a degenerate instance:
+    # all points identical => local cost 0 => no NaN anywhere in the output
+    pts = np.zeros((1, 32, 3), dtype=np.float32)
+    mask = np.ones((1, 32), dtype=bool)
+    dc = distributed_coreset(KEY, jnp.asarray(pts), jnp.asarray(mask),
+                             k=2, t=16)
+    assert np.isfinite(np.asarray(dc.weights)).all()
+    assert np.isfinite(np.asarray(dc.points)).all()
+
+
+def test_weighted_choice_never_draws_zero_mass_entries():
+    masses = jnp.asarray([0.0, 1.0, 0.0, 2.0, 0.0], jnp.float32)
+    idx = np.asarray(weighted_choice(jax.random.PRNGKey(5), masses, 500))
+    assert set(np.unique(idx)) <= {1, 3}
 
 
 @pytest.mark.parametrize("objective", ["kmeans", "kmedian"])
