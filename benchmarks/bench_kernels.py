@@ -19,7 +19,6 @@ Two sections:
 """
 from __future__ import annotations
 
-import json
 import time
 from typing import List
 
@@ -27,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import json_row
 from repro.core import backend as backend_mod
 from repro.core import clustering
 from repro.kernels import ops, ref
@@ -84,18 +84,16 @@ def run_dispatch(out_rows: List[str] | None = None,
                                                   backend=b),
                 pts, ctr, w, reps=1)
 
-            payload = {
-                "backend": name,
-                "interpret": bool(interpreted and name == "pallas"),
-                "chunk": getattr(b, "chunk", None),
-                "n": n, "k": k, "d": d,
-                "min_dist_argmin_us": round(t_mda, 1),
-                "lloyd_stats_us": round(t_ls, 1),
-                "lloyd2_e2e_us": round(t_e2e, 1),
-            }
-            rows.append(f"backend_dispatch/{name}/n={n}/k={k}/d={d},"
-                        f"{t_ls:.0f},json={json.dumps(payload)}")
-            print(rows[-1], flush=True)
+            json_row(
+                rows, f"backend_dispatch/{name}/n={n}/k={k}/d={d}", t_ls,
+                backend=name,
+                interpret=bool(interpreted and name == "pallas"),
+                chunk=getattr(b, "chunk", None),
+                n=n, k=k, d=d,
+                min_dist_argmin_us=round(t_mda, 1),
+                lloyd_stats_us=round(t_ls, 1),
+                lloyd2_e2e_us=round(t_e2e, 1),
+            )
     return rows
 
 

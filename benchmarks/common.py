@@ -8,6 +8,7 @@ data directly (the paper's "k-means cost ratio" vs the Lloyd baseline).
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -92,3 +93,14 @@ def avg_over_runs(fn: Callable[[jax.Array], float], n_runs: int,
                   seed: int = 0) -> float:
     vals = [fn(jax.random.PRNGKey(seed + 100 * r)) for r in range(n_runs)]
     return float(np.mean(vals))
+
+
+def json_row(rows: List[str], name: str, us_per_call: float,
+             **payload) -> str:
+    """Append one ``name,us_per_call,json={...}`` CSV row (the machine-
+    readable format the perf trajectory parses; see bench_kernels /
+    bench_stream) and echo it. Returns the row."""
+    row = f"{name},{us_per_call:.0f},json={json.dumps(payload)}"
+    rows.append(row)
+    print(row, flush=True)
+    return row

@@ -12,7 +12,7 @@ import time
 
 from benchmarks import (bench_comm_scaling, bench_coreset_size,
                         bench_fig2_graphs, bench_fig3_trees, bench_kernels,
-                        bench_roofline)
+                        bench_roofline, bench_stream)
 
 
 def main(argv=None) -> None:
@@ -21,7 +21,7 @@ def main(argv=None) -> None:
                     help="paper-scale datasets and run counts")
     ap.add_argument("--only", default="",
                     help="comma-separated subset: fig2,fig3,comm,size,"
-                         "kernels,roofline")
+                         "kernels,roofline,stream")
     args = ap.parse_args(argv)
     scale = 1.0 if args.full else 0.05
     n_runs = 5 if args.full else 2
@@ -40,6 +40,8 @@ def main(argv=None) -> None:
         bench_coreset_size.run(scale=scale, out_rows=rows)
     if only is None or "kernels" in only:
         bench_kernels.run(out_rows=rows)
+    if only is None or "stream" in only:
+        bench_stream.run(scale=scale, out_rows=rows)
     if only is None or "roofline" in only:
         bench_roofline.run(out_rows=rows)
     print(f"# total {time.time()-t0:.1f}s, {len(rows)-1} rows",

@@ -6,6 +6,10 @@ mixture, builds the distributed coreset (Algorithm 1), clusters it
 while counting every transmitted point (Algorithm 3 ledger).
 
     PYTHONPATH=src python examples/quickstart.py [--backend jnp|jnp_chunked|pallas]
+
+For the streaming counterpart -- merge-and-reduce ingestion, per-site
+streams with periodic aggregation rounds, and live cluster queries -- see
+``examples/streaming.py``.
 """
 import argparse
 

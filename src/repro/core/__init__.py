@@ -4,12 +4,13 @@ on general topologies (Balcan-Ehrlich-Liang 2013)."""
 from repro.core import backend, baselines, clustering, comm, coreset
 from repro.core import distributed, message_passing, partition, topology
 from repro.core.backend import (ClusteringBackend, available_backends,
-                                get_backend, register_backend, use_backend)
+                                get_backend, query_assignments,
+                                register_backend, use_backend)
 from repro.core.clustering import (cost, kmeans_pp_init, lloyd, lloyd_stats,
                                    min_dist_argmin, solve)
 from repro.core.comm import CommLedger
 from repro.core.coreset import (Coreset, DistributedCoreset, build_coreset,
-                                distributed_coreset)
+                                distributed_coreset, merge_coresets)
 from repro.core.distributed import (ClusteringResult, distributed_kmeans,
                                     distributed_kmeans_tree,
                                     spmd_distributed_kmeans)
@@ -20,11 +21,12 @@ __all__ = [
     "backend", "baselines", "clustering", "comm", "coreset", "distributed",
     "message_passing", "partition", "topology",
     "ClusteringBackend", "available_backends", "get_backend",
-    "register_backend", "use_backend",
+    "query_assignments", "register_backend", "use_backend",
     "cost", "kmeans_pp_init", "lloyd", "lloyd_stats", "min_dist_argmin",
     "solve",
     "CommLedger", "Coreset", "DistributedCoreset", "build_coreset",
-    "distributed_coreset", "ClusteringResult", "distributed_kmeans",
+    "distributed_coreset", "merge_coresets",
+    "ClusteringResult", "distributed_kmeans",
     "distributed_kmeans_tree", "spmd_distributed_kmeans",
     "Graph", "SpanningTree", "bfs_spanning_tree", "diameter", "erdos_renyi",
     "grid", "preferential",

@@ -38,6 +38,7 @@ ambient default would be baked into a stale cache entry.
 """
 from __future__ import annotations
 
+import functools
 import threading
 from typing import Dict, Optional, Protocol, Tuple, Union, runtime_checkable
 
@@ -251,6 +252,28 @@ def get_backend(backend: BackendLike = None) -> ClusteringBackend:
         resolve_name(backend)  # validate + register
         return backend
     return _REGISTRY[resolve_name(backend)]
+
+
+def query_assignments(points: Array, centers: Array,
+                      objective: str = "kmeans",
+                      backend: BackendLike = None) -> Tuple[Array, Array]:
+    """Batched cluster-query entry point: nearest center and distance per
+    query point, ``(n, d), (k, d) -> (assign (n,) i32, dist (n,) f32)``.
+
+    This is the serving hot path of :mod:`repro.stream.service` -- one
+    fused ``min_dist_argmin`` pass through the registry (the Pallas
+    ``distance_argmin`` kernel on TPU), with the distance reported in the
+    objective's metric (squared for k-means, euclidean for k-median).
+    """
+    return _query_assignments(points, centers, objective=objective,
+                              backend=resolve_name(backend))
+
+
+@functools.partial(jax.jit, static_argnames=("objective", "backend"))
+def _query_assignments(points, centers, objective, backend):
+    d2, assign = _REGISTRY[backend].min_dist_argmin(points, centers)
+    dist = d2 if objective == "kmeans" else jnp.sqrt(jnp.maximum(d2, 0.0))
+    return assign, dist
 
 
 class use_backend:

@@ -16,32 +16,56 @@ from repro.core.topology import Graph, SpanningTree
 
 @dataclasses.dataclass
 class CommLedger:
-    """Counts of transmitted units, broken down by phase."""
+    """Counts of transmitted units, with an optional per-phase breakdown.
+
+    ``phases`` maps a phase label (e.g. ``"stream_round_3"``) to a
+    totals-only sub-ledger; :meth:`tag` files an untagged ledger under a
+    label, :meth:`add` merges breakdowns label-wise, and
+    ``as_dict(by_phase=True)`` exposes them -- the streaming aggregation
+    rounds report points/scalars/bytes per round this way."""
 
     scalars: float = 0.0          # single float values (local costs)
     points: float = 0.0           # weighted d-dim points
     messages: float = 0.0         # individual edge transmissions
     dim: int = 0                  # point dimensionality (for bytes)
+    phases: Dict[str, "CommLedger"] = dataclasses.field(default_factory=dict)
 
     def add(self, other: "CommLedger") -> "CommLedger":
+        phases = {k: dataclasses.replace(v) for k, v in self.phases.items()}
+        for name, sub in other.phases.items():
+            phases[name] = (phases[name].add(sub) if name in phases
+                            else dataclasses.replace(sub))
         return CommLedger(
             scalars=self.scalars + other.scalars,
             points=self.points + other.points,
             messages=self.messages + other.messages,
             dim=max(self.dim, other.dim),
+            phases=phases,
         )
+
+    def tag(self, phase: str) -> "CommLedger":
+        """Return a copy whose totals are also filed under ``phase``. Any
+        existing breakdown is collapsed into the new label (a tagged ledger
+        stays one level deep)."""
+        totals = CommLedger(scalars=self.scalars, points=self.points,
+                            messages=self.messages, dim=self.dim)
+        return dataclasses.replace(totals, phases={phase: totals})
 
     @property
     def bytes(self) -> float:
         return 4.0 * self.scalars + 4.0 * (self.dim + 1) * self.points
 
-    def as_dict(self) -> Dict[str, float]:
-        return {
+    def as_dict(self, by_phase: bool = False) -> Dict[str, float]:
+        out = {
             "scalars": self.scalars,
             "points": self.points,
             "messages": self.messages,
             "bytes": self.bytes,
         }
+        if by_phase:
+            out["phases"] = {name: sub.as_dict()
+                             for name, sub in self.phases.items()}
+        return out
 
 
 def flood_cost(g: Graph, n_messages: int, unit_points: float = 0.0,

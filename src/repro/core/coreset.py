@@ -65,14 +65,46 @@ class Coreset:
         return clustering.cost(self.points, centers, weights=self.weights,
                                objective=objective)
 
+    @staticmethod
+    def concat(*coresets: "Coreset") -> "Coreset":
+        """Weight-preserving union of summaries (mask discipline of
+        DESIGN.md Sec. 7 makes this exact: invalid slots carry weight
+        exactly 0 and stay inert in the union). jit/vmap-compatible --
+        the merge-and-reduce stream tree and ``distributed_coreset`` both
+        stitch their buffers through here."""
+        if not coresets:
+            raise ValueError("Coreset.concat needs at least one coreset")
+        return Coreset(
+            points=jnp.concatenate([c.points for c in coresets], axis=-2),
+            weights=jnp.concatenate([c.weights for c in coresets], axis=-1))
+
+    def compact(self, size: Optional[int] = None) -> "Coreset":
+        """Move weight-carrying slots to the front (stable) and truncate to
+        ``size`` slots (default: same size). Mask-aware and jit-able (static
+        output shape). Caller contract: ``size`` must be >= the number of
+        nonzero-weight slots, otherwise mass is silently dropped -- check
+        ``effective_size()`` first when in doubt."""
+        size = self.size if size is None else size
+        order = jnp.argsort(self.weights == 0.0, stable=True)
+        return Coreset(points=self.points[order][:size],
+                       weights=self.weights[order][:size])
+
 
 def sensitivities(points: Array, centers: Array, weights: Array,
                   objective: str = "kmeans", backend: BackendLike = None
                   ) -> Tuple[Array, Array]:
-    """Per-point sampling mass m_p = w_p * cost(p, B) and assignments."""
+    """Per-point sampling mass m_p = |w_p| * cost(p, B) and assignments.
+
+    The absolute value matters only for *signed* instances (re-sampling a
+    coreset whose center weights went negative, as the streaming
+    merge-and-reduce tree does): masses must be a valid sampling
+    distribution, while the sample-weight formula keeps the original sign,
+    so ``E[sum_q w_q f(q)] = sum_p w_p f(p)`` still holds and the total
+    weight identity stays exact. For mask/non-negative weights this is the
+    paper's m_p unchanged."""
     c, assign = clustering.point_costs(points, centers, objective=objective,
                                        backend=backend)
-    return weights * c, assign
+    return jnp.abs(weights) * c, assign
 
 
 def weighted_choice(key: Array, masses: Array, n_draws: int) -> Array:
@@ -137,10 +169,15 @@ def _build_coreset(key, points, weights, k, t, objective, lloyd_iters,
                    clip_negative, backend):
     n = points.shape[0]
     w = jnp.ones((n,), points.dtype) if weights is None else weights
+    # solve the approximation B on the non-negative part of the measure
+    # (identity for mask/raw instances); optimizing centers against
+    # negative mass admits spurious minima (DESIGN.md Sec. 9). The signed
+    # w stays authoritative for sensitivities and the weight identities.
+    w_solve = jnp.maximum(w, 0.0)
     key, ks = jax.random.split(key)
-    centers = clustering.kmeans_pp_init(key, points, k, weights=w,
+    centers = clustering.kmeans_pp_init(key, points, k, weights=w_solve,
                                         objective=objective, backend=backend)
-    centers, _ = clustering.lloyd(points, centers, weights=w,
+    centers, _ = clustering.lloyd(points, centers, weights=w_solve,
                                   iters=lloyd_iters, objective=objective,
                                   backend=backend)
     m, assign = sensitivities(points, centers, w, objective=objective,
@@ -151,8 +188,29 @@ def _build_coreset(key, points, weights, k, t, objective, lloyd_iters,
         jnp.asarray(float(t)))
     if clip_negative:
         w_b = jnp.maximum(w_b, 0.0)
-    return Coreset(points=jnp.concatenate([sampled, centers], axis=0),
-                   weights=jnp.concatenate([w_s, w_b], axis=0))
+    return Coreset.concat(Coreset(sampled, w_s), Coreset(centers, w_b))
+
+
+def merge_coresets(
+    key: Array,
+    a: Coreset,
+    b: Coreset,
+    k: int,
+    t: int,
+    objective: str = "kmeans",
+    lloyd_iters: int = 5,
+    backend: BackendLike = None,
+) -> Coreset:
+    """Merge-and-reduce step: re-run sensitivity sampling on the union of
+    two summaries. This is the reduction of the streaming coreset tree
+    (``repro.stream.tree``); composability of eps-coresets (union of
+    coresets is a coreset of the union) makes it sound, and the signed
+    weights of ``a``/``b`` are handled by the |w| sampling mass in
+    :func:`sensitivities`. Output size t + k regardless of input sizes."""
+    u = Coreset.concat(a, b)
+    return build_coreset(key, u.points, k, t, weights=u.weights,
+                         objective=objective, lloyd_iters=lloyd_iters,
+                         backend=backend)
 
 
 def proportional_allocation(costs: Array, t: int) -> Array:
@@ -210,6 +268,7 @@ def distributed_coreset(
     lloyd_iters: int = 5,
     clip_negative: bool = False,
     backend: BackendLike = None,
+    site_weights: Optional[Array] = None,   # (n_sites, M) overrides mask
 ) -> DistributedCoreset:
     """Algorithm 1 over all sites at once (vmapped host simulation).
 
@@ -217,11 +276,17 @@ def distributed_coreset(
     scalars) and their sum -- exactly the paper's communication pattern. The
     SPMD/mesh execution of the same math lives in
     :mod:`repro.core.distributed`.
+
+    ``site_weights`` generalizes each site's instance from masked raw points
+    to an arbitrary *weighted* (possibly signed) local summary -- the
+    streaming aggregation rounds run Algorithm 1 over per-site coreset-tree
+    summaries this way. When given, ``site_mask`` is ignored (a zero weight
+    is an invalid slot).
     """
     t_buffer = t if t_buffer is None else t_buffer
-    return _distributed_coreset(key, site_points, site_mask, k=k, t=t,
-                                t_buffer=t_buffer, objective=objective,
-                                lloyd_iters=lloyd_iters,
+    return _distributed_coreset(key, site_points, site_mask, site_weights,
+                                k=k, t=t, t_buffer=t_buffer,
+                                objective=objective, lloyd_iters=lloyd_iters,
                                 clip_negative=clip_negative,
                                 backend=backend_mod.resolve_name(backend))
 
@@ -230,19 +295,24 @@ def distributed_coreset(
     jax.jit,
     static_argnames=("k", "t", "t_buffer", "objective", "lloyd_iters",
                      "clip_negative", "backend"))
-def _distributed_coreset(key, site_points, site_mask, k, t, t_buffer,
-                         objective, lloyd_iters, clip_negative, backend):
+def _distributed_coreset(key, site_points, site_mask, site_weights, k, t,
+                         t_buffer, objective, lloyd_iters, clip_negative,
+                         backend):
     n_sites, M, d = site_points.shape
-    w_site = site_mask.astype(site_points.dtype)
+    w_site = (site_mask.astype(site_points.dtype) if site_weights is None
+              else site_weights.astype(site_points.dtype))
 
     keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
 
     # -- Round 1: local constant-approximation solves ------------------------
     def local_solve(ki, pts, w):
-        centers = clustering.kmeans_pp_init(ki, pts, k, weights=w,
+        # as in _build_coreset: solve B_i on max(w, 0) (identity for masked
+        # sites), signed w for the sensitivities
+        w_solve = jnp.maximum(w, 0.0)
+        centers = clustering.kmeans_pp_init(ki, pts, k, weights=w_solve,
                                             objective=objective,
                                             backend=backend)
-        centers, _ = clustering.lloyd(pts, centers, weights=w,
+        centers, _ = clustering.lloyd(pts, centers, weights=w_solve,
                                       iters=lloyd_iters, objective=objective,
                                       backend=backend)
         m, assign = sensitivities(pts, centers, w, objective=objective,
@@ -266,7 +336,9 @@ def _distributed_coreset(key, site_points, site_mask, k, t, t_buffer,
     if clip_negative:
         w_b = jnp.maximum(w_b, 0.0)
 
-    points = jnp.concatenate([sampled, centers], axis=1)
-    weights = jnp.concatenate([w_s, w_b], axis=1)
-    return DistributedCoreset(points=points, weights=weights, t_i=t_i,
+    # per-site portion S_i u B_i, stitched via the shared mask-aware union
+    portions = jax.vmap(Coreset.concat)(Coreset(sampled, w_s),
+                                        Coreset(centers, w_b))
+    return DistributedCoreset(points=portions.points,
+                              weights=portions.weights, t_i=t_i,
                               local_costs=local_costs)

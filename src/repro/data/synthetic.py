@@ -97,3 +97,28 @@ def paper_dataset(name: str, seed: int = 0, scale: float = 1.0
 
 def paper_dataset_names():
     return list(_PAPER_SHAPES)
+
+
+def drifting_mixture_stream(
+    n_batches: int,
+    batch_size: int,
+    d: int = 10,
+    k: int = 5,
+    drift: float = 0.05,
+    sigma: float = 0.3,
+    seed: int = 0,
+) -> Iterator[np.ndarray]:
+    """Non-stationary Gaussian-mixture stream for the streaming subsystem:
+    the ``k`` mixture centers random-walk by ``drift * N(0, I)`` per batch
+    and the mixture weights are re-drawn every batch, so no fixed prefix is
+    representative of the whole stream -- exactly the regime merge-and-reduce
+    summaries must survive. Deterministic in ``seed``; yields ``n_batches``
+    arrays of shape (batch_size, d) float32."""
+    rng = np.random.default_rng(seed)
+    centers = 3.0 * rng.standard_normal((k, d))
+    for _ in range(n_batches):
+        probs = rng.dirichlet(np.ones(k) * 2.0)
+        comp = rng.choice(k, size=batch_size, p=probs)
+        pts = centers[comp] + sigma * rng.standard_normal((batch_size, d))
+        yield pts.astype(np.float32)
+        centers = centers + drift * rng.standard_normal((k, d))

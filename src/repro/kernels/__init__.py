@@ -3,6 +3,8 @@ assignment and fused Lloyd statistics. Validated on CPU in interpret mode;
 TARGET is TPU (MXU matmul formulation, VMEM tiling via BlockSpec)."""
 
 from repro.kernels import ops, ref
-from repro.kernels.ops import lloyd_stats, lloyd_step, min_dist_argmin
+from repro.kernels.ops import (lloyd_stats, lloyd_step, min_dist_argmin,
+                               pad_queries)
 
-__all__ = ["ops", "ref", "lloyd_stats", "lloyd_step", "min_dist_argmin"]
+__all__ = ["ops", "ref", "lloyd_stats", "lloyd_step", "min_dist_argmin",
+           "pad_queries"]

@@ -42,6 +42,21 @@ def _pad_dim(x: Array, axis: int, multiple: int, value: float = 0.0) -> Array:
     return jnp.pad(x, widths, constant_values=value)
 
 
+def pad_queries(points: Array, min_bucket: int = 8) -> Tuple[Array, int]:
+    """Pad a query batch ``(n, d)`` to the next power-of-two row count
+    (>= ``min_bucket``) with zero rows. Serving traffic arrives in
+    arbitrary batch sizes; bucketing bounds the number of jit/kernel
+    specializations to O(log n_max) (DESIGN.md Sec. 9). Returns the padded
+    batch and the logical count ``n`` -- callers slice outputs back with
+    it. Zero-row padding is inert: padded queries get *some* assignment but
+    are sliced off before anything consumes them. Always returns >=
+    ``min_bucket`` rows (an empty batch pads up, never through, so the
+    kernels see a nonzero shape)."""
+    n = points.shape[0]
+    cap = max(min_bucket, 1 << max(n - 1, 0).bit_length())
+    return jnp.pad(points, ((0, cap - n), (0, 0))), n
+
+
 def min_dist_argmin(points: Array, centers: Array, block_n: int = 256,
                     block_k: int = 256,
                     interpret: Optional[bool] = None

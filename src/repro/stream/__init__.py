@@ -1,0 +1,24 @@
+"""Streaming coreset subsystem (DESIGN.md Sec. 9).
+
+Three layers over the batch pipeline of :mod:`repro.core`:
+
+* :mod:`repro.stream.tree` -- merge-and-reduce coreset tree
+  (:class:`CoresetTree`): any-time, bounded-memory eps-coreset of an
+  unbounded stream, O(log n) fixed-size buckets.
+* :mod:`repro.stream.ingest` -- ingestion state (:class:`StreamState`) and
+  the distributed mode (:class:`DistributedStream`): one tree per topology
+  node, periodic Algorithm-1 aggregation rounds with per-round
+  ``CommLedger`` phases.
+* :mod:`repro.stream.service` -- :class:`ClusterQueryService`: live centers
+  with a staleness-bounded refresh policy, batched nearest-center queries
+  through the fused distance kernels.
+"""
+
+from repro.stream.ingest import AggregateResult, DistributedStream, StreamState
+from repro.stream.service import ClusterQueryService, ServiceStats
+from repro.stream.tree import CoresetTree, TreeConfig
+
+__all__ = [
+    "AggregateResult", "DistributedStream", "StreamState",
+    "ClusterQueryService", "ServiceStats", "CoresetTree", "TreeConfig",
+]

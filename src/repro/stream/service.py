@@ -1,0 +1,150 @@
+"""Clustering-query service over a live stream summary.
+
+:class:`ClusterQueryService` owns a :class:`~repro.stream.ingest.StreamState`
+(or any object with the same ``push`` / ``summary`` / ``total_weight`` /
+``config`` surface) and serves batched nearest-center queries against
+centers solved from the current summary:
+
+* **queries** route through :func:`repro.core.backend.query_assignments` --
+  one fused ``min_dist_argmin`` pass (the Pallas ``distance_argmin`` kernel
+  on TPU). Query batches are padded up to power-of-two buckets so arbitrary
+  traffic shapes hit a bounded set of compiled specializations.
+* **freshness** is staleness-bounded: the service re-solves centers from
+  the summary (k-means++ + Lloyd on the weighted coreset, one compile --
+  the tree summary is constant-shape) whenever the mass ingested since the
+  last refresh exceeds ``staleness_frac`` of the total (or an absolute
+  ``max_stale_points``), checked lazily on each query batch. Between
+  refreshes queries are answered from the cached centers at zero solve
+  cost, so worst-case extra error is the cost drift of one staleness
+  window.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backend as backend_mod
+from repro.core import clustering
+from repro.kernels.ops import pad_queries
+from repro.stream.ingest import StreamState
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Serving counters (monitoring surface)."""
+
+    n_queries: int = 0
+    n_batches: int = 0
+    n_refreshes: int = 0
+
+
+class ClusterQueryService:
+    """Live centers + batched nearest-center queries with bounded staleness.
+
+    ``staleness_frac=0.0`` refreshes on every ingest (always-fresh);
+    ``staleness_frac=None`` disables fractional triggering (absolute
+    ``max_stale_points`` only, if set).
+    """
+
+    def __init__(self, stream: StreamState, k: int,
+                 staleness_frac: Optional[float] = 0.1,
+                 max_stale_points: Optional[float] = None,
+                 lloyd_iters: int = 8,
+                 restarts: int = 2,
+                 backend: backend_mod.BackendLike = None,
+                 key: Optional[Array] = None):
+        self.stream = stream
+        self.k = k
+        self.staleness_frac = staleness_frac
+        self.max_stale_points = max_stale_points
+        self.lloyd_iters = lloyd_iters
+        self.restarts = restarts
+        self.backend = backend_mod.resolve_name(
+            backend if backend is not None
+            else getattr(stream.config, "backend", None))
+        self._key = jax.random.PRNGKey(0) if key is None else key
+        self._centers: Optional[Array] = None
+        self._weight_at_refresh = 0.0
+        self.stats = ServiceStats()
+
+    # -- freshness policy ----------------------------------------------------
+
+    def staleness(self) -> float:
+        """Mass ingested since the centers were last solved."""
+        return self.stream.total_weight() - self._weight_at_refresh
+
+    def _stale(self) -> bool:
+        if self._centers is None:
+            return True
+        s = self.staleness()
+        total = self.stream.total_weight()
+        if self.max_stale_points is not None and s > self.max_stale_points:
+            return True
+        return (self.staleness_frac is not None
+                and s > self.staleness_frac * max(total, 1.0))
+
+    def refresh(self) -> Array:
+        """Force a center re-solve from the current summary. Solves on the
+        non-negative part of the signed measure -- optimizing centers
+        against negative mass admits spurious minima (see
+        ``DistributedStream.aggregate``)."""
+        objective = self.stream.config.objective
+        cs = self.stream.summary()
+        w_solve = jnp.maximum(cs.weights, 0.0)
+        self._key, k1 = jax.random.split(self._key)
+        centers, _ = clustering.solve(k1, cs.points, self.k,
+                                      weights=w_solve,
+                                      lloyd_iters=self.lloyd_iters,
+                                      objective=objective,
+                                      restarts=self.restarts,
+                                      backend=self.backend)
+        self._centers = centers
+        self._weight_at_refresh = self.stream.total_weight()
+        self.stats.n_refreshes += 1
+        return centers
+
+    def centers(self) -> Array:
+        """Current serving centers, refreshing first if stale."""
+        if self._stale():
+            self.refresh()
+        return self._centers
+
+    # -- ingestion + queries -------------------------------------------------
+
+    def push(self, batch) -> None:
+        """Ingest through the service (keeps the staleness clock honest)."""
+        self.stream.push(batch)
+
+    def query(self, points) -> Tuple[Array, Array]:
+        """Batched nearest-center query: (n, d) -> (assign (n,) i32,
+        dist (n,) f32; squared for k-means, euclidean for k-median)."""
+        q = jnp.asarray(points, jnp.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        centers = self.centers()
+        qp, n = pad_queries(q)
+        assign, dist = backend_mod.query_assignments(
+            qp, centers, objective=self.stream.config.objective,
+            backend=self.backend)
+        self.stats.n_queries += n
+        self.stats.n_batches += 1
+        return assign[:n], dist[:n]
+
+    def query_load(self, points, weights: Optional[Array] = None) -> Array:
+        """Per-center (optionally weighted) query-load histogram (k,) for
+        one batch -- a single fused ``lloyd_stats`` pass (counts output),
+        useful for shard/center load monitoring. Batches are bucket-padded
+        like :meth:`query` (weight-0 padding keeps counts exact)."""
+        q = jnp.asarray(points, jnp.float32)
+        w = (jnp.ones((q.shape[0],), jnp.float32) if weights is None
+             else jnp.asarray(weights, jnp.float32))
+        qp, n = pad_queries(q)
+        wp = jnp.pad(w, (0, qp.shape[0] - n))
+        _, counts, _ = backend_mod.get_backend(self.backend).lloyd_stats(
+            qp, self.centers(), wp)
+        return counts

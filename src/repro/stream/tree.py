@@ -1,0 +1,187 @@
+"""Merge-and-reduce coreset tree (Bentley-Saxe over Algorithm 1's summary).
+
+Har-Peled & Mazumdar's composability facts make coresets streamable:
+
+* **merge**: the union of eps-coresets of two disjoint sets is an
+  eps-coreset of the union (weight-preserving, free);
+* **reduce**: an eps'-coreset of an eps-coreset is an
+  ((1+eps)(1+eps')-1)-coreset of the original.
+
+:class:`CoresetTree` keeps one fixed-size :class:`~repro.core.coreset.Coreset`
+slot per level; level ``i`` summarizes ``2^i`` ingested batches. Pushing a
+batch builds its leaf summary and carries it up binary-counter style: two
+occupied summaries at a level merge (``Coreset.concat``) and reduce
+(``build_coreset`` re-runs sensitivity sampling on the union, through the
+clustering-backend registry), vacating the level. After ``n`` batches at
+most ``ceil(log2(n)) + 1`` levels are occupied, so the whole summary is
+``O((t + k) log n)`` points with eps-coreset error ``O(eps log n)`` --
+tighten per-level ``t`` by ``log^2 n`` to recover a clean eps overall.
+
+Static-shape discipline (DESIGN.md Sec. 7/9): bucket storage is two stacked
+arrays ``(levels, slot, d)`` / ``(levels, slot)`` whose vacant levels carry
+weight exactly 0, so :meth:`summary` is a constant-shape reshape -- every
+downstream jit (refresh solves, query kernels) compiles once per tree
+config. The carry cascade is host-side control flow driven only by the
+deterministic push counter (never by data), so each push costs amortized
+O(1) jitted reduce calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backend as backend_mod
+from repro.core.backend import BackendLike
+from repro.core.coreset import Coreset, build_coreset, merge_coresets
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeConfig:
+    """Static shape/solver parameters of one tree (the jit cache key)."""
+
+    k: int                     # centers per local solve
+    t: int                     # samples per bucket coreset
+    d: int                     # point dimensionality
+    batch_size: int            # points per ingested batch (fixed shape)
+    levels: int = 24           # >= log2(#batches); 24 ~ 16M batches
+    objective: str = "kmeans"
+    lloyd_iters: int = 5
+    backend: Optional[str] = None   # resolved at tree construction
+
+    @property
+    def slot(self) -> int:
+        """Points per bucket: t samples + k solution centers."""
+        return self.t + self.k
+
+
+class CoresetTree:
+    """Any-time bounded-memory coreset of everything pushed so far."""
+
+    def __init__(self, config: TreeConfig, key: Optional[Array] = None):
+        if config.levels < 1:
+            raise ValueError("need at least one level")
+        self.config = dataclasses.replace(
+            config, backend=backend_mod.resolve_name(config.backend))
+        s = config.slot
+        self._points = jnp.zeros((config.levels, s, config.d), jnp.float32)
+        self._weights = jnp.zeros((config.levels, s), jnp.float32)
+        self._occupied = np.zeros((config.levels,), dtype=bool)
+        self._key = jax.random.PRNGKey(0) if key is None else key
+        self.n_batches = 0
+        self.total_weight = 0.0    # exact mass pushed (host-side float)
+
+    # -- internals -----------------------------------------------------------
+
+    def _next_key(self) -> Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _leaf(self, batch: Array, weights: Array) -> Coreset:
+        """Level-0 summary of one batch. Batches no larger than a slot are
+        stored raw (zero-padded, exact); larger batches are reduced by one
+        sensitivity-sampling pass."""
+        cfg = self.config
+        if cfg.batch_size <= cfg.slot:
+            pad = cfg.slot - cfg.batch_size
+            return Coreset(points=jnp.pad(batch, ((0, pad), (0, 0))),
+                           weights=jnp.pad(weights, (0, pad)))
+        return build_coreset(self._next_key(), batch, cfg.k, cfg.t,
+                             weights=weights, objective=cfg.objective,
+                             lloyd_iters=cfg.lloyd_iters, backend=cfg.backend)
+
+    def _reduce(self, a: Coreset, b: Coreset) -> Coreset:
+        cfg = self.config
+        return merge_coresets(self._next_key(), a, b, cfg.k, cfg.t,
+                              objective=cfg.objective,
+                              lloyd_iters=cfg.lloyd_iters,
+                              backend=cfg.backend)
+
+    def _bucket(self, level: int) -> Coreset:
+        return Coreset(points=self._points[level],
+                       weights=self._weights[level])
+
+    def _set_bucket(self, level: int, cs: Optional[Coreset]) -> None:
+        if cs is None:
+            # vacate: weights must go to exactly 0 so summary() stays a
+            # plain reshape (vacant levels are inert by the mask discipline)
+            self._weights = self._weights.at[level].set(0.0)
+            self._occupied[level] = False
+        else:
+            self._points = self._points.at[level].set(cs.points)
+            self._weights = self._weights.at[level].set(cs.weights)
+            self._occupied[level] = True
+
+    # -- public API ----------------------------------------------------------
+
+    def push(self, batch: Array, weights: Optional[Array] = None) -> None:
+        """Ingest one fixed-size batch ``(batch_size, d)`` (optionally
+        weighted). Amortized O(1) reduce calls per push."""
+        cfg = self.config
+        batch = jnp.asarray(batch, jnp.float32)
+        if batch.shape != (cfg.batch_size, cfg.d):
+            raise ValueError(f"batch shape {batch.shape} != "
+                             f"{(cfg.batch_size, cfg.d)}; pad with weight-0 "
+                             f"slots for partial batches")
+        # track mass from host-side values: a device sum here would block
+        # async dispatch on every push
+        if weights is None:
+            w = jnp.ones((cfg.batch_size,), jnp.float32)
+            self.total_weight += float(cfg.batch_size)
+        else:
+            self.total_weight += float(np.sum(np.asarray(weights,
+                                                         np.float64)))
+            w = jnp.asarray(weights, jnp.float32)
+
+        carry = self._leaf(batch, w)
+        level = 0
+        # binary-counter carry: occupancy after n pushes == bits of n
+        while level < cfg.levels and self._occupied[level]:
+            carry = self._reduce(self._bucket(level), carry)
+            self._set_bucket(level, None)
+            level += 1
+        if level == cfg.levels:
+            # overflow: fold into the top bucket in place (memory stays
+            # bounded; error grows only if levels was undersized for n)
+            top = cfg.levels - 1
+            self._set_bucket(top, carry)
+        else:
+            self._set_bucket(level, carry)
+        self.n_batches += 1
+
+    def occupied_levels(self) -> int:
+        return int(self._occupied.sum())
+
+    @property
+    def size(self) -> int:
+        """Static summary capacity in points (levels * slot)."""
+        return self.config.levels * self.config.slot
+
+    def max_summary_points(self) -> int:
+        """Occupied capacity: the ``(t + k) * O(log n)`` bound."""
+        return self.occupied_levels() * self.config.slot
+
+    def summary(self) -> Coreset:
+        """Any-time eps-coreset of everything pushed so far, as one
+        constant-shape ``(levels * slot,)`` weighted point set (vacant
+        levels carry weight exactly 0)."""
+        cfg = self.config
+        return Coreset(points=self._points.reshape(-1, cfg.d),
+                       weights=self._weights.reshape(-1))
+
+    def compact_summary(self) -> Coreset:
+        """Summary with weight-carrying slots packed to the front and
+        truncated to the occupied capacity (smaller downstream solves; shape
+        changes as levels fill, so prefer :meth:`summary` under jit)."""
+        cap = max(self.max_summary_points(), 1)
+        return self.summary().compact(cap)
+
+    def bucket_sizes(self) -> List[int]:
+        """Nonzero-weight slot count per level (diagnostics)."""
+        counts = np.asarray(jnp.sum(self._weights != 0.0, axis=1))
+        return [int(c) for c in counts]

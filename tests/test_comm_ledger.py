@@ -1,0 +1,75 @@
+"""CommLedger unit tests: totals arithmetic and the per-phase breakdown
+(`as_dict(by_phase=True)`) used by streaming aggregation rounds."""
+import numpy as np
+
+from repro.core.comm import CommLedger, flood_cost, tree_broadcast_cost
+from repro.core.topology import bfs_spanning_tree, grid
+
+
+def test_add_and_bytes_totals():
+    a = CommLedger(scalars=3.0, points=10.0, messages=5.0, dim=4)
+    b = CommLedger(scalars=1.0, points=2.0, messages=1.0, dim=8)
+    c = a.add(b)
+    assert c.scalars == 4.0 and c.points == 12.0 and c.messages == 6.0
+    assert c.dim == 8
+    assert c.bytes == 4.0 * 4.0 + 4.0 * (8 + 1) * 12.0
+
+
+def test_tag_files_totals_under_phase():
+    led = CommLedger(scalars=2.0, points=7.0, messages=3.0, dim=2)
+    tagged = led.tag("round_0")
+    d = tagged.as_dict(by_phase=True)
+    assert d["points"] == 7.0
+    assert d["phases"]["round_0"]["points"] == 7.0
+    assert d["phases"]["round_0"]["scalars"] == 2.0
+    assert d["phases"]["round_0"]["bytes"] == tagged.bytes
+    # untagged as_dict has no phases key (backwards compatible)
+    assert "phases" not in led.as_dict()
+    assert "phases" not in tagged.as_dict()
+
+
+def test_add_merges_phases_labelwise():
+    r0 = CommLedger(points=5.0, dim=3).tag("round_0")
+    r1 = CommLedger(points=7.0, scalars=2.0, dim=3).tag("round_1")
+    r0b = CommLedger(points=11.0, dim=3).tag("round_0")
+    total = r0.add(r1).add(r0b)
+    d = total.as_dict(by_phase=True)
+    assert d["points"] == 23.0
+    assert d["phases"]["round_0"]["points"] == 16.0
+    assert d["phases"]["round_1"]["points"] == 7.0
+    assert d["phases"]["round_1"]["scalars"] == 2.0
+    # phase totals decompose the grand total exactly
+    np.testing.assert_allclose(
+        sum(p["points"] for p in d["phases"].values()), d["points"])
+    np.testing.assert_allclose(
+        sum(p["bytes"] for p in d["phases"].values()), d["bytes"])
+
+
+def test_add_does_not_alias_phase_subledgers():
+    r0 = CommLedger(points=5.0, dim=3).tag("round_0")
+    other = CommLedger(points=1.0, dim=3).tag("round_0")
+    merged = r0.add(other)
+    assert merged.phases["round_0"].points == 6.0
+    # the inputs' breakdowns are unchanged (add returns fresh copies)
+    assert r0.phases["round_0"].points == 5.0
+    assert other.phases["round_0"].points == 1.0
+
+
+def test_tag_collapses_existing_breakdown():
+    inner = CommLedger(points=4.0, dim=2).tag("a").add(
+        CommLedger(points=6.0, dim=2).tag("b"))
+    re = inner.tag("outer")
+    d = re.as_dict(by_phase=True)
+    assert set(d["phases"]) == {"outer"}
+    assert d["phases"]["outer"]["points"] == 10.0
+
+
+def test_phase_tagging_composes_with_cost_helpers():
+    g = grid(3, 3)
+    tree = bfs_spanning_tree(g)
+    led = (flood_cost(g, n_messages=g.n, unit_scalars=1.0).tag("round1")
+           .add(tree_broadcast_cost(tree, unit_points=5.0, dim=4)
+                .tag("broadcast")))
+    d = led.as_dict(by_phase=True)
+    assert d["phases"]["round1"]["scalars"] == 2.0 * g.m * g.n
+    assert d["phases"]["broadcast"]["points"] == 5.0 * (tree.n - 1)

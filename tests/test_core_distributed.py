@@ -71,9 +71,10 @@ def test_zhang_baseline_runs_and_ledger():
                                       tree, k, s=80)
     assert ledger.points == (g.n - 1) * (80 + k)
     np.testing.assert_allclose(float(jnp.sum(cs.weights)), len(pts), rtol=1e-3)
-    c = clustering.kmeans_pp_init(KEY, cs.points, k,
-                                  weights=jnp.maximum(cs.weights, 0))
-    c, _ = clustering.lloyd(cs.points, c, weights=cs.weights, iters=10)
+    # restarted solve: the assertion targets the coreset's quality, not the
+    # luck of one k-means++ seeding on a highly concentrated weighted set
+    c, _ = clustering.solve(KEY, cs.points, k, weights=cs.weights,
+                            restarts=3)
     _, full = clustering.solve(KEY, jnp.asarray(pts), k, restarts=4)
     assert float(clustering.cost(jnp.asarray(pts), c) / full) < 1.5
 

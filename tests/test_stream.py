@@ -1,0 +1,297 @@
+"""Streaming coreset subsystem tests: merge-and-reduce tree invariants,
+summary quality vs the offline pipeline on a drifting stream, the
+distributed mode's ledger accounting, and the query service."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import backend as backend_mod
+from repro.core import clustering
+from repro.core.coreset import Coreset, build_coreset, merge_coresets
+from repro.core.topology import grid
+from repro.data.synthetic import drifting_mixture_stream
+from repro.stream import (ClusterQueryService, CoresetTree, DistributedStream,
+                          StreamState, TreeConfig)
+
+KEY = jax.random.PRNGKey(0)
+
+# one tree shape for the whole module: each distinct config costs jit
+# compiles of the leaf/merge solves
+CFG = TreeConfig(k=4, t=60, d=6, batch_size=200, levels=12)
+
+
+def _stream(n_batches, seed=0, batch=CFG.batch_size, d=CFG.d):
+    return list(drifting_mixture_stream(n_batches, batch, d=d, k=4,
+                                        seed=seed))
+
+
+# -- Coreset.concat / compact -----------------------------------------------
+
+def test_concat_preserves_weight_and_order():
+    a = Coreset(points=jnp.ones((3, 2)), weights=jnp.asarray([1., 0., 2.]))
+    b = Coreset(points=jnp.zeros((2, 2)), weights=jnp.asarray([-0.5, 3.]))
+    u = Coreset.concat(a, b)
+    assert u.size == 5
+    np.testing.assert_allclose(float(jnp.sum(u.weights)), 5.5)
+    np.testing.assert_array_equal(np.asarray(u.weights),
+                                  [1., 0., 2., -0.5, 3.])
+
+
+def test_compact_moves_valid_slots_front_and_truncates():
+    cs = Coreset(points=jnp.arange(10, dtype=jnp.float32)[:, None],
+                 weights=jnp.asarray([0., 2., 0., 0., 1., 0., 3., 0., 0., 4.]))
+    c = cs.compact(4)
+    assert c.size == 4
+    # stable: valid slots keep their relative order
+    np.testing.assert_array_equal(np.asarray(c.weights), [2., 1., 3., 4.])
+    np.testing.assert_array_equal(np.asarray(c.points[:, 0]), [1., 4., 6., 9.])
+    np.testing.assert_allclose(float(jnp.sum(c.weights)),
+                               float(jnp.sum(cs.weights)))
+
+
+def test_merge_coresets_preserves_total_weight():
+    pts = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (500, 6)).astype(np.float32))
+    a = build_coreset(KEY, pts[:250], k=4, t=60)
+    b = build_coreset(jax.random.PRNGKey(1), pts[250:], k=4, t=60)
+    m = merge_coresets(jax.random.PRNGKey(2), a, b, k=4, t=60)
+    assert m.size == 64
+    np.testing.assert_allclose(float(jnp.sum(m.weights)), 500.0, rtol=1e-4)
+
+
+# -- tree invariants ---------------------------------------------------------
+
+def test_tree_binary_counter_occupancy():
+    tree = CoresetTree(CFG)
+    batches = _stream(11)
+    for i, b in enumerate(batches, start=1):
+        tree.push(jnp.asarray(b))
+        assert tree.occupied_levels() == bin(i).count("1")
+    assert tree.n_batches == 11
+
+
+def test_tree_log_space_bound():
+    tree = CoresetTree(CFG)
+    for b in _stream(13):
+        tree.push(jnp.asarray(b))
+    n = 13 * CFG.batch_size
+    max_levels = math.floor(math.log2(13)) + 1
+    assert tree.occupied_levels() <= max_levels
+    assert tree.max_summary_points() <= CFG.slot * max_levels
+    assert int(tree.summary().effective_size()) <= CFG.slot * max_levels
+    np.testing.assert_allclose(float(jnp.sum(tree.summary().weights)), n,
+                               rtol=1e-4)
+    # diagnostics surface: per-level sizes match occupancy; the compacted
+    # view shrinks to the occupied capacity without losing mass
+    sizes = tree.bucket_sizes()
+    assert sum(1 for s in sizes if s > 0) == tree.occupied_levels()
+    compact = tree.compact_summary()
+    assert compact.size == tree.max_summary_points()
+    np.testing.assert_allclose(float(jnp.sum(compact.weights)), n, rtol=1e-4)
+
+
+def test_tree_overflow_keeps_memory_bounded():
+    cfg = TreeConfig(k=4, t=60, d=6, batch_size=200, levels=2)
+    tree = CoresetTree(cfg)
+    for b in _stream(9, seed=3):
+        tree.push(jnp.asarray(b))
+    assert tree.occupied_levels() <= 2
+    assert tree.summary().points.shape == (2 * cfg.slot, cfg.d)
+    np.testing.assert_allclose(float(jnp.sum(tree.summary().weights)),
+                               9 * 200, rtol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_batches=st.integers(1, 9), tail=st.integers(0, 199),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_summary_weight_equals_ingested(n_batches, tail, seed):
+    """Property: for any stream length (including a partial batch), the
+    summary's total weight equals the number of ingested points exactly --
+    the signed center weights cancel the sampled mass at every merge."""
+    stream = StreamState(CFG, key=jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    pts = rng.standard_normal(
+        (n_batches * CFG.batch_size + tail, CFG.d)).astype(np.float32)
+    # ragged pushes: one big, then dribbles
+    stream.push(pts[:len(pts) // 2])
+    stream.push(pts[len(pts) // 2:])
+    np.testing.assert_allclose(float(jnp.sum(stream.summary().weights)),
+                               len(pts), rtol=1e-4)
+    assert stream.pending() == tail
+    np.testing.assert_allclose(stream.total_weight(), len(pts), rtol=1e-6)
+
+
+def test_streaming_cost_within_factor_of_offline():
+    """Streaming k-means on the drifting mixture stays within a constant
+    factor of the offline coreset pipeline at equal summary size."""
+    n_batches = 12
+    batches = _stream(n_batches, seed=7)
+    full = jnp.asarray(np.concatenate(batches))
+
+    stream = StreamState(CFG)
+    for b in batches:
+        stream.push(b)
+    s = stream.summary()
+    c_stream, _ = clustering.solve(KEY, s.points, CFG.k, weights=s.weights,
+                                   lloyd_iters=10)
+    stream_cost = float(clustering.cost(full, c_stream))
+
+    off = build_coreset(KEY, full, k=CFG.k,
+                        t=int(s.effective_size()) - CFG.k)
+    c_off, _ = clustering.solve(KEY, off.points, CFG.k, weights=off.weights,
+                                lloyd_iters=10)
+    offline_cost = float(clustering.cost(full, c_off))
+    assert stream_cost <= 2.0 * offline_cost, (stream_cost, offline_cost)
+
+
+# -- distributed mode --------------------------------------------------------
+
+def test_distributed_stream_rounds_and_phase_ledger():
+    g = grid(2, 2)
+    ds = DistributedStream(g, CFG)
+    batches = _stream(8, seed=11)
+    for r in range(2):
+        for i in range(g.n):
+            ds.push(i, batches[r * g.n + i])
+        res = ds.aggregate(k=4, t=120, mode="resample")
+        # the aggregated global coreset preserves the total ingested mass
+        np.testing.assert_allclose(float(jnp.sum(res.coreset.weights)),
+                                   ds.total_weight(), rtol=1e-4)
+        assert res.centers.shape == (4, CFG.d)
+    d = ds.ledger.as_dict(by_phase=True)
+    assert set(d["phases"]) == {"stream_round_0", "stream_round_1"}
+    per_round = d["phases"]["stream_round_0"]
+    # Round 1 floods n scalars over 2m edges; portions are points
+    assert per_round["scalars"] == 2.0 * g.m * g.n
+    assert per_round["points"] > 0
+    assert per_round["bytes"] > 0
+    totals = ds.ledger.as_dict()
+    np.testing.assert_allclose(
+        totals["points"],
+        sum(p["points"] for p in d["phases"].values()))
+
+
+def test_distributed_stream_union_round_is_exact():
+    """When the summaries are smaller than a resample round's traffic, auto
+    mode floods the union instead: exact (coreset == concat of summaries),
+    no Round-1 scalars, points metered at effective size."""
+    g = grid(2, 2)
+    ds = DistributedStream(g, CFG)
+    batches = _stream(4, seed=29)
+    for i in range(g.n):
+        ds.push(i, batches[i][:100])    # partial batches: tiny summaries
+    res = ds.aggregate(k=4, t=600)      # budget >> support => union
+    assert res.local_costs is None
+    np.testing.assert_allclose(float(jnp.sum(res.coreset.weights)),
+                               ds.total_weight(), rtol=1e-5)
+    d = res.ledger.as_dict(by_phase=True)
+    assert d["scalars"] == 0.0
+    assert d["phases"]["stream_round_0"]["points"] == 2.0 * g.m * 400
+    # every raw point is in the union with weight exactly 1 (no reduction
+    # has happened anywhere yet)
+    w = np.asarray(res.coreset.weights)
+    assert set(np.unique(w)) == {0.0, 1.0}
+    assert int((w == 1.0).sum()) == 400
+
+
+def test_distributed_stream_uneven_sites():
+    """Sites with wildly different arrival rates: allocation shifts samples
+    to costly sites; empty sites are handled (zero local cost)."""
+    g = grid(2, 2)
+    ds = DistributedStream(g, CFG)
+    batches = _stream(6, seed=13)
+    for b in batches[:5]:
+        ds.push(0, b)          # hot site
+    ds.push(1, batches[5][:50])  # partial only
+    res = ds.aggregate(k=4, t=100)
+    assert np.isfinite(np.asarray(res.coreset.weights)).all()
+    np.testing.assert_allclose(float(jnp.sum(res.coreset.weights)),
+                               ds.total_weight(), rtol=1e-4)
+
+
+# -- query service -----------------------------------------------------------
+
+def test_service_query_matches_direct_argmin():
+    stream = StreamState(CFG)
+    for b in _stream(4, seed=17):
+        stream.push(b)
+    svc = ClusterQueryService(stream, k=4, staleness_frac=None,
+                              backend="jnp")
+    q = jnp.asarray(_stream(1, seed=18)[0][:73])
+    assign, dist = svc.query(q)
+    assert assign.shape == (73,) and dist.shape == (73,)
+    centers = svc.centers()
+    d2, am = backend_mod.get_backend("jnp").min_dist_argmin(q, centers)
+    np.testing.assert_array_equal(np.asarray(assign), np.asarray(am))
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(d2), rtol=1e-5)
+
+
+def test_service_staleness_refresh_policy():
+    stream = StreamState(CFG)
+    stream.push(_stream(1, seed=19)[0])
+    svc = ClusterQueryService(stream, k=4, staleness_frac=0.5)
+    q = np.zeros((5, CFG.d), np.float32)
+    svc.query(q)
+    assert svc.stats.n_refreshes == 1     # first query always solves
+    svc.query(q)
+    assert svc.stats.n_refreshes == 1     # fresh: no re-solve
+    # ingest < 50% more: still fresh
+    svc.push(_stream(1, seed=20)[0][:50])
+    svc.query(q)
+    assert svc.stats.n_refreshes == 1
+    # ingest enough to cross the fraction: refresh on next query
+    for b in _stream(2, seed=21):
+        svc.push(b)
+    svc.query(q)
+    assert svc.stats.n_refreshes == 2
+    assert svc.stats.n_batches == 4
+    assert svc.stats.n_queries == 20
+
+
+def test_service_query_load_histogram():
+    stream = StreamState(CFG)
+    stream.push(_stream(1, seed=23)[0])
+    svc = ClusterQueryService(stream, k=4, backend="jnp")
+    q = _stream(1, seed=24)[0]
+    load = np.asarray(svc.query_load(q))
+    assert load.shape == (4,)
+    np.testing.assert_allclose(load.sum(), len(q), rtol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_service_empty_and_single_query_batches(backend):
+    """Degenerate serving traffic: empty and single-point batches must pad
+    up to the minimum bucket, not through it (pallas kernels need a
+    nonzero shape)."""
+    stream = StreamState(CFG)
+    stream.push(_stream(1, seed=27)[0])
+    svc = ClusterQueryService(stream, k=4, staleness_frac=None,
+                              backend=backend)
+    a, dist = svc.query(np.zeros((0, CFG.d), np.float32))
+    assert a.shape == (0,) and dist.shape == (0,)
+    a, dist = svc.query(np.zeros((CFG.d,), np.float32))   # 1-d single query
+    assert a.shape == (1,) and dist.shape == (1,)
+    load = np.asarray(svc.query_load(np.zeros((3, CFG.d), np.float32),
+                                     weights=np.asarray([1., 2., 3.],
+                                                        np.float32)))
+    np.testing.assert_allclose(load.sum(), 6.0, rtol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["jnp_chunked", "pallas"])
+def test_service_backend_parity(backend):
+    """Query assignments agree across backends (pallas runs in interpret
+    mode on CPU) -- the bench_stream acceptance check, in miniature."""
+    stream = StreamState(CFG)
+    stream.push(_stream(1, seed=25)[0])
+    svc_ref = ClusterQueryService(stream, k=4, staleness_frac=None,
+                                  backend="jnp")
+    centers = svc_ref.refresh()
+    q = jnp.asarray(_stream(1, seed=26)[0][:64])
+    a_ref, d_ref = backend_mod.query_assignments(q, centers, backend="jnp")
+    a, d = backend_mod.query_assignments(q, centers, backend=backend)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(a_ref))
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d_ref), rtol=1e-5)
