@@ -69,7 +69,10 @@ def _data(n, k, d, seed=0):
 def run_dispatch(out_rows: List[str] | None = None,
                  shapes=((4096, 64, 32), (16384, 50, 16))) -> List[str]:
     """A/B the registered backends on the primitive ops and an end-to-end
-    weighted Lloyd solve, all through the dispatch layer."""
+    weighted Lloyd solve, all through the dispatch layer. One row per
+    (objective, backend, shape): the k-means rows time ``lloyd_stats``, the
+    k-median rows time the fused ``weiszfeld_stats`` primitive -- both
+    objectives are peers of the dispatch layer."""
     rows = out_rows if out_rows is not None else []
     interpreted = jax.default_backend() != "tpu"
     for n, k, d in shapes:
@@ -87,12 +90,33 @@ def run_dispatch(out_rows: List[str] | None = None,
             json_row(
                 rows, f"backend_dispatch/{name}/n={n}/k={k}/d={d}", t_ls,
                 backend=name,
+                objective="kmeans",
                 interpret=bool(interpreted and name == "pallas"),
                 chunk=getattr(b, "chunk", None),
                 n=n, k=k, d=d,
                 min_dist_argmin_us=round(t_mda, 1),
                 lloyd_stats_us=round(t_ls, 1),
                 lloyd2_e2e_us=round(t_e2e, 1),
+            )
+
+            t_ws = _time(
+                jax.jit(lambda p, c, ww: b.weiszfeld_stats(p, c, ww)),
+                pts, ctr, w)
+            t_e2e_med = _time(
+                lambda p, c, ww: clustering.lloyd(p, c, weights=ww, iters=2,
+                                                  objective="kmedian",
+                                                  backend=b),
+                pts, ctr, w, reps=1)
+            json_row(
+                rows,
+                f"backend_dispatch_kmedian/{name}/n={n}/k={k}/d={d}", t_ws,
+                backend=name,
+                objective="kmedian",
+                interpret=bool(interpreted and name == "pallas"),
+                chunk=getattr(b, "chunk", None),
+                n=n, k=k, d=d,
+                weiszfeld_stats_us=round(t_ws, 1),
+                lloyd2_e2e_us=round(t_e2e_med, 1),
             )
     return rows
 

@@ -104,3 +104,24 @@ def json_row(rows: List[str], name: str, us_per_call: float,
     rows.append(row)
     print(row, flush=True)
     return row
+
+
+def write_json_rows(path: str, rows: List[str]) -> List[Dict]:
+    """Materialize ``json_row`` output as a JSON artifact: parse every
+    ``name,us_per_call,json={...}`` row into a record and dump the list to
+    ``path`` (rows without an embedded json payload -- plain CSV rows like
+    the roofline section's -- are skipped). This is the file CI uploads so
+    the perf trajectory survives the run (see benchmarks/run.py)."""
+    out: List[Dict] = []
+    for row in rows:
+        name, _, rest = row.partition(",")
+        us, _, payload = rest.partition(",json=")
+        if not payload:
+            continue
+        rec: Dict = {"name": name, "us_per_call": float(us)}
+        rec.update(json.loads(payload))
+        out.append(rec)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    return out

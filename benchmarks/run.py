@@ -1,5 +1,7 @@
 """Benchmark entry point -- one section per paper table/figure plus the LM
-roofline. Prints ``name,us_per_call,derived`` CSV rows.
+roofline. Prints ``name,us_per_call,derived`` CSV rows; the kernels section
+additionally writes its rows to ``BENCH_kernels.json`` at the repo root
+(the CI perf-trajectory artifact).
 
     PYTHONPATH=src python -m benchmarks.run             # CI scale (~minutes)
     PYTHONPATH=src python -m benchmarks.run --full      # paper scale
@@ -7,12 +9,16 @@ roofline. Prints ``name,us_per_call,derived`` CSV rows.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
 from benchmarks import (bench_comm_scaling, bench_coreset_size,
                         bench_fig2_graphs, bench_fig3_trees, bench_kernels,
                         bench_roofline, bench_stream)
+from benchmarks.common import write_json_rows
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main(argv=None) -> None:
@@ -39,7 +45,12 @@ def main(argv=None) -> None:
     if only is None or "size" in only:
         bench_coreset_size.run(scale=scale, out_rows=rows)
     if only is None or "kernels" in only:
-        bench_kernels.run(out_rows=rows)
+        kernel_rows: list = []
+        bench_kernels.run(out_rows=kernel_rows)
+        rows.extend(kernel_rows)
+        out_json = os.path.join(_REPO_ROOT, "BENCH_kernels.json")
+        write_json_rows(out_json, kernel_rows)
+        print(f"# wrote {out_json}", file=sys.stderr)
     if only is None or "stream" in only:
         bench_stream.run(scale=scale, out_rows=rows)
     if only is None or "roofline" in only:

@@ -1,17 +1,27 @@
 """Unified clustering-backend dispatch layer (DESIGN.md Sec. 8).
 
 Every hot path of the pipeline -- Algorithm 1's local solves, D^2 seeding,
-sensitivity computation, and the final coreset solve of Algorithm 2 --
-reduces to the same two primitive ops over a (possibly weighted) point set:
+sensitivity computation, and the final coreset solve of Algorithm 2, for
+*both* objectives -- reduces to the same three primitive ops over a
+(possibly weighted) point set:
 
 * ``min_dist_argmin(points, centers)``
     ``(n, d), (k, d) -> (min_d2 (n,) f32, argmin (n,) i32)``
 * ``lloyd_stats(points, centers, weights)``
     ``(n, d), (k, d), (n,) -> (sums (k, d) f32, counts (k,) f32, cost () f32)``
   where ``sums[c] = sum_{p: argmin(p)=c} w_p p``, ``counts[c] = sum w_p``
-  and ``cost = sum_p w_p min_d2(p)`` -- one fused E+M statistics pass.
+  and ``cost = sum_p w_p min_d2(p)`` -- one fused E+M statistics pass
+  (the k-means Lloyd step).
+* ``weiszfeld_stats(points, centers, weights)``
+    ``(n, d), (k, d), (n,) -> (nums (k, d) f32, denoms (k,) f32, cost () f32)``
+  where, with ``dist(p) = sqrt(d2(p) + eta^2)`` the smoothed exact-form
+  distance to the assigned center,
+  ``nums[c] = sum_{p: argmin(p)=c} max(w_p, 0) p / dist(p)``,
+  ``denoms[c] = sum max(w_p, 0) / dist(p)`` and
+  ``cost = sum_p w_p sqrt(d2(p))`` -- one fused assign+Weiszfeld
+  statistics pass (the k-median refinement step; DESIGN.md Sec. 10).
 
-A :class:`ClusteringBackend` supplies both; the registry maps names to
+A :class:`ClusteringBackend` supplies all three; the registry maps names to
 singleton instances:
 
 * ``"jnp"``         -- dense XLA formulation, materializes the (n, k)
@@ -52,7 +62,7 @@ _EPS = 1e-12
 
 @runtime_checkable
 class ClusteringBackend(Protocol):
-    """The two primitive ops every numerical path dispatches through."""
+    """The three primitive ops every numerical path dispatches through."""
 
     name: str
 
@@ -63,6 +73,11 @@ class ClusteringBackend(Protocol):
     def lloyd_stats(self, points: Array, centers: Array,
                     weights: Optional[Array] = None
                     ) -> Tuple[Array, Array, Array]:
+        ...
+
+    def weiszfeld_stats(self, points: Array, centers: Array,
+                        weights: Optional[Array] = None
+                        ) -> Tuple[Array, Array, Array]:
         ...
 
 
@@ -98,6 +113,18 @@ def _dense_lloyd_stats(points: Array, centers: Array,
     return sums, counts, cost
 
 
+def _dense_weiszfeld_stats(points: Array, centers: Array,
+                           weights: Optional[Array] = None
+                           ) -> Tuple[Array, Array, Array]:
+    # the normative reduction (exact-form assigned distance + eta-smoothed
+    # inverse, DESIGN.md Sec. 10) is shared with the ops.py fallback and
+    # the oracle; only the argmin source differs per backend
+    from repro.kernels.ref import weiszfeld_reduce
+
+    _, assign = _dense_min_dist_argmin(points, centers)
+    return weiszfeld_reduce(points, centers, weights, assign)
+
+
 class JnpBackend:
     """Dense XLA-fused matmul formulation d^2 = |p|^2 + |c|^2 - 2 p.c."""
 
@@ -108,6 +135,9 @@ class JnpBackend:
 
     def lloyd_stats(self, points, centers, weights=None):
         return _dense_lloyd_stats(points, centers, weights)
+
+    def weiszfeld_stats(self, points, centers, weights=None):
+        return _dense_weiszfeld_stats(points, centers, weights)
 
 
 class JnpChunkedBackend:
@@ -149,6 +179,18 @@ class JnpChunkedBackend:
             (pts, ws))
         return sums.sum(axis=0), counts.sum(axis=0), cost.sum()
 
+    def weiszfeld_stats(self, points, centers, weights=None):
+        n = points.shape[0]
+        w = (jnp.ones((n,), jnp.float32) if weights is None
+             else weights.astype(jnp.float32))
+        if n <= self.chunk:
+            return _dense_weiszfeld_stats(points, centers, w)
+        pts, ws = self._blocks(points, w)
+        nums, denoms, cost = jax.lax.map(
+            lambda args: _dense_weiszfeld_stats(args[0], centers, args[1]),
+            (pts, ws))
+        return nums.sum(axis=0), denoms.sum(axis=0), cost.sum()
+
 
 class PallasBackend:
     """Fused Pallas TPU kernels (interpret mode on CPU). Thin delegation to
@@ -174,6 +216,13 @@ class PallasBackend:
         return kops.lloyd_stats(points, centers, weights,
                                 block_n=self.block_n,
                                 interpret=self.interpret)
+
+    def weiszfeld_stats(self, points, centers, weights=None):
+        from repro.kernels import ops as kops
+
+        return kops.weiszfeld_stats(points, centers, weights,
+                                    block_n=self.block_n,
+                                    interpret=self.interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -276,6 +325,9 @@ def _query_assignments(points, centers, objective, backend):
     return assign, dist
 
 
+_UNSET = object()
+
+
 class use_backend:
     """Set the ambient default backend.
 
@@ -284,15 +336,42 @@ class use_backend:
 
         with use_backend("jnp_chunked"):
             lloyd(points, centers)          # runs chunked
+
+    The restorable mutation lives in ``__enter__``, not ``__init__``: each
+    entry captures the default *at entry time* and restores exactly that on
+    exit, so a stored instance can be (re-)entered later -- even nested
+    inside other contexts -- without restoring a stale snapshot. The
+    ``__init__`` sticky set (the plain-call contract) records the
+    pre-construction default; the first entry immediately following
+    construction consumes it, so ``with use_backend(...)`` restores the
+    default from *before* the expression ran. ``__exit__`` without a
+    matching ``__enter__`` is a no-op.
     """
 
     def __init__(self, backend: BackendLike):
-        self._prev = getattr(_local, "default", None)
-        _local.default = resolve_name(backend)
+        self._name = resolve_name(backend)
+        # plain-call stickiness: constructing the object sets the ambient
+        # default; _pending remembers what it replaced for the first enter.
+        self._pending = getattr(_local, "default", None)
+        self._stack = []
+        _local.default = self._name
 
     def __enter__(self) -> ClusteringBackend:
-        return get_backend()
+        cur = getattr(_local, "default", None)
+        if self._pending is not _UNSET and cur == self._name:
+            # entering right after construction: the __init__ mutation was
+            # this entry's set; restore the pre-construction default.
+            prev = self._pending
+        else:
+            # stored instance entered later (ambient changed since
+            # construction): capture the current default, not the stale one.
+            prev = cur
+        self._pending = _UNSET
+        self._stack.append(prev)
+        _local.default = self._name
+        return get_backend(self._name)
 
     def __exit__(self, *exc) -> bool:
-        _local.default = self._prev
+        if self._stack:
+            _local.default = self._stack.pop()
         return False

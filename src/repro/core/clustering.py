@@ -11,8 +11,9 @@ Every distance/statistics hot loop dispatches through the backend registry
 (``"jnp"``, ``"jnp_chunked"``, ``"pallas"``), a :class:`ClusteringBackend`
 instance, or ``None`` for the ambient default (``use_backend`` /
 auto-detection). The k-means Lloyd step consumes the fused one-pass
-``lloyd_stats`` primitive -- on the Pallas backend the (n, k) distance
-matrix never exists in HBM (DESIGN.md Sec. 8).
+``lloyd_stats`` primitive and the k-median refinement consumes the fused
+``weiszfeld_stats`` primitive -- on the Pallas backend the (n, k) distance
+matrix never exists in HBM for either objective (DESIGN.md Sec. 8, 10).
 """
 from __future__ import annotations
 
@@ -68,6 +69,19 @@ def lloyd_stats(
         points, centers, weights)
 
 
+def weiszfeld_stats(
+    points: Array,
+    centers: Array,
+    weights: Optional[Array] = None,
+    backend: BackendLike = None,
+) -> Tuple[Array, Array, Array]:
+    """Fused weighted Weiszfeld statistics (nums (k,d), denoms (k,),
+    cost ()) for one k-median refinement pass, via the dispatch layer
+    (DESIGN.md Sec. 10)."""
+    return backend_mod.get_backend(backend).weiszfeld_stats(
+        points, centers, weights)
+
+
 def cost(
     points: Array,
     centers: Array,
@@ -116,6 +130,17 @@ def kmeans_pp_init(
                            backend=backend_mod.resolve_name(backend))
 
 
+def _masked_choice(key, mass):
+    """Categorical draw proportional to ``mass``, deterministic row 0 when
+    the total mass is zero. All-zero mass (a fully masked site under vmap,
+    or every remaining point coinciding with a chosen center) would make
+    every logit equal and seed uniformly from padding rows; those rows are
+    weight-0 and inert downstream, but the draw must be deterministic, not
+    an accident of the key."""
+    idx = jax.random.categorical(key, jnp.log(mass + _TINY))
+    return jnp.where(jnp.sum(mass) > 0.0, idx, 0).astype(jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "objective", "backend"))
 def _kmeans_pp_init(key, points, weights, k, objective, backend):
     b = backend_mod.get_backend(backend)
@@ -130,15 +155,14 @@ def _kmeans_pp_init(key, points, weights, k, objective, backend):
         return d2 if power == 2.0 else jnp.sqrt(jnp.maximum(d2, 0.0))
 
     key, k0 = jax.random.split(key)
-    first = jax.random.categorical(k0, jnp.log(w + _TINY))
+    first = _masked_choice(k0, w)
     centers = jnp.zeros((k, d), points.dtype).at[0].set(points[first])
     mind = dist_to(points[first])
 
     def body(i, carry):
         centers, mind, key = carry
         key, ki = jax.random.split(key)
-        logits = jnp.log(w * mind + _TINY)
-        idx = jax.random.categorical(ki, logits)
+        idx = _masked_choice(ki, w * mind)
         c = points[idx]
         centers = centers.at[i].set(c)
         mind = jnp.minimum(mind, dist_to(c))
@@ -159,25 +183,29 @@ def _kmeans_update(points, weights, centers, k, b):
 
 
 def _kmedian_update(points, weights, centers, k, b, weiszfeld_iters=4):
-    """One weighted alternating step for k-median: assign + per-cluster
-    Weiszfeld geometric-median refinement."""
-    d2, assign = b.min_dist_argmin(points, centers)
-    oh = jax.nn.one_hot(assign, k, dtype=points.dtype)
-    memb = oh * jnp.maximum(weights, 0.0)[:, None]   # (n, k)
+    """One weighted alternating step for k-median: ``weiszfeld_iters`` fused
+    refinement passes through the backend's ``weiszfeld_stats`` primitive.
 
-    def wbody(_, y):
-        # distance of every point to its cluster's current median estimate
-        dist = jnp.sqrt(
-            jnp.maximum(pairwise_sq_dists(points, y), _EPS)
-        )                                           # (n, k)
-        inv = memb / dist                           # (n, k)
-        denom = jnp.sum(inv, axis=0)                # (k,)
-        num = inv.T @ points                        # (k, d)
-        ynew = num / jnp.where(denom > _EPS, denom, 1.0)[:, None]
-        return jnp.where((denom > _EPS)[:, None], ynew, y)
+    Each pass assigns every point to its nearest current center and applies
+    one Weiszfeld geometric-median update to each cluster -- both the
+    reassignment and the Weiszfeld step (an MM step for the Fermat-Weber
+    objective) are non-increasing in k-median cost, so the composition is
+    monotone. Membership mass is max(w, 0) (signed coreset measures must
+    not pull medians toward negative mass); the returned cost is the signed
+    assignment cost at the *incoming* centers, matching the k-means update's
+    history semantics."""
+    del k  # static center count is implicit in the centers shape
 
-    new = jax.lax.fori_loop(0, weiszfeld_iters, wbody, centers)
-    c = jnp.sum(weights * jnp.sqrt(jnp.maximum(d2, 0.0)))
+    def wstep(y):
+        nums, denoms, c = b.weiszfeld_stats(points, y, weights)
+        ynew = nums / jnp.where(denoms > _EPS, denoms, 1.0)[:, None]
+        ynew = jnp.where((denoms > _EPS)[:, None], ynew,
+                         y.astype(jnp.float32))
+        return ynew.astype(centers.dtype), c
+
+    new, c = wstep(centers)
+    new = jax.lax.fori_loop(1, weiszfeld_iters,
+                            lambda _, y: wstep(y)[0], new)
     return new, c
 
 

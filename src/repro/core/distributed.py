@@ -8,9 +8,10 @@ Three execution paths over the same math:
 * :func:`distributed_kmeans_tree` -- same over a rooted spanning tree
   (Theorem 3 accounting: everything moves O(h) edges, no flooding).
 * :func:`spmd_distributed_kmeans` -- the production SPMD path: sites are
-  devices along a mesh axis, Round 1's scalar share is a ``lax.psum``,
-  Round 2's portion share is a ``lax.all_gather``; runs under ``shard_map``
-  on real meshes (and under the 512-device dry run).
+  devices along a mesh axis, Round 1's scalar share is a ``lax.all_gather``
+  (every device replays the exact largest-remainder allocation), Round 2's
+  portion share is a ``lax.all_gather``; runs under ``shard_map`` on real
+  meshes (and under the 512-device dry run).
 """
 from __future__ import annotations
 
@@ -137,11 +138,16 @@ def spmd_distributed_kmeans_fn(
     """Build the per-device function for Algorithm 1+2 under ``shard_map``.
 
     Each device holds one site's (M, d) shard + mask. Cross-device traffic is
-    exactly: one scalar psum (Round 1) + one all_gather of the fixed-size
-    local portion (Round 2) -- the paper's communication pattern mapped onto
-    the ICI collectives that implement neighbour message passing natively.
-    The ``backend`` hot-loop selection composes with ``shard_map``: the
-    Pallas kernels run per-device on that device's shard.
+    exactly: one all_gather of the n Round-1 cost scalars + one all_gather of
+    the fixed-size local portion (Round 2) -- the paper's communication
+    pattern mapped onto the ICI collectives that implement neighbour message
+    passing natively. Gathering the scalars (rather than psum-ing them) lets
+    every device run the *exact* largest-remainder ``proportional_allocation``
+    the host path uses, so ``sum_i t_i == t`` holds on this path too (a
+    rounded per-site share can collectively over/under-draw; DESIGN.md
+    Sec. 7's allocation invariant). The ``backend`` hot-loop selection
+    composes with ``shard_map``: the Pallas kernels run per-device on that
+    device's shard.
     """
     backend = backend_mod.resolve_name(backend)
 
@@ -161,12 +167,17 @@ def spmd_distributed_kmeans_fn(
         m, assign = sensitivities(pts, centers, w, objective=objective,
                                   backend=backend)
         local_cost = jnp.sum(m)
-        total_cost = jax.lax.psum(local_cost, axis_name)       # <- Round 1
+        all_costs = jax.lax.all_gather(local_cost, axis_name)  # <- Round 1
+        total_cost = jnp.sum(all_costs)
 
-        # per-site sample count (rounded share of t)
-        t_local = jnp.round(t * local_cost / jnp.maximum(total_cost, 1e-30))
-        t_local = jnp.minimum(t_local, t_buffer).astype(jnp.int32)
-        t_total = jax.lax.psum(t_local, axis_name).astype(pts.dtype)
+        # exact largest-remainder allocation over the gathered scalars --
+        # identical math to the host path, replicated on every device.
+        # t_local is NOT clamped to t_buffer here, also matching the host:
+        # _sample_and_weight truncates the realized draws at its t_buffer
+        # slots, and the weight formula keeps using the full allocation.
+        t_all = proportional_allocation(all_costs, t)
+        t_local = t_all[site]
+        t_total = jnp.sum(t_all).astype(pts.dtype)   # == t exactly
 
         sampled, w_s, w_b = _sample_and_weight(
             k_sample, pts, m, w, assign, k, t_local, t_buffer, total_cost,
@@ -205,8 +216,13 @@ def spmd_distributed_kmeans(
     objective: str = "kmeans",
     lloyd_iters: int = 8,
     backend: BackendLike = None,
-) -> Tuple[Array, Array]:
-    """Run the SPMD path on a mesh. Returns (centers (k,d), local_costs)."""
+) -> Tuple[Array, Array, Array]:
+    """Run the SPMD path on a mesh. Returns (centers (k,d), local_costs,
+    t_i) -- ``t_i`` are the per-site sample allocations, which satisfy
+    ``sum(t_i) == t`` exactly (largest-remainder allocation, identical to
+    the host path's, including its behavior when an allocation exceeds
+    ``t_buffer``: realized draws are truncated at the buffer while the
+    weight formula keeps the full allocation)."""
     n_sites = site_points.shape[0]
     axis_size = mesh.shape[axis_name]
     if n_sites % axis_size:
@@ -229,4 +245,4 @@ def spmd_distributed_kmeans(
         out_specs=(P(), P(axis_name), P(axis_name)),
     )
     centers, local_costs, t_i = jax.jit(shard)(key, site_points, site_mask)
-    return centers, local_costs
+    return centers, local_costs, t_i

@@ -1,10 +1,11 @@
-"""Pallas TPU kernels for the paper's compute hot-spot: pairwise-distance
-assignment and fused Lloyd statistics. Validated on CPU in interpret mode;
-TARGET is TPU (MXU matmul formulation, VMEM tiling via BlockSpec)."""
+"""Pallas TPU kernels for the paper's compute hot-spots: pairwise-distance
+assignment, fused Lloyd statistics (k-means) and fused Weiszfeld statistics
+(k-median). Validated on CPU in interpret mode; TARGET is TPU (MXU matmul
+formulation, VMEM tiling via BlockSpec)."""
 
 from repro.kernels import ops, ref
 from repro.kernels.ops import (lloyd_stats, lloyd_step, min_dist_argmin,
-                               pad_queries)
+                               pad_queries, weiszfeld_stats)
 
 __all__ = ["ops", "ref", "lloyd_stats", "lloyd_step", "min_dist_argmin",
-           "pad_queries"]
+           "pad_queries", "weiszfeld_stats"]

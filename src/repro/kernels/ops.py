@@ -5,7 +5,8 @@ Handles: shape padding to tile multiples (points padded with zeros + weight
 the argmin), dtype policy (inputs f32/bf16, accumulation f32), interpret-mode
 auto-selection on CPU (the kernels TARGET TPU; on this CPU container they
 run under ``interpret=True``), and the VMEM-residency fallback for
-:func:`lloyd_stats` when k*d exceeds the resident budget.
+:func:`lloyd_stats` / :func:`weiszfeld_stats` when k*d exceeds the
+resident budget.
 """
 from __future__ import annotations
 
@@ -18,6 +19,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.distance_argmin import distance_argmin as _distance_argmin
 from repro.kernels.lloyd_update import lloyd_stats as _lloyd_stats
+from repro.kernels.weiszfeld import weiszfeld_stats as _weiszfeld_stats
 
 Array = jax.Array
 
@@ -104,6 +106,35 @@ def lloyd_stats(points: Array, centers: Array,
     sums, counts, cost = _lloyd_stats(p, c, wp, block_n=block_n,
                                       interpret=_auto_interpret(interpret))
     return sums[:k, :d], counts[:k, 0], cost[0, 0]
+
+
+def weiszfeld_stats(points: Array, centers: Array,
+                    weights: Optional[Array] = None, block_n: int = 256,
+                    interpret: Optional[bool] = None
+                    ) -> Tuple[Array, Array, Array]:
+    """Fused Weiszfeld statistics (k-median): returns (nums (k,d) f32,
+    denoms (k,) f32, cost () f32). Falls back to kernel-1 + jnp one-hot ops
+    when the (k, d) center block cannot stay VMEM-resident."""
+    n, d = points.shape
+    k = centers.shape[0]
+    w = jnp.ones((n,), jnp.float32) if weights is None else weights
+    d_pad = -(-d // 128) * 128
+    k_pad = -(-k // 8) * 8
+    if k_pad * d_pad > _LLOYD_RESIDENT_FLOATS:
+        # two-pass fallback: fused assignment kernel + the shared normative
+        # XLA reduction (exact-form distance + eta smoothing)
+        _, assign = min_dist_argmin(points, centers, block_n=block_n,
+                                    interpret=interpret)
+        return ref.weiszfeld_reduce(points, centers, w, assign)
+
+    block_n = min(block_n, max(8, 1 << (n - 1).bit_length()))
+    p = _pad_dim(_pad_dim(points, 1, 128), 0, block_n)
+    c = _pad_dim(centers, 1, 128)
+    c = _pad_dim(c, 0, 8, value=_CENTER_SENTINEL)
+    wp = _pad_dim(w.astype(jnp.float32)[:, None], 0, block_n)
+    nums, denoms, cost = _weiszfeld_stats(p, c, wp, block_n=block_n,
+                                          interpret=_auto_interpret(interpret))
+    return nums[:k, :d], denoms[:k, 0], cost[0, 0]
 
 
 def lloyd_step(points: Array, centers: Array,

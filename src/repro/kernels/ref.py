@@ -44,3 +44,60 @@ def lloyd_stats_ref(points: Array, centers: Array,
     counts = jnp.sum(oh, axis=0)
     cost = jnp.sum(w * min_d2)
     return sums, counts, cost
+
+
+# Squared smoothing length eta^2 of the Weiszfeld inverse distance:
+# dist = sqrt(d2 + eta^2). The classic iteration is undefined at data
+# points, and k-means++ seeds ARE data points; eta bounds the pull of a
+# center-coincident point at w/eta instead of an unbounded (and float32-
+# noise-amplified) spike, so the iterate escapes its seed in O(1) passes
+# and all backends agree bit-for-bit on the clamp (DESIGN.md Sec. 10).
+WEISZFELD_ETA2 = 1e-6
+
+
+def weiszfeld_reduce(points: Array, centers: Array,
+                     weights: Optional[Array], assign: Array
+                     ) -> Tuple[Array, Array, Array]:
+    """The normative Weiszfeld reduction given an assignment (DESIGN.md
+    Sec. 10), shared by the jnp backends, the ops.py two-pass fallback and
+    the oracle so the numerics rules cannot desynchronize:
+
+    * exact-form assigned distance d2(p) = sum((p - c_assign(p))^2) -- the
+      |p|^2 + |c|^2 - 2 p.c matmul trick cancels catastrophically near
+      zero and the inverse distance amplifies that float32 noise by orders
+      of magnitude across backends;
+    * eta-smoothed inverse dist(p) = sqrt(d2(p) + WEISZFELD_ETA2) with
+      max(w, 0) membership mass and the signed, unsmoothed cost.
+
+    Returns (nums (k,d) f32, denoms (k,) f32, cost () f32).
+    """
+    p = points.astype(jnp.float32)
+    c = centers.astype(jnp.float32)
+    w = (jnp.ones((p.shape[0],), jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    diff = p - c[assign]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    dist = jnp.sqrt(d2 + WEISZFELD_ETA2)
+    inv = jnp.maximum(w, 0.0) / dist
+    k = centers.shape[0]
+    oh = jax.nn.one_hot(assign, k, dtype=jnp.float32) * inv[:, None]
+    nums = oh.T @ p
+    denoms = jnp.sum(oh, axis=0)
+    cost = jnp.sum(w * jnp.sqrt(d2))
+    return nums, denoms, cost
+
+
+def weiszfeld_stats_ref(points: Array, centers: Array,
+                        weights: Optional[Array] = None
+                        ) -> Tuple[Array, Array, Array]:
+    """One fused Weiszfeld statistics pass (k-median).
+
+    Returns (nums (k,d) f32, denoms (k,) f32, cost () f32) where, with
+    dist(p) = sqrt(d2(p) + eta^2) the smoothed exact-form distance to the
+    nearest center,
+    nums[c] = sum_{p: argmin(p)=c} max(w_p, 0) * p / dist(p),
+    denoms[c] = sum_{p: argmin(p)=c} max(w_p, 0) / dist(p),
+    cost = sum_p w_p * sqrt(d2(p))  (signed weights, unsmoothed metric).
+    """
+    _, assign = min_dist_argmin_ref(points, centers)
+    return weiszfeld_reduce(points, centers, weights, assign)

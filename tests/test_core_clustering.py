@@ -41,6 +41,34 @@ def test_kmeans_pp_never_selects_zero_weight_points():
         assert float(jnp.max(jnp.min(d2, axis=1))) < 1e-5
 
 
+def test_kmeans_pp_all_zero_weights_is_deterministic():
+    """Degenerate fully masked instance (an empty site under vmap in
+    distributed_coreset): with every logit equal, categorical would seed
+    uniformly from padding rows depending on the key; the guard must pin
+    every chosen center to row 0 for any key."""
+    rng = np.random.default_rng(7)
+    pts = jnp.asarray(rng.standard_normal((40, 5)).astype(np.float32))
+    w = jnp.zeros((40,))
+    for seed in range(5):
+        centers = clustering.kmeans_pp_init(jax.random.PRNGKey(seed), pts, 3,
+                                            weights=w)
+        np.testing.assert_array_equal(np.asarray(centers),
+                                      np.tile(np.asarray(pts[0]), (3, 1)))
+
+
+def test_kmeans_pp_single_positive_weight_point():
+    """All remaining mass at distance 0 after the first pick: subsequent
+    draws are degenerate too and must stay deterministic and in-range."""
+    rng = np.random.default_rng(8)
+    pts = jnp.asarray(rng.standard_normal((30, 4)).astype(np.float32))
+    w = jnp.zeros((30,)).at[17].set(2.0)
+    centers = clustering.kmeans_pp_init(KEY, pts, 4, weights=w)
+    # first center is the only weighted point; the rest collapse to row 0
+    np.testing.assert_array_equal(np.asarray(centers[0]),
+                                  np.asarray(pts[17]))
+    assert np.isfinite(np.asarray(centers)).all()
+
+
 def test_lloyd_cost_nonincreasing(gaussian_mixture):
     pts, _ = gaussian_mixture
     pts = jnp.asarray(pts)

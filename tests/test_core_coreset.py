@@ -128,6 +128,30 @@ def test_weighted_choice_never_draws_zero_mass_entries():
 
 
 @pytest.mark.parametrize("objective", ["kmeans", "kmedian"])
+def test_empty_site_portion_stays_all_zero_weight(objective):
+    """A fully masked site (zero points land on it) must contribute an
+    all-zero-weight portion: its local solve runs on an all-zero-weight
+    instance under vmap (deterministically seeded from row 0 by the
+    kmeans_pp_init degenerate guard), its sensitivities are zero, and no
+    sample or center weight may leak out of it."""
+    pts = _mixture(seed=12, n_per=200)
+    sp, sm = _sites(pts, n_sites=5, method="weighted", seed=13)
+    # append a sixth, fully masked site
+    sp = jnp.concatenate([sp, jnp.zeros_like(sp[:1])], axis=0)
+    sm = jnp.concatenate([sm, jnp.zeros_like(sm[:1])], axis=0)
+    dc = distributed_coreset(KEY, sp, sm, k=4, t=128, objective=objective)
+    w_empty = np.asarray(dc.weights[-1])
+    assert np.all(w_empty == 0.0), w_empty[w_empty != 0.0]
+    assert int(dc.t_i[-1]) == 0
+    assert float(dc.local_costs[-1]) == 0.0
+    assert np.isfinite(np.asarray(dc.points)).all()
+    # the other sites are unaffected: total mass and budget still exact
+    assert int(jnp.sum(dc.t_i)) == 128
+    np.testing.assert_allclose(float(jnp.sum(dc.weights)), len(pts),
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("objective", ["kmeans", "kmedian"])
 def test_coreset_approximates_cost_on_random_centers(objective):
     """Definition 1: coreset cost within eps of true cost for arbitrary
     center sets (statistical; generous t and tolerance)."""

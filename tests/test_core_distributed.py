@@ -84,6 +84,7 @@ SPMD_SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np, jax, jax.numpy as jnp
     from repro.core import spmd_distributed_kmeans, clustering
+    from repro.core.coreset import proportional_allocation
     from repro.core.partition import partition_indices, pad_partition
 
     rng = np.random.default_rng(0)
@@ -94,13 +95,23 @@ SPMD_SCRIPT = textwrap.dedent("""
     idx = partition_indices(pts, 8, "weighted", seed=1)
     sp, sm = pad_partition(pts, idx)
     mesh = jax.make_mesh((8,), ("sites",))
-    c, lc = spmd_distributed_kmeans(mesh, "sites", jax.random.PRNGKey(0),
-                                    jnp.asarray(sp), jnp.asarray(sm), k, t=256)
+    t = 256
+    c, lc, t_i = spmd_distributed_kmeans(mesh, "sites", jax.random.PRNGKey(0),
+                                         jnp.asarray(sp), jnp.asarray(sm), k,
+                                         t=t, t_buffer=t)
     _, full = clustering.solve(jax.random.PRNGKey(0), jnp.asarray(pts), k,
                                restarts=4)
     ratio = float(clustering.cost(jnp.asarray(pts), c) / full)
     assert ratio < 1.3, f"spmd ratio {ratio}"
     assert np.asarray(lc).shape == (8,)
+
+    # host-vs-SPMD t_i parity: given the same Round-1 scalars, the SPMD
+    # allocation must be the host path's exact largest-remainder allocation
+    # (sum-to-t invariant; a rounded share can over/under-draw collectively)
+    t_i = np.asarray(t_i)
+    t_host = np.asarray(proportional_allocation(jnp.asarray(lc), t))
+    assert (t_i == t_host).all(), (t_i, t_host)
+    assert t_i.sum() == t, t_i
     print("SPMD_OK", ratio)
 """)
 

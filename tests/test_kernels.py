@@ -58,6 +58,61 @@ def test_lloyd_stats_matches_ref(n, k, d, dtype):
     np.testing.assert_allclose(float(cost), float(cost_r), rtol=5e-3)
 
 
+@pytest.mark.parametrize("n,k,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_weiszfeld_stats_matches_ref(n, k, d, dtype):
+    pts, ctr, w = _data(n, k, d, dtype)
+    nums, denoms, cost = ops.weiszfeld_stats(pts, ctr, w)
+    nums_r, denoms_r, cost_r = ref.weiszfeld_stats_ref(pts, ctr, w)
+    tol = 1e-4 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(np.asarray(denoms), np.asarray(denoms_r),
+                               rtol=tol, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(nums), np.asarray(nums_r),
+                               rtol=tol, atol=max(tol * 10, 1e-3))
+    np.testing.assert_allclose(float(cost), float(cost_r), rtol=5e-3)
+
+
+def test_weiszfeld_stats_coincident_points_match_ref():
+    """Centers that are bit-exact data points (k-means++ seeds): the
+    exact-form distance must agree across kernel and oracle instead of
+    amplifying matmul cancellation noise through the inverse."""
+    pts, ctr, w = _data(300, 17, 90, jnp.float32)
+    ctr = pts[:17]
+    nums, denoms, cost = ops.weiszfeld_stats(pts, ctr, w)
+    nums_r, denoms_r, cost_r = ref.weiszfeld_stats_ref(pts, ctr, w)
+    np.testing.assert_allclose(np.asarray(denoms), np.asarray(denoms_r),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(nums), np.asarray(nums_r),
+                               rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(float(cost), float(cost_r), rtol=1e-4,
+                               atol=1e-3)
+
+
+def test_weiszfeld_stats_large_k_fallback_path():
+    """k*d beyond the VMEM-resident budget must route through the two-pass
+    fallback and still match the oracle."""
+    pts, ctr, w = _data(512, 1100, 1024, jnp.float32)
+    nums, denoms, cost = ops.weiszfeld_stats(pts, ctr, w)
+    nums_r, denoms_r, cost_r = ref.weiszfeld_stats_ref(pts, ctr, w)
+    np.testing.assert_allclose(np.asarray(denoms), np.asarray(denoms_r),
+                               rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(nums), np.asarray(nums_r),
+                               rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(float(cost), float(cost_r), rtol=1e-3)
+
+
+def test_weiszfeld_zero_weight_points_do_not_contribute():
+    pts, ctr, w = _data(128, 4, 8, jnp.float32)
+    w = w.at[64:].set(0.0)
+    nums_a, denoms_a, cost_a = ops.weiszfeld_stats(pts, ctr, w)
+    nums_b, denoms_b, cost_b = ops.weiszfeld_stats(pts[:64], ctr, w[:64])
+    np.testing.assert_allclose(np.asarray(nums_a), np.asarray(nums_b),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(denoms_a), np.asarray(denoms_b),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(cost_a), float(cost_b), rtol=1e-5)
+
+
 def test_lloyd_stats_large_k_fallback_path():
     """k*d beyond the VMEM-resident budget must route through the two-pass
     fallback and still match the oracle."""
