@@ -15,7 +15,7 @@ import time
 
 from benchmarks import (bench_comm_scaling, bench_coreset_size,
                         bench_fig2_graphs, bench_fig3_trees, bench_kernels,
-                        bench_roofline, bench_stream)
+                        bench_roofline, bench_stream, bench_topologies)
 from benchmarks.common import write_json_rows
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -27,7 +27,7 @@ def main(argv=None) -> None:
                     help="paper-scale datasets and run counts")
     ap.add_argument("--only", default="",
                     help="comma-separated subset: fig2,fig3,comm,size,"
-                         "kernels,roofline,stream")
+                         "kernels,roofline,stream,topologies")
     args = ap.parse_args(argv)
     scale = 1.0 if args.full else 0.05
     n_runs = 5 if args.full else 2
@@ -53,6 +53,13 @@ def main(argv=None) -> None:
         print(f"# wrote {out_json}", file=sys.stderr)
     if only is None or "stream" in only:
         bench_stream.run(scale=scale, out_rows=rows)
+    if only is None or "topologies" in only:
+        topo_rows: list = []
+        bench_topologies.run(scale=scale, n_runs=n_runs, out_rows=topo_rows)
+        rows.extend(topo_rows)
+        out_json = os.path.join(_REPO_ROOT, "BENCH_topologies.json")
+        write_json_rows(out_json, topo_rows)
+        print(f"# wrote {out_json}", file=sys.stderr)
     if only is None or "roofline" in only:
         bench_roofline.run(out_rows=rows)
     print(f"# total {time.time()-t0:.1f}s, {len(rows)-1} rows",

@@ -11,11 +11,18 @@ from repro.core.clustering import (cost, kmeans_pp_init, lloyd, lloyd_stats,
 from repro.core.comm import CommLedger
 from repro.core.coreset import (Coreset, DistributedCoreset, build_coreset,
                                 distributed_coreset, merge_coresets)
-from repro.core.distributed import (ClusteringResult, distributed_kmeans,
+from repro.core.distributed import (ClusteringResult, ExecDetail,
+                                    distributed_kmeans,
                                     distributed_kmeans_tree,
+                                    graph_distributed_kmeans,
                                     spmd_distributed_kmeans)
+from repro.core.message_passing import (ExecResult, GossipSchedule,
+                                        TreeSchedule, flood_exec,
+                                        tree_broadcast_exec, tree_gather_exec,
+                                        tree_scatter_exec, tree_up_sum_exec)
 from repro.core.topology import (Graph, SpanningTree, bfs_spanning_tree,
-                                 diameter, erdos_renyi, grid, preferential)
+                                 diameter, erdos_renyi, grid, preferential,
+                                 ring, star)
 
 __all__ = [
     "backend", "baselines", "clustering", "comm", "coreset", "distributed",
@@ -26,8 +33,12 @@ __all__ = [
     "solve",
     "CommLedger", "Coreset", "DistributedCoreset", "build_coreset",
     "distributed_coreset", "merge_coresets",
-    "ClusteringResult", "distributed_kmeans",
-    "distributed_kmeans_tree", "spmd_distributed_kmeans",
+    "ClusteringResult", "ExecDetail", "distributed_kmeans",
+    "distributed_kmeans_tree", "graph_distributed_kmeans",
+    "spmd_distributed_kmeans",
+    "ExecResult", "GossipSchedule", "TreeSchedule", "flood_exec",
+    "tree_broadcast_exec", "tree_gather_exec", "tree_scatter_exec",
+    "tree_up_sum_exec",
     "Graph", "SpanningTree", "bfs_spanning_tree", "diameter", "erdos_renyi",
-    "grid", "preferential",
+    "grid", "preferential", "ring", "star",
 ]

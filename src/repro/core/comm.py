@@ -83,16 +83,35 @@ def flood_cost(g: Graph, n_messages: int, unit_points: float = 0.0,
     )
 
 
+def tree_gather_cost(tree: SpanningTree, unit_points_per_node=0.0,
+                     unit_scalars_per_node=0.0, dim: int = 0) -> CommLedger:
+    """Per-node payloads routed along parent edges to the root: node v's
+    payload travels its ``depth(v)`` edges (Theorem 3's O(h) factor). By
+    path symmetry the identical ledger prices the root *scattering*
+    per-node payloads back down their subtree paths (the executed Round-1
+    allocation delivery; DESIGN.md Sec. 11). Units: scalar or per-node
+    sequence; a node transmits (counts a message per hop) iff it has any
+    positive unit."""
+
+    def per_node(u):
+        return [u] * tree.n if not hasattr(u, "__len__") else u
+
+    up = per_node(unit_points_per_node)
+    us = per_node(unit_scalars_per_node)
+    pts = sum(tree.depth[v] * up[v] for v in range(tree.n))
+    scl = sum(tree.depth[v] * us[v] for v in range(tree.n))
+    msgs = sum(tree.depth[v] for v in range(tree.n)
+               if up[v] > 0 or us[v] > 0)
+    return CommLedger(scalars=float(scl), points=float(pts),
+                      messages=float(msgs), dim=dim)
+
+
 def tree_up_cost(tree: SpanningTree, unit_points_per_node, dim: int = 0
                  ) -> CommLedger:
     """Each node's payload travels its depth edges up to the root
     (Theorem 3's O(h) factor). ``unit_points_per_node``: scalar or seq."""
-    if not hasattr(unit_points_per_node, "__len__"):
-        unit_points_per_node = [unit_points_per_node] * tree.n
-    pts = sum(tree.depth[v] * unit_points_per_node[v] for v in range(tree.n))
-    msgs = sum(tree.depth[v] for v in range(tree.n)
-               if unit_points_per_node[v] > 0)
-    return CommLedger(points=float(pts), messages=float(msgs), dim=dim)
+    return tree_gather_cost(tree, unit_points_per_node=unit_points_per_node,
+                            dim=dim)
 
 
 def tree_broadcast_cost(tree: SpanningTree, unit_points: float = 0.0,

@@ -215,23 +215,47 @@ def merge_coresets(
 
 def proportional_allocation(costs: Array, t: int) -> Array:
     """Largest-remainder allocation of ``t`` samples proportional to local
-    costs: sum_i t_i == t exactly, t_i ~= t * cost_i / sum_j cost_j.
+    costs: sum_i t_i == t exactly, t_i >= 0, t_i ~= t * cost_i / sum_j cost_j.
 
     Degenerate all-zero costs (every site already solves its data exactly)
     fall back to the uniform allocation -- the sum-to-``t`` invariant must
-    hold for any input, since Round 2 draws exactly ``t_i`` samples."""
+    hold for any input, since Round 2 draws exactly ``t_i`` samples.
+
+    The remainder correction is sign-safe: float error in ``t * cost_i /
+    total`` can drive ``rem = t - sum(floor(frac))`` *negative* at extreme
+    cost scales (every fraction rounding up), and the one-sided bonus would
+    then leave ``sum(t_i) > t``. A negative remainder is taken back from
+    the sites with the smallest fractional parts, capped per-site at its
+    floor so no allocation goes negative (greedy over the sorted capacity
+    prefix -- total capacity is ``sum(base) = t - rem >= -rem``, so the
+    take-back always completes). The positive branch likewise survives
+    ``rem > n_sites`` (uniform ``rem // n`` plus largest-remainder on the
+    rest)."""
     n_sites = costs.shape[0]
     total = jnp.sum(costs)
+    # ratio-first: costs/total <= 1 never overflows, while t*costs can hit
+    # inf around 1e36 in f32 (an inf fraction floors to garbage and drives
+    # the remainder arbitrarily negative)
     frac = jnp.where(total > _TINY,
-                     t * costs / jnp.maximum(total, _TINY),
+                     t * (costs / jnp.maximum(total, _TINY)),
                      jnp.full_like(costs, t / n_sites))
     base = jnp.floor(frac)
     rem = t - jnp.sum(base).astype(jnp.int32)
-    # rank sites by fractional part, give the remainder to the top-`rem`
     fr = frac - base
-    rank = jnp.argsort(jnp.argsort(-fr))
-    bonus = (rank < rem).astype(base.dtype)
-    return (base + bonus).astype(jnp.int32)
+    # rem > 0: rank sites by fractional part, award the remainder to the
+    # top-`rem` (cycling via // when rem exceeds n_sites)
+    rank_hi = jnp.argsort(jnp.argsort(-fr))
+    pos = jnp.maximum(rem, 0)
+    award = pos // n_sites + (rank_hi < pos % n_sites).astype(jnp.int32)
+    # rem < 0: take back from the smallest fractional parts first, at most
+    # `base_i` each (keeps t_i >= 0); greedy prefix over sorted capacities
+    need = jnp.maximum(-rem, 0)
+    order = jnp.argsort(fr)
+    cap = base[order].astype(jnp.int32)
+    before = jnp.cumsum(cap) - cap
+    take_sorted = jnp.clip(need - before, 0, cap)
+    take = jnp.zeros_like(cap).at[order].set(take_sorted)
+    return base.astype(jnp.int32) + award - take
 
 
 @functools.partial(jax.tree_util.register_dataclass,
@@ -284,27 +308,43 @@ def distributed_coreset(
     is an invalid slot).
     """
     t_buffer = t if t_buffer is None else t_buffer
-    return _distributed_coreset(key, site_points, site_mask, site_weights,
-                                k=k, t=t, t_buffer=t_buffer,
-                                objective=objective, lloyd_iters=lloyd_iters,
-                                clip_negative=clip_negative,
-                                backend=backend_mod.resolve_name(backend))
+    backend = backend_mod.resolve_name(backend)
+    n_sites = site_points.shape[0]
+    w_site = (site_mask.astype(site_points.dtype) if site_weights is None
+              else site_weights.astype(site_points.dtype))
+    keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
+
+    centers, m, assign, local_costs = round1_local_solves(
+        keys[:, 0], site_points, w_site, k=k, objective=objective,
+        lloyd_iters=lloyd_iters, backend=backend)
+
+    # -- the single communicated aggregate -----------------------------------
+    # (the topology execution engine in repro.core.distributed runs these
+    # same two stages but moves local_costs / the portions through executed
+    # message-passing rounds instead of touching them globally here)
+    total_m = jnp.sum(local_costs)
+    t_i = proportional_allocation(local_costs, t)
+
+    portions = round2_local_samples(
+        keys[:, 1], site_points, m, w_site, assign, centers, t_i,
+        jnp.broadcast_to(total_m, (n_sites,)), k=k, t=t, t_buffer=t_buffer,
+        clip_negative=clip_negative)
+    return DistributedCoreset(points=portions.points,
+                              weights=portions.weights, t_i=t_i,
+                              local_costs=local_costs)
 
 
 @functools.partial(
-    jax.jit,
-    static_argnames=("k", "t", "t_buffer", "objective", "lloyd_iters",
-                     "clip_negative", "backend"))
-def _distributed_coreset(key, site_points, site_mask, site_weights, k, t,
-                         t_buffer, objective, lloyd_iters, clip_negative,
-                         backend):
-    n_sites, M, d = site_points.shape
-    w_site = (site_mask.astype(site_points.dtype) if site_weights is None
-              else site_weights.astype(site_points.dtype))
+    jax.jit, static_argnames=("k", "objective", "lloyd_iters", "backend"))
+def round1_local_solves(keys, site_points, w_site, k, objective, lloyd_iters,
+                        backend):
+    """Algorithm 1 Round 1, the purely-local stage: every site solves its
+    own weighted instance. Returns (centers (n,k,d), sensitivities m (n,M),
+    assignments (n,M), local_costs (n,)) -- ``local_costs`` are the only
+    values any communication round needs to move. Shared verbatim by the
+    host-simulation path, the topology execution engine, and the streaming
+    aggregation rounds, so their numerics are identical by construction."""
 
-    keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
-
-    # -- Round 1: local constant-approximation solves ------------------------
     def local_solve(ki, pts, w):
         # as in _build_coreset: solve B_i on max(w, 0) (identity for masked
         # sites), signed w for the sensitivities
@@ -319,26 +359,28 @@ def _distributed_coreset(key, site_points, site_mask, site_weights, k, t,
                                   backend=backend)
         return centers, m, assign
 
-    centers, m, assign = jax.vmap(local_solve)(keys[:, 0], site_points, w_site)
-    local_costs = m.sum(axis=1)                      # == cost(P_i, B_i)
+    centers, m, assign = jax.vmap(local_solve)(keys, site_points, w_site)
+    return centers, m, assign, m.sum(axis=1)   # costs == cost(P_i, B_i)
 
-    # -- the single communicated aggregate -----------------------------------
-    total_m = jnp.sum(local_costs)
-    t_i = proportional_allocation(local_costs, t)
 
-    # -- Round 2: local sampling ---------------------------------------------
-    def local_sample(ki, pts, m_i, w_i, a_i, ti):
+@functools.partial(
+    jax.jit, static_argnames=("k", "t", "t_buffer", "clip_negative"))
+def round2_local_samples(keys, site_points, m, w_site, assign, centers, t_i,
+                         total_m, k, t, t_buffer, clip_negative):
+    """Algorithm 1 Round 2, the purely-local stage: every site draws its
+    ``t_i`` samples and assembles its portion S_i u B_i. ``total_m`` is
+    per-site (n,) -- each site uses the global sensitivity total *it
+    received* (all entries are bit-identical copies on every path, but the
+    execution engine genuinely delivers one per node)."""
+
+    def local_sample(ki, pts, m_i, w_i, a_i, ti, tm):
         return _sample_and_weight(ki, pts, m_i, w_i, a_i, k, ti, t_buffer,
-                                  total_m, jnp.asarray(float(t)))
+                                  tm, jnp.asarray(float(t)))
 
     sampled, w_s, w_b = jax.vmap(local_sample)(
-        keys[:, 1], site_points, m, w_site, assign, t_i)
+        keys, site_points, m, w_site, assign, t_i, total_m)
     if clip_negative:
         w_b = jnp.maximum(w_b, 0.0)
-
     # per-site portion S_i u B_i, stitched via the shared mask-aware union
-    portions = jax.vmap(Coreset.concat)(Coreset(sampled, w_s),
-                                        Coreset(centers, w_b))
-    return DistributedCoreset(points=portions.points,
-                              weights=portions.weights, t_i=t_i,
-                              local_costs=local_costs)
+    return jax.vmap(Coreset.concat)(Coreset(sampled, w_s),
+                                    Coreset(centers, w_b))

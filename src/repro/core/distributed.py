@@ -2,35 +2,53 @@
 
 Three execution paths over the same math:
 
-* :func:`distributed_kmeans` -- host-level simulation over an arbitrary
-  ``Graph`` with an exact :class:`CommLedger` (reproduces the paper's
-  experiments: general graphs, Theorem 2 accounting).
+* :func:`graph_distributed_kmeans` -- Algorithm 2 over an arbitrary
+  ``Graph``. ``engine="sim"`` is the host-level oracle with an *analytic*
+  :class:`CommLedger` (Theorem 2 accounting); ``engine="exec"`` routes the
+  identical math through the topology execution engine
+  (:mod:`repro.core.message_passing`): the Round-1 scalars and Round-2
+  portions physically move through jitted flood rounds, every node ends
+  holding the bit-identical global coreset, and the returned ledger is
+  *measured* from the executed schedule (it equals the analytic one
+  exactly -- tests assert this).
 * :func:`distributed_kmeans_tree` -- same over a rooted spanning tree
-  (Theorem 3 accounting: everything moves O(h) edges, no flooding).
+  (Theorem 3 accounting: everything moves O(h) edges, no flooding), with
+  the same ``engine="sim"|"exec"`` choice (gather/scatter/broadcast tree
+  schedules).
 * :func:`spmd_distributed_kmeans` -- the production SPMD path: sites are
-  devices along a mesh axis, Round 1's scalar share is a ``lax.all_gather``
-  (every device replays the exact largest-remainder allocation), Round 2's
-  portion share is a ``lax.all_gather``; runs under ``shard_map`` on real
-  meshes (and under the 512-device dry run).
+  devices along a mesh axis; ``collectives="all_gather"`` shares Round 1's
+  scalars and Round 2's portions via ``lax.all_gather``, while
+  ``collectives="neighbor_rounds"`` swaps both gathers for the explicit
+  ring ``ppermute`` primitives of Algorithm 3
+  (:func:`~repro.core.message_passing.neighbor_rounds_gather`) --
+  bit-identical results, neighbour-only traffic. Runs under ``shard_map``
+  on real meshes (and under the 512-device dry run).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import backend as backend_mod
 from repro.core import clustering
 from repro.core.backend import BackendLike
 from repro.core.comm import (CommLedger, flood_cost, tree_broadcast_cost,
-                             tree_up_cost)
+                             tree_gather_cost, tree_up_cost)
 from repro.core.coreset import (Coreset, DistributedCoreset,
                                 distributed_coreset, proportional_allocation,
+                                round1_local_solves, round2_local_samples,
                                 sensitivities, _sample_and_weight)
+from repro.core.message_passing import (ExecResult, GossipSchedule,
+                                        TreeSchedule, flood_exec,
+                                        neighbor_rounds_gather, pack_payload,
+                                        tree_broadcast_exec, tree_gather_exec,
+                                        tree_scatter_exec, unpack_payload)
 from repro.core.topology import Graph, SpanningTree
 
 from repro.compat import shard_map as _shard_map
@@ -39,11 +57,33 @@ Array = jax.Array
 
 
 @dataclasses.dataclass
+class ExecDetail:
+    """Per-node state after the executed communication rounds -- the
+    verification surface for engine-vs-simulation parity tests.
+
+    Graph engine: ``node_points``/``node_weights`` are every node's
+    assembled global coreset (n, n*S, d) / (n, n*S) and ``node_alloc`` the
+    (n, n) allocation vector each node computed from its received scalars
+    (all rows bit-identical). Tree engine: ``node_centers`` (n, k, d) holds
+    the solution every node received from the root's broadcast and
+    ``node_alloc`` the (n,) per-node allocations delivered by the scatter.
+    ``node_totals`` is the global cost total as known at each node."""
+
+    node_points: Optional[Array] = None
+    node_weights: Optional[Array] = None
+    node_centers: Optional[Array] = None
+    node_alloc: Optional[Array] = None
+    node_totals: Optional[Array] = None
+    rounds: Dict[str, ExecResult] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
 class ClusteringResult:
     centers: Array
     coreset: Coreset
     ledger: CommLedger
     local_costs: Array
+    exec_detail: Optional[ExecDetail] = None
 
 
 def _solve_on_coreset(key: Array, cs: Coreset, k: int, objective: str,
@@ -57,7 +97,7 @@ def _solve_on_coreset(key: Array, cs: Coreset, k: int, objective: str,
     return centers
 
 
-def distributed_kmeans(
+def graph_distributed_kmeans(
     key: Array,
     site_points: Array,
     site_mask: Array,
@@ -67,10 +107,22 @@ def distributed_kmeans(
     objective: str = "kmeans",
     lloyd_iters: int = 8,
     backend: BackendLike = None,
+    engine: str = "sim",
 ) -> ClusteringResult:
     """Algorithm 2 on a general graph. Round 1 floods n scalars (2mn
     messages); Round 2 floods the n local portions (2m * sum_i |D_i|
-    points); every node then solves the identical weighted instance."""
+    points); every node then solves the identical weighted instance.
+
+    ``engine="sim"`` computes the rounds globally and prices them with the
+    analytic Theorem-2 ledger (the oracle). ``engine="exec"`` executes them
+    on a compiled :class:`GossipSchedule` -- same local stages, same keys,
+    so the result is bit-identical, but the scalars and portions physically
+    move edge by edge and the ledger is measured from the schedule."""
+    if engine == "exec":
+        return _graph_exec(key, site_points, site_mask, k, t, graph,
+                           objective, lloyd_iters, backend)
+    if engine != "sim":
+        raise ValueError(f"unknown engine {engine!r}: expected 'sim'|'exec'")
     n_sites, _, d = site_points.shape
     backend = backend_mod.resolve_name(backend)
     k1, k2 = jax.random.split(key)
@@ -87,6 +139,93 @@ def distributed_kmeans(
     return ClusteringResult(centers, cs, ledger, dc.local_costs)
 
 
+# the original name stays as an alias (the sim path was the only mode once)
+distributed_kmeans = graph_distributed_kmeans
+
+
+def exec_algorithm1_rounds(
+    sched: GossipSchedule,
+    key: Array,
+    site_points: Array,
+    w_site: Array,
+    k: int,
+    t: int,
+    t_buffer: int,
+    objective: str,
+    lloyd_iters: int,
+    clip_negative: bool,
+    backend: str,
+) -> Tuple[ExecDetail, Array]:
+    """Algorithm 1 with both communication rounds *executed* on a gossip
+    schedule. Same local stage functions and key derivation as
+    ``distributed_coreset``, so every node's assembled coreset is
+    bit-identical to the host path's; the ``ExecDetail`` ledgers are
+    measured per transmission. Shared by :func:`graph_distributed_kmeans`
+    and the streaming aggregation rounds. Returns (detail, local_costs)."""
+    n_sites, _, d = site_points.shape
+    keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
+
+    centers_l, m, assign, local_costs = round1_local_solves(
+        keys[:, 0], site_points, w_site, k=k, objective=objective,
+        lloyd_iters=lloyd_iters, backend=backend)
+
+    # -- Round 1 executed: flood the n cost scalars --------------------------
+    cost_tables, r1 = flood_exec(sched, local_costs[:, None],
+                                 unit_scalars=1.0)
+    costs_at = cost_tables[:, :, 0]                        # (node, origin)
+    node_alloc = jax.vmap(lambda c: proportional_allocation(c, t))(costs_at)
+    t_i = jnp.diagonal(node_alloc)            # node v uses its own share
+    node_totals = jax.vmap(jnp.sum)(costs_at)
+
+    portions = round2_local_samples(
+        keys[:, 1], site_points, m, w_site, assign, centers_l, t_i,
+        node_totals, k=k, t=t, t_buffer=t_buffer,
+        clip_negative=clip_negative)
+
+    # -- Round 2 executed: flood the fixed-size local portions ---------------
+    payload = pack_payload(portions.points, portions.weights)
+    unit_pts = (np.asarray(t_i) + k).astype(np.float64)
+    port_tables, r2 = flood_exec(sched, payload, unit_points=unit_pts,
+                                 dim=d)
+    slots = payload.shape[1]
+    node_pts, node_w = unpack_payload(port_tables)
+    detail = ExecDetail(
+        node_points=node_pts.reshape(n_sites, n_sites * slots, d),
+        node_weights=node_w.reshape(n_sites, n_sites * slots),
+        node_alloc=node_alloc, node_totals=node_totals,
+        rounds={"round1": r1, "round2": r2})
+    return detail, local_costs
+
+
+def _graph_exec(key, site_points, site_mask, k, t, graph, objective,
+                lloyd_iters, backend) -> ClusteringResult:
+    """Execute Algorithm 2's communication on a compiled gossip schedule.
+
+    Identical math to the sim path stage for stage (same key derivation,
+    same jitted stage functions), but the n Round-1 scalars and the n
+    Round-2 portions move through executed flood rounds: every node ends
+    holding bit-identical copies of all n cost scalars (from which it
+    replays the exact largest-remainder allocation locally) and of the
+    global coreset. The returned ledger is measured per transmission."""
+    n_sites, _, d = site_points.shape
+    if graph.n != n_sites:
+        raise ValueError(f"graph has {graph.n} nodes for {n_sites} sites")
+    backend = backend_mod.resolve_name(backend)
+    sched = GossipSchedule.from_graph(graph)
+    k1, k2 = jax.random.split(key)
+    detail, local_costs = exec_algorithm1_rounds(
+        sched, k1, site_points, site_mask.astype(site_points.dtype), k, t,
+        t_buffer=t, objective=objective, lloyd_iters=lloyd_iters,
+        clip_negative=False, backend=backend)
+
+    # every node holds the identical instance; solve it once (node 0's copy)
+    cs = Coreset(detail.node_points[0], detail.node_weights[0])
+    centers = _solve_on_coreset(k2, cs, k, objective, lloyd_iters, backend)
+    ledger = detail.rounds["round1"].ledger.add(detail.rounds["round2"].ledger)
+    return ClusteringResult(centers, cs, ledger, local_costs,
+                            exec_detail=detail)
+
+
 def distributed_kmeans_tree(
     key: Array,
     site_points: Array,
@@ -97,11 +236,27 @@ def distributed_kmeans_tree(
     objective: str = "kmeans",
     lloyd_iters: int = 8,
     backend: BackendLike = None,
+    engine: str = "sim",
 ) -> ClusteringResult:
-    """Algorithm 2 restricted to a rooted tree (Theorem 3): costs are summed
-    up the tree (n-1 scalars), the total is broadcast down (n-1 scalars),
-    portions travel depth(v) edges to the root, the solution (k points) is
-    broadcast back."""
+    """Algorithm 2 restricted to a rooted tree (Theorem 3): the raw cost
+    scalars are gathered to the root along parent edges (sum_v depth(v)
+    scalars), the root replays the exact largest-remainder allocation and
+    scatters each site's share back down its subtree path (sum_v depth(v)
+    scalars) plus broadcasts the cost total (n-1 scalars); portions travel
+    depth(v) edges to the root, and the solution (k points) is broadcast
+    back.
+
+    (The 2(n-1)-scalar up-sum-only accounting previously used here priced a
+    protocol that cannot compute the exact allocation: largest-remainder
+    needs all n scalars at one place, and a tree-structured partial-sum
+    reduction neither delivers them nor reproduces the host's float-exact
+    total. The ledger now prices the executable gather/scatter protocol --
+    the ``engine="exec"`` path runs it and measures the same numbers.)"""
+    if engine == "exec":
+        return _tree_exec(key, site_points, site_mask, k, t, tree,
+                          objective, lloyd_iters, backend)
+    if engine != "sim":
+        raise ValueError(f"unknown engine {engine!r}: expected 'sim'|'exec'")
     n_sites, _, d = site_points.shape
     backend = backend_mod.resolve_name(backend)
     k1, k2 = jax.random.split(key)
@@ -113,11 +268,77 @@ def distributed_kmeans_tree(
 
     t_i = [float(x) for x in dc.t_i]
     per_node = [t_i[v] + k for v in range(tree.n)]
-    ledger = CommLedger(scalars=2.0 * (tree.n - 1),
-                        messages=2.0 * (tree.n - 1))
+    ledger = _tree_round1_cost(tree)
     ledger = ledger.add(tree_up_cost(tree, per_node, dim=d))
     ledger = ledger.add(tree_broadcast_cost(tree, unit_points=float(k), dim=d))
     return ClusteringResult(centers, cs, ledger, dc.local_costs)
+
+
+def _tree_round1_cost(tree: SpanningTree) -> CommLedger:
+    """Analytic Round-1 ledger of the executable tree protocol: raw cost
+    scalars up (gather), per-site allocations down (scatter), total down
+    (broadcast)."""
+    ledger = tree_gather_cost(tree, unit_scalars_per_node=1.0)   # costs up
+    ledger = ledger.add(tree_gather_cost(tree, unit_scalars_per_node=1.0))
+    ledger = ledger.add(tree_broadcast_cost(tree, unit_scalars=1.0))
+    return ledger
+
+
+def _tree_exec(key, site_points, site_mask, k, t, tree, objective,
+               lloyd_iters, backend) -> ClusteringResult:
+    """Execute Algorithm 2's communication on a compiled tree schedule:
+    gather the raw Round-1 scalars to the root, replay the allocation
+    there, scatter each site's share down its subtree path, broadcast the
+    total; gather the Round-2 portions to the root, solve there, broadcast
+    the k centers. Bit-identical to the sim path; measured ledger."""
+    n_sites, _, d = site_points.shape
+    if tree.n != n_sites:
+        raise ValueError(f"tree has {tree.n} nodes for {n_sites} sites")
+    backend = backend_mod.resolve_name(backend)
+    sched = TreeSchedule.from_tree(tree)
+    k1, k2 = jax.random.split(key)
+    w_site = site_mask.astype(site_points.dtype)
+    keys = jax.random.split(k1, n_sites * 2).reshape(n_sites, 2, -1)
+
+    centers_l, m, assign, local_costs = round1_local_solves(
+        keys[:, 0], site_points, w_site, k=k, objective=objective,
+        lloyd_iters=lloyd_iters, backend=backend)
+
+    # -- Round 1 executed: costs up, allocations + total down ----------------
+    root_costs, r1a = tree_gather_exec(sched, local_costs[:, None],
+                                       unit_scalars=1.0)
+    t_root = proportional_allocation(root_costs[:, 0], t)
+    total = jnp.sum(root_costs[:, 0])
+    own_t, r1b = tree_scatter_exec(sched, t_root[:, None], unit_scalars=1.0)
+    node_totals, r1c = tree_broadcast_exec(sched, total[None],
+                                           unit_scalars=1.0)
+    t_i = own_t[:, 0]
+
+    portions = round2_local_samples(
+        keys[:, 1], site_points, m, w_site, assign, centers_l, t_i,
+        node_totals[:, 0], k=k, t=t, t_buffer=t, clip_negative=False)
+
+    # -- Round 2 executed: portions up, solution down ------------------------
+    payload = pack_payload(portions.points, portions.weights)
+    unit_pts = (np.asarray(t_i) + k).astype(np.float64)
+    root_table, r2a = tree_gather_exec(sched, payload, unit_points=unit_pts,
+                                       dim=d)
+    root_pts, root_w = unpack_payload(root_table)
+    cs = Coreset(root_pts.reshape(-1, d), root_w.reshape(-1))
+    centers = _solve_on_coreset(k2, cs, k, objective, lloyd_iters, backend)
+    node_centers, r2b = tree_broadcast_exec(sched, centers,
+                                            unit_points=float(k), dim=d)
+
+    ledger = r1a.ledger.add(r1b.ledger).add(r1c.ledger) \
+        .add(r2a.ledger).add(r2b.ledger)
+    detail = ExecDetail(node_centers=node_centers, node_alloc=t_i,
+                        node_totals=node_totals[:, 0],
+                        rounds={"round1_gather": r1a, "round1_scatter": r1b,
+                                "round1_broadcast": r1c,
+                                "round2_gather": r2a,
+                                "round2_broadcast": r2b})
+    return ClusteringResult(centers, cs, ledger, local_costs,
+                            exec_detail=detail)
 
 
 # ---------------------------------------------------------------------------
@@ -126,7 +347,7 @@ def distributed_kmeans_tree(
 
 def spmd_distributed_kmeans_fn(
     axis_name: str,
-    n_sites: int,
+    axis_size: int,
     k: int,
     t: int,
     t_buffer: int,
@@ -134,22 +355,42 @@ def spmd_distributed_kmeans_fn(
     lloyd_iters: int = 8,
     final_lloyd_iters: int = 10,
     backend: BackendLike = None,
+    collectives: str = "all_gather",
 ):
     """Build the per-device function for Algorithm 1+2 under ``shard_map``.
 
-    Each device holds one site's (M, d) shard + mask. Cross-device traffic is
-    exactly: one all_gather of the n Round-1 cost scalars + one all_gather of
-    the fixed-size local portion (Round 2) -- the paper's communication
-    pattern mapped onto the ICI collectives that implement neighbour message
-    passing natively. Gathering the scalars (rather than psum-ing them) lets
-    every device run the *exact* largest-remainder ``proportional_allocation``
-    the host path uses, so ``sum_i t_i == t`` holds on this path too (a
-    rounded per-site share can collectively over/under-draw; DESIGN.md
-    Sec. 7's allocation invariant). The ``backend`` hot-loop selection
-    composes with ``shard_map``: the Pallas kernels run per-device on that
-    device's shard.
+    Each device holds one site's (M, d) shard + mask (the mesh wrapper
+    reshape-merges multiple site blocks per device, so ``axis_size`` devices
+    participate as ``axis_size`` sites). Cross-device traffic is exactly:
+    one gather of the ``axis_size`` Round-1 cost scalars + one gather of the
+    fixed-size local portion (Round 2) -- the paper's communication pattern
+    mapped onto mesh collectives. ``collectives`` picks the lowering:
+    ``"all_gather"`` uses ``lax.all_gather`` (XLA lowers it to neighbour
+    rounds on the ICI torus itself); ``"neighbor_rounds"`` uses the explicit
+    ring ``ppermute`` schedule of Algorithm 3
+    (:func:`~repro.core.message_passing.neighbor_rounds_gather`) -- the
+    gathered buffers are pure relays, so results are bit-identical. (The
+    cost *total* is always reduced from the gathered vector, never via
+    ``neighbor_rounds_sum``: a ring-order accumulation starts at a
+    different shard on every device, which breaks both cross-device and
+    gather-path bit-equality of the float total.)
+
+    Gathering the scalars (rather than psum-ing them) lets every device run
+    the *exact* largest-remainder ``proportional_allocation`` the host path
+    uses, so ``sum_i t_i == t`` holds on this path too (a rounded per-site
+    share can collectively over/under-draw; DESIGN.md Sec. 7's allocation
+    invariant). The ``backend`` hot-loop selection composes with
+    ``shard_map``: the Pallas kernels run per-device on that device's shard.
     """
     backend = backend_mod.resolve_name(backend)
+    if collectives not in ("all_gather", "neighbor_rounds"):
+        raise ValueError(f"unknown collectives {collectives!r}: expected "
+                         f"'all_gather'|'neighbor_rounds'")
+
+    def gather(x: Array) -> Array:
+        if collectives == "all_gather":
+            return jax.lax.all_gather(x, axis_name)
+        return neighbor_rounds_gather(x, axis_name, axis_size)
 
     def per_device(key: Array, pts: Array, mask: Array):
         w = mask.astype(pts.dtype)
@@ -167,7 +408,7 @@ def spmd_distributed_kmeans_fn(
         m, assign = sensitivities(pts, centers, w, objective=objective,
                                   backend=backend)
         local_cost = jnp.sum(m)
-        all_costs = jax.lax.all_gather(local_cost, axis_name)  # <- Round 1
+        all_costs = gather(local_cost)                         # <- Round 1
         total_cost = jnp.sum(all_costs)
 
         # exact largest-remainder allocation over the gathered scalars --
@@ -186,8 +427,8 @@ def spmd_distributed_kmeans_fn(
         portion_w = jnp.concatenate([w_s, w_b], axis=0)
 
         # Round 2: share the fixed-size portions
-        all_pts = jax.lax.all_gather(portion_pts, axis_name)    # <- Round 2
-        all_w = jax.lax.all_gather(portion_w, axis_name)
+        all_pts = gather(portion_pts)                           # <- Round 2
+        all_w = gather(portion_w)
         cs_pts = all_pts.reshape(-1, pts.shape[-1])
         cs_w = all_w.reshape(-1)
 
@@ -216,22 +457,30 @@ def spmd_distributed_kmeans(
     objective: str = "kmeans",
     lloyd_iters: int = 8,
     backend: BackendLike = None,
+    collectives: str = "all_gather",
 ) -> Tuple[Array, Array, Array]:
     """Run the SPMD path on a mesh. Returns (centers (k,d), local_costs,
     t_i) -- ``t_i`` are the per-site sample allocations, which satisfy
     ``sum(t_i) == t`` exactly (largest-remainder allocation, identical to
     the host path's, including its behavior when an allocation exceeds
     ``t_buffer``: realized draws are truncated at the buffer while the
-    weight formula keeps the full allocation)."""
+    weight formula keeps the full allocation).
+
+    The default ``t_buffer`` is sized off ``axis_size``, not ``n_sites``:
+    ``device_fn`` reshape-merges each device's site blocks into one site,
+    so only ``axis_size`` sites participate in the allocation and each
+    draws ``t_i ~ t / axis_size``. (Sizing off ``n_sites`` silently
+    truncated draws whenever ``n_sites > axis_size``.)"""
     n_sites = site_points.shape[0]
     axis_size = mesh.shape[axis_name]
     if n_sites % axis_size:
         raise ValueError(f"n_sites={n_sites} must divide over {axis_name}="
                          f"{axis_size}")
     t_buffer = t_buffer if t_buffer is not None else max(
-        4 * t // max(n_sites, 1), 64)
-    fn = spmd_distributed_kmeans_fn(axis_name, n_sites, k, t, t_buffer,
-                                    objective, lloyd_iters, backend=backend)
+        4 * t // max(axis_size, 1), 64)
+    fn = spmd_distributed_kmeans_fn(axis_name, axis_size, k, t, t_buffer,
+                                    objective, lloyd_iters, backend=backend,
+                                    collectives=collectives)
 
     def device_fn(key, pts, mask):
         # collapse the per-device leading site-block dim (sites/device >= 1)

@@ -1,6 +1,6 @@
 """Algorithm 3 -- Message-Passing on a general communication graph.
 
-Two implementations:
+Three implementations:
 
 1. :func:`flood` -- a faithful host-level simulation over an arbitrary
    connected ``Graph``: each node initially knows one message and forwards
@@ -8,23 +8,40 @@ Two implementations:
    the O(mn) bound and to drive the paper's experiments with exact per-edge
    message ledgers.
 
-2. :func:`neighbor_rounds_sum` -- the TPU-native counterpart: on a physical
-   torus/mesh, the same information pattern is a sequence of
-   ``jax.lax.ppermute`` neighbour exchanges; after ``diameter`` rounds every
-   device holds the global reduction. Production code uses ``lax.psum``
-   directly (XLA lowers it to exactly such neighbour rounds on the ICI
-   torus); this explicit version exists to demonstrate the mapping and to
-   let tests count per-round traffic.
+2. **The topology execution engine** (DESIGN.md Sec. 11):
+   :class:`GossipSchedule` / :class:`TreeSchedule` compile a ``Graph`` /
+   ``SpanningTree`` into static per-round schedules (padded neighbor-index
+   arrays, per-level segment maps), and :func:`flood_exec`,
+   :func:`tree_gather_exec`, :func:`tree_scatter_exec`,
+   :func:`tree_up_sum_exec`, :func:`tree_broadcast_exec` *execute* the
+   message-passing rounds as jitted vmapped gather + segment-scatter steps
+   over per-node state. Payloads physically move edge by edge (every copy a
+   node ends up holding is a bit-identical relay of the origin's payload),
+   and each primitive returns a *measured* :class:`~repro.core.comm
+   .CommLedger` counted from the schedule execution -- by construction it
+   must equal the corresponding analytic ``flood_cost`` /
+   ``tree_up_cost``-style ledger, and tests assert exactly that.
+
+3. :func:`neighbor_rounds_sum` / :func:`neighbor_rounds_gather` -- the
+   TPU-native counterpart: on a physical torus/mesh, the same information
+   pattern is a sequence of ``jax.lax.ppermute`` neighbour exchanges; after
+   ``diameter`` rounds every device holds the global reduction. These back
+   the ``collectives="neighbor_rounds"`` mode of
+   ``spmd_distributed_kmeans`` (and demonstrate the mapping XLA applies
+   when lowering ``psum``/``all_gather`` to the ICI torus).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+import functools
+from typing import Dict, List, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.topology import Graph
+from repro.core.comm import CommLedger
+from repro.core.topology import Graph, SpanningTree, diameter
 
 
 @dataclasses.dataclass
@@ -72,11 +89,405 @@ def flood_scalars(g: Graph, values: Sequence[float]) -> Tuple[List[Dict[int, flo
 
     Returns per-node {origin: value} tables plus the flood statistics.
     """
+    if len(values) != g.n:
+        raise ValueError(f"flood_scalars needs one value per node: got "
+                         f"{len(values)} values for a {g.n}-node graph")
     res = flood(g)
     tables = [{origin: float(values[origin]) for origin in res.received[v]}
               for v in range(g.n)]
     return tables, res
 
+
+# ---------------------------------------------------------------------------
+# Topology execution engine: compiled schedules + jitted message rounds
+# ---------------------------------------------------------------------------
+
+Units = Union[float, Sequence[float], np.ndarray, jax.Array]
+
+
+@dataclasses.dataclass
+class ExecResult:
+    """Outcome of one executed communication primitive.
+
+    ``rounds`` is the static schedule length that ran; for floods,
+    ``rounds_to_complete`` is the first round after which every node knew
+    every payload (<= diameter on a connected graph -- the schedule runs one
+    extra round so the final fresh messages are forwarded, which is what
+    makes the measured transmission count equal the analytic 2mn).
+    ``ledger`` is *measured*: every scalar/point/message was counted from an
+    actual executed transmission, never from a formula."""
+
+    rounds: int
+    rounds_to_complete: int
+    ledger: CommLedger
+    per_round_transmissions: List[int]
+
+
+def pack_payload(points: jax.Array, weights: jax.Array) -> jax.Array:
+    """Pack weighted points into an engine payload: ``(..., S, d)`` points +
+    ``(..., S)`` weights -> ``(..., S, d+1)`` with the weight as the
+    trailing column. Every exec path that ships coreset portions uses this
+    layout; :func:`unpack_payload` is its inverse, so the two stay in sync
+    by construction."""
+    return jnp.concatenate([points, weights[..., None]], axis=-1)
+
+
+def unpack_payload(table: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Inverse of :func:`pack_payload`: ``(..., S, d+1)`` ->
+    ``((..., S, d), (..., S))``."""
+    return table[..., :-1], table[..., -1]
+
+
+def _units_ledger(per_origin_msgs: np.ndarray, unit_scalars: Units,
+                  unit_points: Units, dim: int,
+                  count_all_messages: bool) -> CommLedger:
+    """Price measured per-origin transmission counts. ``count_all_messages``
+    distinguishes flooding (a message id is forwarded whether or not it
+    carries metered payload; analytic ``flood_cost`` counts all 2mn) from
+    tree routing (only payload-carrying origins move; analytic
+    ``tree_up_cost`` counts only unit>0 nodes)."""
+    per = np.asarray(per_origin_msgs, np.float64)
+    us = np.broadcast_to(np.asarray(unit_scalars, np.float64), per.shape)
+    up = np.broadcast_to(np.asarray(unit_points, np.float64), per.shape)
+    if count_all_messages or not (us + np.abs(up)).any():
+        msgs = float(per.sum())
+    else:
+        msgs = float(per[(us + np.abs(up)) > 0].sum())
+    return CommLedger(scalars=float((per * us).sum()),
+                      points=float((per * up).sum()),
+                      messages=msgs, dim=dim)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class GossipSchedule:
+    """Static flood schedule for a connected :class:`Graph`: padded
+    neighbor-index arrays (from ``adjacency()``) plus the round count to
+    quiescence. Compile once per graph, execute many times."""
+
+    n: int
+    m: int
+    n_rounds: int               # diameter + 1: last fresh set still forwards
+    neighbors: np.ndarray       # (n, max_deg) int32, padded with 0
+    neighbor_mask: np.ndarray   # (n, max_deg) bool
+    degrees: np.ndarray         # (n,) int32
+
+    @classmethod
+    def from_graph(cls, g: Graph) -> "GossipSchedule":
+        adj = g.adjacency()
+        max_deg = max((len(a) for a in adj), default=0)
+        if g.n > 1 and min(len(a) for a in adj) == 0:
+            raise ValueError("graph is not connected (isolated node)")
+        max_deg = max(max_deg, 1)
+        nb = np.zeros((g.n, max_deg), np.int32)
+        mask = np.zeros((g.n, max_deg), bool)
+        for v, a in enumerate(adj):
+            nb[v, :len(a)] = a
+            mask[v, :len(a)] = True
+        return cls(n=g.n, m=g.m, n_rounds=diameter(g) + 1, neighbors=nb,
+                   neighbor_mask=mask,
+                   degrees=mask.sum(axis=1).astype(np.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("n_rounds",))
+def _flood_exec_rounds(neighbors, neighbor_mask, payload, n_rounds):
+    """Execute ``n_rounds`` synchronous flood rounds over per-node state.
+
+    State: ``known``/``fresh`` (n, n) bool tables (node x origin) and
+    ``table`` (n, n, F) payload copies. Each round every node relays the
+    payloads it learned last round to all its neighbours -- the receive side
+    is a vmapped neighbor gather; the payload copy is selected from the
+    first fresh-holding neighbour, so every copy is a bit-exact relay."""
+    n, f = payload.shape
+    eye = jnp.eye(n, dtype=bool)
+    table = jnp.where(eye[:, :, None], payload[None, :, :],
+                      jnp.zeros((), payload.dtype))
+    deg = neighbor_mask.sum(axis=1).astype(jnp.int32)
+
+    def body(carry, _):
+        known, fresh, table = carry
+        # transmissions this round: each fresh holder sends to every neighbor
+        sends = jnp.sum(fresh.sum(axis=1) * deg)
+        per_origin = jnp.sum(fresh.astype(jnp.int32) * deg[:, None], axis=0)
+        f_nb = fresh[neighbors] & neighbor_mask[:, :, None]   # (n, deg, n)
+        incoming = jnp.any(f_nb, axis=1)                      # (n, n)
+        src = jnp.argmax(f_nb, axis=1)                        # (n, n)
+        recv = jnp.take_along_axis(table[neighbors],
+                                   src[:, None, :, None], axis=1)[:, 0]
+        new = incoming & ~known
+        table = jnp.where(new[:, :, None], recv, table)
+        known = known | new
+        return (known, new, table), (sends, per_origin, jnp.all(known))
+
+    (known, _, table), (sends, per_origin, complete) = jax.lax.scan(
+        body, (eye, eye, table), None, length=n_rounds)
+    return table, known, sends, per_origin.sum(axis=0), complete
+
+
+def flood_exec(schedule: Union[GossipSchedule, Graph], payload: jax.Array,
+               unit_scalars: Units = 0.0, unit_points: Units = 0.0,
+               dim: int = 0) -> Tuple[jax.Array, ExecResult]:
+    """Execute Algorithm 3 on a compiled gossip schedule.
+
+    ``payload``: (n, ...) origin-indexed array -- node v starts knowing only
+    ``payload[v]``. Returns ``(tables, result)`` where ``tables[v, o]`` is
+    node v's relayed copy of origin o's payload (on a connected graph every
+    node ends holding all n payloads, bit-identical to the originals).
+
+    ``unit_scalars`` / ``unit_points`` price each *transmission* of origin
+    o's message (scalar, or (n,) per-origin -- Round 2 portions have
+    per-site sizes ``t_i + k``); the returned ledger is measured from the
+    executed schedule and equals the analytic
+    ``flood_cost(g, n_messages=n, ...)`` exactly.
+    """
+    if isinstance(schedule, Graph):
+        schedule = GossipSchedule.from_graph(schedule)
+    payload = jnp.asarray(payload)
+    if payload.shape[0] != schedule.n:
+        raise ValueError(f"payload must be origin-indexed: got leading dim "
+                         f"{payload.shape[0]} for a {schedule.n}-node graph")
+    trailing = payload.shape[1:]
+    flat = payload.reshape(schedule.n, -1)
+    table, known, sends, per_origin, complete = _flood_exec_rounds(
+        jnp.asarray(schedule.neighbors), jnp.asarray(schedule.neighbor_mask),
+        flat, n_rounds=schedule.n_rounds)
+    if not bool(jnp.all(known)):
+        raise RuntimeError("flood did not complete: graph disconnected?")
+    flags = np.asarray(complete)
+    done = int(np.argmax(flags)) + 1 if flags.any() else schedule.n_rounds
+    if schedule.n == 1:
+        done = 0
+    ledger = _units_ledger(np.asarray(per_origin), unit_scalars, unit_points,
+                           dim, count_all_messages=True)
+    res = ExecResult(rounds=schedule.n_rounds, rounds_to_complete=done,
+                     ledger=ledger,
+                     per_round_transmissions=[int(s) for s in
+                                              np.asarray(sends)])
+    return table.reshape((schedule.n, schedule.n) + trailing), res
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TreeSchedule:
+    """Static per-level schedule for a rooted :class:`SpanningTree`:
+    ``levels[l]`` are the nodes at depth ``l+1`` (a segment map derived from
+    ``bottom_up_order()``), ``subtree`` the per-node descendant masks that
+    route scatter payloads. The up passes iterate levels deepest-first (a
+    node transmits only after all its children have), the down passes
+    shallowest-first."""
+
+    n: int
+    root: int
+    height: int
+    parent: np.ndarray      # (n,) int32; parent[root] == root (self-loop)
+    depth: np.ndarray       # (n,) int32
+    levels: np.ndarray      # (height, width) int32, padded with root
+    level_mask: np.ndarray  # (height, width) bool
+    subtree: np.ndarray     # (n, n) bool; subtree[v, o]: o in subtree of v
+
+    @classmethod
+    def from_tree(cls, tree: SpanningTree) -> "TreeSchedule":
+        depth = np.asarray(tree.depth, np.int32)
+        parent = np.asarray(tree.parent, np.int32).copy()
+        parent[tree.root] = tree.root
+        height = tree.height
+        by_level = [[] for _ in range(height)]
+        for v in range(tree.n):
+            if depth[v] > 0:
+                by_level[depth[v] - 1].append(v)
+        width = max((len(l) for l in by_level), default=1)
+        width = max(width, 1)
+        levels = np.full((height, width), tree.root, np.int32)
+        mask = np.zeros((height, width), bool)
+        for l, nodes in enumerate(by_level):
+            levels[l, :len(nodes)] = nodes
+            mask[l, :len(nodes)] = True
+        sub = np.eye(tree.n, dtype=bool)
+        for v in tree.bottom_up_order():
+            if tree.parent[v] >= 0:
+                sub[tree.parent[v]] |= sub[v]
+        return cls(n=tree.n, root=tree.root, height=height, parent=parent,
+                   depth=depth, levels=levels, level_mask=mask, subtree=sub)
+
+
+def _level_scan(schedule: TreeSchedule, body, carry, bottom_up: bool):
+    levels = jnp.asarray(schedule.levels)
+    mask = jnp.asarray(schedule.level_mask)
+    if bottom_up:
+        levels, mask = jnp.flip(levels, 0), jnp.flip(mask, 0)
+    return jax.lax.scan(body, carry, (levels, mask))
+
+
+def tree_gather_exec(schedule: TreeSchedule, payload: jax.Array,
+                     unit_scalars: Units = 0.0, unit_points: Units = 0.0,
+                     dim: int = 0) -> Tuple[jax.Array, ExecResult]:
+    """Route every node's payload up to the root (up-concat): origin o's
+    copy travels ``depth(o)`` edges. Returns the root's origin-ordered
+    table ``(n, ...)`` (bit-identical to ``payload``) and the measured
+    ledger (equals ``tree_up_cost(tree, units)``)."""
+    payload = jnp.asarray(payload)
+    if payload.shape[0] != schedule.n:
+        raise ValueError(f"payload must be origin-indexed: got leading dim "
+                         f"{payload.shape[0]} for a {schedule.n}-node tree")
+    trailing = payload.shape[1:]
+    flat = payload.reshape(schedule.n, -1)
+
+    def body(carry, lvl):
+        known, table = carry
+        nodes, lmask = lvl
+        par = jnp.asarray(schedule.parent)[nodes]
+        contrib = (known[nodes] > 0) & lmask[:, None]
+        hops = contrib.astype(jnp.int32).sum(axis=0)
+        tvals = jnp.where(contrib[:, :, None], table[nodes],
+                          jnp.zeros((), flat.dtype))
+        table = table.at[par].add(tvals)
+        known = known.at[par].add(contrib.astype(jnp.int32))
+        return (known, table), hops
+
+    eye = jnp.eye(schedule.n, dtype=jnp.int32)
+    table0 = jnp.where((eye > 0)[:, :, None], flat[None, :, :],
+                       jnp.zeros((), flat.dtype))
+    (known, table), hops = _level_scan(schedule, body, (eye, table0),
+                                       bottom_up=True)
+    per_origin = np.asarray(hops.sum(axis=0) if schedule.height else
+                            np.zeros(schedule.n, np.int64))
+    ledger = _units_ledger(per_origin, unit_scalars, unit_points, dim,
+                           count_all_messages=False)
+    res = ExecResult(rounds=schedule.height,
+                     rounds_to_complete=schedule.height, ledger=ledger,
+                     per_round_transmissions=[int(x) for x in
+                                              np.asarray(hops.sum(axis=1))]
+                     if schedule.height else [])
+    return table[schedule.root].reshape((schedule.n,) + trailing), res
+
+
+def tree_scatter_exec(schedule: TreeSchedule, root_values: jax.Array,
+                      unit_scalars: Units = 0.0, unit_points: Units = 0.0,
+                      dim: int = 0) -> Tuple[jax.Array, ExecResult]:
+    """Route per-origin values from the root back down: entry o travels the
+    root->o path (``depth(o)`` edges; at each hop a parent forwards to each
+    child exactly the entries for that child's subtree). Returns each node's
+    own entry ``(n, ...)`` and the measured ledger (symmetric to
+    :func:`tree_gather_exec`)."""
+    root_values = jnp.asarray(root_values)
+    if root_values.shape[0] != schedule.n:
+        raise ValueError(f"root_values must be origin-indexed: got leading "
+                         f"dim {root_values.shape[0]} for a {schedule.n}-"
+                         f"node tree")
+    trailing = root_values.shape[1:]
+    flat = root_values.reshape(schedule.n, -1)
+    n = schedule.n
+    vals0 = jnp.zeros((n, n, flat.shape[1]), flat.dtype).at[
+        schedule.root].set(flat)
+    sub = jnp.asarray(schedule.subtree)
+
+    def body(carry, lvl):
+        vals = carry
+        nodes, lmask = lvl
+        par = jnp.asarray(schedule.parent)[nodes]
+        want = sub[nodes] & lmask[:, None]                     # (W, n)
+        hops = want.astype(jnp.int32).sum(axis=0)
+        vals = vals.at[nodes].set(
+            jnp.where(want[:, :, None], vals[par], vals[nodes]))
+        return vals, hops
+
+    vals, hops = _level_scan(schedule, body, vals0, bottom_up=False)
+    per_origin = np.asarray(hops.sum(axis=0) if schedule.height else
+                            np.zeros(n, np.int64))
+    own = vals[jnp.arange(n), jnp.arange(n)]
+    ledger = _units_ledger(per_origin, unit_scalars, unit_points, dim,
+                           count_all_messages=False)
+    res = ExecResult(rounds=schedule.height,
+                     rounds_to_complete=schedule.height, ledger=ledger,
+                     per_round_transmissions=[int(x) for x in
+                                              np.asarray(hops.sum(axis=1))]
+                     if schedule.height else [])
+    return own.reshape((n,) + trailing), res
+
+
+def tree_up_sum_exec(schedule: TreeSchedule, values: jax.Array,
+                     broadcast: bool = True, unit_scalars: Units = 0.0,
+                     unit_points: Units = 0.0, dim: int = 0
+                     ) -> Tuple[jax.Array, ExecResult]:
+    """Up-*sum*: each node sends one aggregated payload to its parent after
+    hearing from all children (n-1 fixed-size transmissions); with
+    ``broadcast`` the root's total is then sent down every edge (n-1 more),
+    so every node ends holding the global sum. ``unit_*`` price one
+    transmission (the aggregate has the same size everywhere).
+
+    Note the tree-structured accumulation order differs from a flat
+    ``jnp.sum`` in float, so exact-replay protocols (the distributed
+    Round-1 allocation) route the raw scalars via gather/scatter instead
+    and use this primitive only where a sum is the final answer."""
+    values = jnp.asarray(values)
+    if values.shape[0] != schedule.n:
+        raise ValueError(f"values must be node-indexed: got leading dim "
+                         f"{values.shape[0]} for a {schedule.n}-node tree")
+    trailing = values.shape[1:]
+    flat = values.reshape(schedule.n, -1)
+
+    def up(acc, lvl):
+        nodes, lmask = lvl
+        par = jnp.asarray(schedule.parent)[nodes]
+        contrib = jnp.where(lmask[:, None], acc[nodes],
+                            jnp.zeros((), flat.dtype))
+        acc = acc.at[par].add(contrib)
+        return acc, lmask.sum()
+
+    acc, up_sends = _level_scan(schedule, up, flat, bottom_up=True)
+    total = acc[schedule.root]
+    sends = int(np.asarray(up_sends).sum()) if schedule.height else 0
+    per_round = ([int(x) for x in np.asarray(up_sends)]
+                 if schedule.height else [])
+    if broadcast:
+        out, bres = tree_broadcast_exec(schedule, total,
+                                        unit_scalars=unit_scalars,
+                                        unit_points=unit_points, dim=dim)
+        sends_total = sends + int(bres.ledger.messages)
+        per_round = per_round + bres.per_round_transmissions
+    else:
+        out = jnp.broadcast_to(total, (schedule.n,) + total.shape)
+        sends_total = sends
+    ledger = _units_ledger(np.asarray([sends_total], np.float64),
+                           unit_scalars, unit_points, dim,
+                           count_all_messages=False)
+    res = ExecResult(rounds=schedule.height * (2 if broadcast else 1),
+                     rounds_to_complete=schedule.height, ledger=ledger,
+                     per_round_transmissions=per_round)
+    return out.reshape((schedule.n,) + trailing), res
+
+
+def tree_broadcast_exec(schedule: TreeSchedule, value: jax.Array,
+                        unit_scalars: Units = 0.0, unit_points: Units = 0.0,
+                        dim: int = 0) -> Tuple[jax.Array, ExecResult]:
+    """Root sends one payload down every tree edge, level by level (n-1
+    transmissions). Returns every node's (bit-identical) copy ``(n, ...)``
+    and the measured ledger (equals ``tree_broadcast_cost``)."""
+    value = jnp.asarray(value)
+    flat = value.reshape(-1)
+    vals0 = jnp.zeros((schedule.n, flat.shape[0]), flat.dtype).at[
+        schedule.root].set(flat)
+
+    def body(vals, lvl):
+        nodes, lmask = lvl
+        par = jnp.asarray(schedule.parent)[nodes]
+        vals = vals.at[nodes].set(
+            jnp.where(lmask[:, None], vals[par], vals[nodes]))
+        return vals, lmask.sum()
+
+    vals, sends = _level_scan(schedule, body, vals0, bottom_up=False)
+    n_sends = int(np.asarray(sends).sum()) if schedule.height else 0
+    ledger = _units_ledger(np.asarray([n_sends], np.float64), unit_scalars,
+                           unit_points, dim, count_all_messages=False)
+    res = ExecResult(rounds=schedule.height,
+                     rounds_to_complete=schedule.height, ledger=ledger,
+                     per_round_transmissions=[int(x) for x in
+                                              np.asarray(sends)]
+                     if schedule.height else [])
+    return vals.reshape((schedule.n,) + value.shape), res
+
+
+# ---------------------------------------------------------------------------
+# SPMD ring collectives (shard_map primitives)
+# ---------------------------------------------------------------------------
 
 def neighbor_rounds_sum(x: jax.Array, axis_name: str, axis_size: int) -> jax.Array:
     """Global sum via ring neighbour exchanges only (collective_permute),

@@ -77,6 +77,24 @@ def erdos_renyi(n: int, p: float = 0.3, seed: int = 0) -> Graph:
     return Graph(n, tuple(sorted(edges)))
 
 
+def ring(n: int) -> Graph:
+    """Cycle graph 0-1-...-(n-1)-0 (diameter floor(n/2)); n=2 degenerates to
+    a single edge. The physical-ICI analogue of ``neighbor_rounds_*``."""
+    if n < 2:
+        raise ValueError("ring needs n >= 2")
+    edges = {(i, i + 1) for i in range(n - 1)}
+    edges.add((0, n - 1))
+    return Graph(n, tuple(sorted(edges)))
+
+
+def star(n: int) -> Graph:
+    """Star with hub 0 (diameter 2): the paper's most centralized topology,
+    the worst case for the 2m-per-message flood bound being tight."""
+    if n < 2:
+        raise ValueError("star needs n >= 2")
+    return Graph(n, tuple((0, i) for i in range(1, n)))
+
+
 def grid(rows: int, cols: int) -> Graph:
     """rows x cols 2D grid graph (diameter Theta(sqrt(n)))."""
     edges = []

@@ -31,6 +31,9 @@ from repro.core import backend as backend_mod
 from repro.core import clustering
 from repro.core.comm import CommLedger, flood_cost
 from repro.core.coreset import Coreset, distributed_coreset
+from repro.core.distributed import exec_algorithm1_rounds
+from repro.core.message_passing import (GossipSchedule, flood_exec,
+                                        pack_payload, unpack_payload)
 from repro.core.topology import Graph
 from repro.stream.tree import CoresetTree, TreeConfig
 
@@ -120,11 +123,16 @@ class DistributedStream:
             for i in range(graph.n)
         ]
         self._agg_key = jax.random.fold_in(key, graph.n)
+        self._schedule: Optional[GossipSchedule] = None   # compiled lazily
         self.ledger = CommLedger()
         self.rounds = 0
 
     def push(self, site: int, batch) -> None:
         """Local arrival at one node -- costs zero communication."""
+        site = int(site)
+        if not 0 <= site < self.graph.n:
+            raise ValueError(f"site index {site} out of range for a "
+                             f"{self.graph.n}-node topology")
         self.sites[site].push(batch)
 
     def push_all(self, site_batches) -> None:
@@ -139,7 +147,8 @@ class DistributedStream:
 
     def aggregate(self, k: int, t: int, lloyd_iters: int = 8,
                   clip_negative: bool = False,
-                  mode: str = "auto", restarts: int = 3) -> AggregateResult:
+                  mode: str = "auto", restarts: int = 3,
+                  engine: str = "sim") -> AggregateResult:
         """Run one aggregation round over the current per-site summaries.
 
         Every node's tree summary (fixed ``levels * slot + batch_size``
@@ -160,9 +169,23 @@ class DistributedStream:
         ``"auto"`` picks union exactly in that dominance regime. The
         round's ledger (Theorem 2 accounting) is tagged
         ``stream_round_<r>`` and accumulated on ``self.ledger``.
-        """
+
+        ``engine="sim"`` computes the round globally with the analytic
+        ledger; ``engine="exec"`` runs the same math through the topology
+        execution engine (a :class:`GossipSchedule` compiled once per
+        stream): summaries / scalars / portions physically flood the graph,
+        every node assembles the bit-identical round result, and the round
+        ledger is *measured* from the executed schedule (equal to the
+        analytic one; the padded vacant slots of a summary ride along
+        physically but carry weight 0 and are not metered, matching the
+        effective-size accounting)."""
         cfg = self.config
         g = self.graph
+        if engine not in ("sim", "exec"):
+            raise ValueError(f"unknown engine {engine!r}: expected "
+                             f"'sim'|'exec'")
+        if engine == "exec" and self._schedule is None:
+            self._schedule = GossipSchedule.from_graph(g)
         summaries = [s.summary() for s in self.sites]
         sp = jnp.stack([c.points for c in summaries])     # (n, S, d)
         sw = jnp.stack([c.weights for c in summaries])    # (n, S)
@@ -176,23 +199,44 @@ class DistributedStream:
             mode = "union" if sum_eff <= t + g.n * k else "resample"
 
         if mode == "union":
-            cs = Coreset.concat(*summaries)
             local_costs = None
-            round_ledger = CommLedger(points=2.0 * g.m * float(sum_eff),
-                                      messages=2.0 * g.m * g.n, dim=cfg.d)
+            if engine == "exec":
+                payload = pack_payload(sp, sw)
+                eff = np.asarray(jnp.sum(sw != 0.0, axis=1), np.float64)
+                tables, rr = flood_exec(self._schedule, payload,
+                                        unit_points=eff, dim=cfg.d)
+                pts0, w0 = unpack_payload(tables[0])
+                cs = Coreset(points=pts0.reshape(-1, cfg.d),
+                             weights=w0.reshape(-1))
+                round_ledger = rr.ledger
+            else:
+                cs = Coreset.concat(*summaries)
+                round_ledger = CommLedger(points=2.0 * g.m * float(sum_eff),
+                                          messages=2.0 * g.m * g.n, dim=cfg.d)
         elif mode == "resample":
-            dc = distributed_coreset(k1, sp, sw != 0.0, k, t,
-                                     objective=cfg.objective,
-                                     lloyd_iters=lloyd_iters,
-                                     clip_negative=clip_negative,
-                                     backend=cfg.backend, site_weights=sw)
-            cs = dc.flatten()
-            local_costs = dc.local_costs
-            portion_pts = float(jnp.sum(dc.t_i)) + g.n * k
-            round_ledger = flood_cost(g, n_messages=g.n, unit_scalars=1.0)
-            round_ledger = round_ledger.add(
-                CommLedger(points=2.0 * g.m * portion_pts,
-                           messages=2.0 * g.m * g.n, dim=cfg.d))
+            if engine == "exec":
+                detail, local_costs = exec_algorithm1_rounds(
+                    self._schedule, k1, sp, sw.astype(sp.dtype), k, t,
+                    t_buffer=t, objective=cfg.objective,
+                    lloyd_iters=lloyd_iters, clip_negative=clip_negative,
+                    backend=cfg.backend)
+                cs = Coreset(points=detail.node_points[0],
+                             weights=detail.node_weights[0])
+                round_ledger = detail.rounds["round1"].ledger.add(
+                    detail.rounds["round2"].ledger)
+            else:
+                dc = distributed_coreset(k1, sp, sw != 0.0, k, t,
+                                         objective=cfg.objective,
+                                         lloyd_iters=lloyd_iters,
+                                         clip_negative=clip_negative,
+                                         backend=cfg.backend, site_weights=sw)
+                cs = dc.flatten()
+                local_costs = dc.local_costs
+                portion_pts = float(jnp.sum(dc.t_i)) + g.n * k
+                round_ledger = flood_cost(g, n_messages=g.n, unit_scalars=1.0)
+                round_ledger = round_ledger.add(
+                    CommLedger(points=2.0 * g.m * portion_pts,
+                               messages=2.0 * g.m * g.n, dim=cfg.d))
         else:
             raise ValueError(f"unknown aggregate mode {mode!r}")
 

@@ -120,12 +120,31 @@ class ClusterQueryService:
         """Ingest through the service (keeps the staleness clock honest)."""
         self.stream.push(batch)
 
-    def query(self, points) -> Tuple[Array, Array]:
-        """Batched nearest-center query: (n, d) -> (assign (n,) i32,
-        dist (n,) f32; squared for k-means, euclidean for k-median)."""
+    def _as_batch(self, points) -> Array:
+        """Normalize query input to (n, d), n >= 0, with clear errors: a
+        single d-vector becomes one row; an empty input (``[]`` or
+        ``(0, d)``) becomes the canonical (0, d) batch instead of reaching
+        the kernels as a zero-dim point."""
+        d = self.stream.config.d
         q = jnp.asarray(points, jnp.float32)
+        if q.ndim <= 1 and q.size == 0:      # [] / shape-(0,) ragged empty
+            return jnp.zeros((0, d), jnp.float32)
         if q.ndim == 1:
             q = q[None, :]
+        # a (0, d) batch falls through unchanged; (0, d') and (n, 0) are
+        # malformed and must raise like any other wrong-width batch
+        if q.ndim != 2 or q.shape[1] != d:
+            raise ValueError(f"expected (n, {d}) query points, got shape "
+                             f"{tuple(q.shape)}")
+        return q
+
+    def query(self, points) -> Tuple[Array, Array]:
+        """Batched nearest-center query: (n, d) -> (assign (n,) i32,
+        dist (n,) f32; squared for k-means, euclidean for k-median).
+        An empty batch returns empty arrays (and costs no solve/refresh)."""
+        q = self._as_batch(points)
+        if q.shape[0] == 0:
+            return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.float32))
         centers = self.centers()
         qp, n = pad_queries(q)
         assign, dist = backend_mod.query_assignments(
@@ -139,8 +158,11 @@ class ClusterQueryService:
         """Per-center (optionally weighted) query-load histogram (k,) for
         one batch -- a single fused ``lloyd_stats`` pass (counts output),
         useful for shard/center load monitoring. Batches are bucket-padded
-        like :meth:`query` (weight-0 padding keeps counts exact)."""
-        q = jnp.asarray(points, jnp.float32)
+        like :meth:`query` (weight-0 padding keeps counts exact); an empty
+        batch is an all-zero histogram."""
+        q = self._as_batch(points)
+        if q.shape[0] == 0:
+            return jnp.zeros((self.k,), jnp.float32)
         w = (jnp.ones((q.shape[0],), jnp.float32) if weights is None
              else jnp.asarray(weights, jnp.float32))
         qp, n = pad_queries(q)

@@ -95,6 +95,44 @@ def test_proportional_allocation_single_nonzero_site():
     assert t_i[2] == 64  # all samples go to the only costly site
 
 
+@settings(max_examples=80, deadline=None)
+@given(n_sites=st.integers(2, 16), t=st.integers(1, 512),
+       log_scale=st.integers(-30, 38), seed=st.integers(0, 10_000))
+def test_proportional_allocation_sign_safe_across_scales(n_sites, t,
+                                                         log_scale, seed):
+    """sum(t_i) == t and t_i >= 0 for cost scales 1e-30..1e38: float error
+    in the fractions can drive the remainder ``t - sum(floor(frac))``
+    out of [0, n): ``t * costs`` overflows to inf around 1e36 (an inf
+    fraction floors to garbage, driving the remainder arbitrarily
+    *negative*, which the one-sided bonus correction silently turned into
+    sum(t_i) != t -- breaking the exact-draw invariant Round 2 depends
+    on), and an overflowed total zeroes every fraction (remainder == t >
+    n_sites, more than the old single-round bonus could hand out). The
+    correction must be sign-safe and capped-take-back / cycling-award
+    robust, and never drive an allocation negative."""
+    rng = np.random.default_rng(seed)
+    costs = (rng.random(n_sites) * (10.0 ** log_scale)).astype(np.float32)
+    t_i = np.asarray(proportional_allocation(jnp.asarray(costs), t))
+    assert t_i.sum() == t, (costs, t, t_i)
+    assert (t_i >= 0).all(), (costs, t, t_i)
+
+
+def test_proportional_allocation_overflow_regressions():
+    """Deterministic extreme-scale cases: near-f32-max costs (the old
+    ``t * costs / total`` form made every fraction inf -> sum(t_i) far
+    from t) and an inf total (every fraction 0 -> remainder t, which must
+    be awarded cyclically, not capped at one per site)."""
+    # t * costs overflows, costs/total does not
+    costs = jnp.asarray([3e37, 2e37, 1e37], jnp.float32)
+    t_i = np.asarray(proportional_allocation(costs, 300))
+    assert t_i.sum() == 300 and (t_i >= 0).all(), t_i
+    np.testing.assert_allclose(t_i, [150, 100, 50], atol=1)
+    # total overflows to inf: fractions all 0, remainder == t > n_sites
+    costs = jnp.full((4,), 3.0e38, jnp.float32)
+    t_i = np.asarray(proportional_allocation(costs, 10))
+    assert t_i.sum() == 10 and (t_i >= 0).all(), t_i
+
+
 def test_weighted_choice_zero_total_mass_yields_valid_indices():
     """Degenerate single-cluster site: every point sits on its center, all
     sampling masses are exactly 0. Draws must still be in-range indices

@@ -83,9 +83,13 @@ SPMD_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
     from repro.core import spmd_distributed_kmeans, clustering
     from repro.core.coreset import proportional_allocation
+    from repro.core.message_passing import (neighbor_rounds_gather,
+                                            neighbor_rounds_sum)
     from repro.core.partition import partition_indices, pad_partition
+    from repro.compat import shard_map
 
     rng = np.random.default_rng(0)
     k, d = 4, 8
@@ -112,6 +116,44 @@ SPMD_SCRIPT = textwrap.dedent("""
     t_host = np.asarray(proportional_allocation(jnp.asarray(lc), t))
     assert (t_i == t_host).all(), (t_i, t_host)
     assert t_i.sum() == t, t_i
+
+    # Algorithm 3 on the physical ring: swapping the all_gathers for the
+    # explicit ppermute neighbour rounds must be bit-for-bit identical
+    c_nr, lc_nr, t_i_nr = spmd_distributed_kmeans(
+        mesh, "sites", jax.random.PRNGKey(0), jnp.asarray(sp),
+        jnp.asarray(sm), k, t=t, t_buffer=t,
+        collectives="neighbor_rounds")
+    assert (np.asarray(c_nr) == np.asarray(c)).all(), "centers differ"
+    assert (np.asarray(lc_nr) == np.asarray(lc)).all()
+    assert (np.asarray(t_i_nr) == t_i).all()
+
+    # the ring primitives themselves vs the XLA collectives
+    x = jnp.arange(8, dtype=jnp.float32) * 1.7
+    gathered, summed = jax.jit(shard_map(
+        lambda v: (neighbor_rounds_gather(v[0], "sites", 8)[None],
+                   neighbor_rounds_sum(v[0], "sites", 8)[None]),
+        mesh=mesh, in_specs=P("sites"), out_specs=P("sites")))(x)
+    assert (np.asarray(gathered) == np.asarray(x)[None].repeat(8, 0)).all()
+    np.testing.assert_allclose(np.asarray(summed), float(x.sum()), rtol=1e-6)
+
+    # t_buffer regression: with n_sites = 2 * axis_size the device_fn
+    # reshape-merge leaves axis_size participating sites, so the default
+    # buffer must be sized off axis_size -- no allocation may exceed it
+    # (sizing off n_sites made t_i ~ t/axis_size overflow ~ 4t/n_sites
+    # and silently truncated draws)
+    idx16 = partition_indices(pts, 16, "weighted", seed=2)
+    sp16, sm16 = pad_partition(pts, idx16)
+    c16, lc16, t_i16 = spmd_distributed_kmeans(
+        mesh, "sites", jax.random.PRNGKey(0), jnp.asarray(sp16),
+        jnp.asarray(sm16), k, t=t)
+    t_buffer_default = max(4 * t // 8, 64)
+    t_i16 = np.asarray(t_i16)
+    assert t_i16.sum() == t, t_i16
+    assert (t_i16 <= t_buffer_default).all(), (t_i16, t_buffer_default)
+    t_host16 = np.asarray(proportional_allocation(jnp.asarray(lc16), t))
+    assert (t_i16 == t_host16).all(), (t_i16, t_host16)
+    ratio16 = float(clustering.cost(jnp.asarray(pts), c16) / full)
+    assert ratio16 < 1.3, f"spmd merged-sites ratio {ratio16}"
     print("SPMD_OK", ratio)
 """)
 

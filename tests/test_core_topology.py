@@ -42,6 +42,17 @@ def test_flood_scalars_tables():
         assert tables[v] == {i: float(i * i) for i in range(g.n)}
 
 
+def test_flood_scalars_rejects_wrong_length():
+    """One scalar per node, validated up front: a short values list used to
+    die with a cryptic IndexError mid-flood and a long one was silently
+    truncated."""
+    g = topology.grid(3, 3)
+    with pytest.raises(ValueError, match="one value per node"):
+        flood_scalars(g, [1.0] * (g.n - 1))
+    with pytest.raises(ValueError, match="one value per node"):
+        flood_scalars(g, [1.0] * (g.n + 2))
+
+
 @settings(max_examples=15, deadline=None)
 @given(n=st.integers(4, 25), seed=st.integers(0, 10_000))
 def test_bfs_tree_height_vs_diameter(n, seed):

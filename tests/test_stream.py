@@ -213,6 +213,51 @@ def test_distributed_stream_uneven_sites():
                                ds.total_weight(), rtol=1e-4)
 
 
+def test_distributed_stream_push_rejects_bad_site():
+    ds = DistributedStream(grid(2, 2), CFG)
+    batch = _stream(1, seed=31)[0]
+    with pytest.raises(ValueError, match="site index"):
+        ds.push(4, batch)
+    with pytest.raises(ValueError, match="site index"):
+        ds.push(-1, batch)
+
+
+@pytest.mark.parametrize("mode", ["union", "resample"])
+def test_distributed_stream_exec_engine_matches_sim(mode):
+    """engine="exec" runs the aggregation round through the topology
+    execution engine: bit-identical coreset and centers, and the measured
+    round ledger equals the analytic one exactly (per phase)."""
+    g = grid(2, 2)
+    key = jax.random.PRNGKey(41)
+    ds_sim = DistributedStream(g, CFG, key=key)
+    ds_ex = DistributedStream(g, CFG, key=key)
+    batches = _stream(8, seed=37)
+    for i, b in enumerate(batches):
+        ds_sim.push(i % g.n, b)
+        ds_ex.push(i % g.n, b)
+    r_sim = ds_sim.aggregate(k=4, t=120, mode=mode)
+    r_ex = ds_ex.aggregate(k=4, t=120, mode=mode, engine="exec")
+    np.testing.assert_array_equal(np.asarray(r_sim.coreset.points),
+                                  np.asarray(r_ex.coreset.points))
+    np.testing.assert_array_equal(np.asarray(r_sim.coreset.weights),
+                                  np.asarray(r_ex.coreset.weights))
+    np.testing.assert_array_equal(np.asarray(r_sim.centers),
+                                  np.asarray(r_ex.centers))
+    sim_d, ex_d = r_sim.ledger.as_dict(), r_ex.ledger.as_dict()
+    for unit in ("scalars", "points", "messages", "bytes"):
+        assert sim_d[unit] == ex_d[unit], (mode, unit, sim_d, ex_d)
+    # the measured ledger lands in the same cumulative phase bookkeeping
+    d = ds_ex.ledger.as_dict(by_phase=True)
+    assert set(d["phases"]) == {"stream_round_0"}
+
+
+def test_distributed_stream_exec_engine_rejects_unknown():
+    ds = DistributedStream(grid(2, 2), CFG)
+    ds.push(0, _stream(1, seed=43)[0])
+    with pytest.raises(ValueError, match="engine"):
+        ds.aggregate(k=4, t=60, engine="warp")
+
+
 # -- query service -----------------------------------------------------------
 
 def test_service_query_matches_direct_argmin():
@@ -273,8 +318,20 @@ def test_service_empty_and_single_query_batches(backend):
                               backend=backend)
     a, dist = svc.query(np.zeros((0, CFG.d), np.float32))
     assert a.shape == (0,) and dist.shape == (0,)
+    a, dist = svc.query([])                               # ragged-empty list
+    assert a.shape == (0,) and dist.shape == (0,)
+    assert a.dtype == jnp.int32
+    np.testing.assert_array_equal(
+        np.asarray(svc.query_load(np.zeros((0, CFG.d), np.float32))),
+        np.zeros((4,), np.float32))
     a, dist = svc.query(np.zeros((CFG.d,), np.float32))   # 1-d single query
     assert a.shape == (1,) and dist.shape == (1,)
+    with pytest.raises(ValueError, match="query points"):
+        svc.query(np.zeros((3, CFG.d + 1), np.float32))   # wrong dimension
+    with pytest.raises(ValueError, match="query points"):
+        svc.query(np.zeros((3, 0), np.float32))           # zero-dim points
+    with pytest.raises(ValueError, match="query points"):
+        svc.query(np.zeros((0, CFG.d + 5), np.float32))   # empty, wrong d
     load = np.asarray(svc.query_load(np.zeros((3, CFG.d), np.float32),
                                      weights=np.asarray([1., 2., 3.],
                                                         np.float32)))

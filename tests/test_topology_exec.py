@@ -1,0 +1,282 @@
+"""Topology execution engine tests (DESIGN.md Sec. 11).
+
+The engine contract, asserted here for every topology generator:
+
+* executed floods/tree routes deliver bit-identical payload copies to the
+  nodes the protocol says should hold them;
+* the *measured* CommLedger (counted transmission by transmission from the
+  compiled schedule) equals the *analytic* ledger exactly;
+* ``engine="exec"`` of Algorithm 2 is bit-identical to the host-simulation
+  oracle on every node, for both objectives.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.comm import (flood_cost, tree_broadcast_cost,
+                             tree_gather_cost, tree_up_cost)
+from repro.core.distributed import (distributed_kmeans_tree,
+                                    graph_distributed_kmeans)
+from repro.core.message_passing import (GossipSchedule, TreeSchedule, flood,
+                                        flood_exec, tree_broadcast_exec,
+                                        tree_gather_exec, tree_scatter_exec,
+                                        tree_up_sum_exec)
+from repro.core.partition import pad_partition, partition_indices
+
+KEY = jax.random.PRNGKey(0)
+
+# every generator, all on 9 nodes so the end-to-end runs share jit caches
+TOPOLOGIES = {
+    "ring": lambda: topology.ring(9),
+    "star": lambda: topology.star(9),
+    "grid": lambda: topology.grid(3, 3),
+    "er": lambda: topology.erdos_renyi(9, 0.3, seed=3),
+    "preferential": lambda: topology.preferential(9, 2, seed=0),
+}
+
+
+def _graph(name):
+    return TOPOLOGIES[name]()
+
+
+@pytest.fixture(scope="module")
+def site_data():
+    rng = np.random.default_rng(0)
+    k, d, n_sites = 3, 5, 9
+    centers = 3.0 * rng.standard_normal((k, d))
+    pts = np.concatenate(
+        [centers[i] + 0.2 * rng.standard_normal((150, d)) for i in range(k)]
+    ).astype(np.float32)
+    idx = partition_indices(pts, n_sites, "weighted", seed=1)
+    sp, sm = pad_partition(pts, idx)
+    return jnp.asarray(sp), jnp.asarray(sm), k
+
+
+# -- generators --------------------------------------------------------------
+
+def test_ring_star_shapes():
+    r = topology.ring(6)
+    assert r.m == 6 and all(len(a) == 2 for a in r.adjacency())
+    assert topology.diameter(r) == 3
+    s = topology.star(6)
+    assert s.m == 5 and topology.diameter(s) == 2
+    assert len(s.adjacency()[0]) == 5
+    with pytest.raises(ValueError):
+        topology.ring(1)
+    with pytest.raises(ValueError):
+        topology.star(1)
+
+
+@pytest.mark.parametrize("name", sorted(TOPOLOGIES))
+def test_new_generators_flood_connected(name):
+    g = _graph(name)
+    res = flood(g)
+    assert all(r == set(range(g.n)) for r in res.received)
+
+
+# -- flood_exec: delivery, quiescence, measured == analytic ------------------
+
+@pytest.mark.parametrize("name", sorted(TOPOLOGIES))
+def test_flood_exec_delivers_and_meters_exactly(name):
+    g = _graph(name)
+    vals = jnp.asarray(
+        np.random.default_rng(1).standard_normal((g.n, 3)).astype(np.float32))
+    tables, res = flood_exec(g, vals, unit_scalars=1.0)
+    # every node holds every origin's payload, bit-identical
+    for v in range(g.n):
+        np.testing.assert_array_equal(np.asarray(tables[v]),
+                                      np.asarray(vals))
+    # quiescence: knowledge complete within diameter rounds
+    assert res.rounds_to_complete <= topology.diameter(g)
+    assert res.rounds == topology.diameter(g) + 1
+    # measured == analytic, exactly
+    analytic = flood_cost(g, n_messages=g.n, unit_scalars=1.0)
+    assert res.ledger.scalars == analytic.scalars
+    assert res.ledger.messages == analytic.messages == 2 * g.m * g.n
+    assert sum(res.per_round_transmissions) == 2 * g.m * g.n
+    # executed profile matches the host simulation round for round
+    sim = flood(g)
+    assert res.per_round_transmissions == sim.per_round_transmissions
+
+
+@pytest.mark.parametrize("name", sorted(TOPOLOGIES))
+def test_flood_exec_per_origin_units(name):
+    g = _graph(name)
+    vals = jnp.zeros((g.n, 1))
+    units = np.arange(g.n, dtype=np.float64)   # origin o ships o points
+    _, res = flood_exec(g, vals, unit_points=units, dim=4)
+    analytic = flood_cost(g, n_messages=1, unit_points=float(units.sum()),
+                          dim=4)
+    assert res.ledger.points == analytic.points == 2 * g.m * units.sum()
+    assert res.ledger.dim == 4
+
+
+def test_flood_exec_rejects_wrong_payload_length():
+    g = topology.ring(5)
+    with pytest.raises(ValueError):
+        flood_exec(g, jnp.zeros((4, 1)))
+
+
+def test_gossip_schedule_static_shapes():
+    g = topology.star(7)
+    sched = GossipSchedule.from_graph(g)
+    assert sched.neighbors.shape == (7, 6)       # hub degree pads everyone
+    assert sched.neighbor_mask.sum() == 2 * g.m
+    assert sched.n_rounds == topology.diameter(g) + 1
+
+
+# -- tree primitives ---------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(TOPOLOGIES))
+def test_tree_gather_scatter_roundtrip_and_ledger(name):
+    g = _graph(name)
+    tree = topology.bfs_spanning_tree(g, root=0)
+    sched = TreeSchedule.from_tree(tree)
+    vals = jnp.asarray(
+        np.random.default_rng(2).standard_normal((g.n, 2)).astype(np.float32))
+    root_table, gres = tree_gather_exec(sched, vals, unit_scalars=1.0)
+    np.testing.assert_array_equal(np.asarray(root_table), np.asarray(vals))
+    analytic = tree_gather_cost(tree, unit_scalars_per_node=1.0)
+    assert gres.ledger.scalars == analytic.scalars == sum(tree.depth)
+    assert gres.ledger.messages == analytic.messages
+
+    own, sres = tree_scatter_exec(sched, vals, unit_scalars=1.0)
+    np.testing.assert_array_equal(np.asarray(own), np.asarray(vals))
+    assert sres.ledger.scalars == analytic.scalars  # path symmetry
+
+
+@pytest.mark.parametrize("name", sorted(TOPOLOGIES))
+def test_tree_up_sum_and_broadcast(name):
+    g = _graph(name)
+    tree = topology.bfs_spanning_tree(g, root=0)
+    sched = TreeSchedule.from_tree(tree)
+    vals = jnp.asarray(
+        np.random.default_rng(3).standard_normal((g.n, 2)).astype(np.float32))
+    totals, ures = tree_up_sum_exec(sched, vals, broadcast=True,
+                                    unit_scalars=1.0)
+    expect = np.asarray(vals.sum(axis=0))
+    for v in range(g.n):
+        np.testing.assert_allclose(np.asarray(totals[v]), expect, rtol=1e-5)
+    # up n-1 sends + broadcast n-1 sends, one scalar-unit each
+    assert ures.ledger.scalars == 2.0 * (g.n - 1)
+    assert ures.ledger.messages == 2.0 * (g.n - 1)
+
+    payload = jnp.asarray(np.random.default_rng(4).standard_normal(
+        (4, 2)).astype(np.float32))
+    out, bres = tree_broadcast_exec(sched, payload, unit_points=4.0, dim=2)
+    for v in range(g.n):
+        np.testing.assert_array_equal(np.asarray(out[v]),
+                                      np.asarray(payload))
+    analytic = tree_broadcast_cost(tree, unit_points=4.0, dim=2)
+    assert bres.ledger.points == analytic.points == 4.0 * (g.n - 1)
+    assert bres.ledger.messages == analytic.messages == g.n - 1
+
+
+# -- Algorithm 2: engine == simulation, measured == analytic -----------------
+
+@pytest.mark.parametrize("name", sorted(TOPOLOGIES))
+def test_graph_engine_matches_simulation(site_data, name):
+    sp, sm, k = site_data
+    g = _graph(name)
+    t = 90
+    sim = graph_distributed_kmeans(KEY, sp, sm, k, t=t, graph=g)
+    ex = graph_distributed_kmeans(KEY, sp, sm, k, t=t, graph=g,
+                                  engine="exec")
+    # bit-identical centers and coreset
+    np.testing.assert_array_equal(np.asarray(sim.centers),
+                                  np.asarray(ex.centers))
+    np.testing.assert_array_equal(np.asarray(sim.coreset.points),
+                                  np.asarray(ex.coreset.points))
+    np.testing.assert_array_equal(np.asarray(sim.coreset.weights),
+                                  np.asarray(ex.coreset.weights))
+    # measured ledger == analytic ledger, exactly
+    assert ex.ledger.scalars == sim.ledger.scalars
+    assert ex.ledger.points == sim.ledger.points
+    assert ex.ledger.messages == sim.ledger.messages
+    # every node assembled the identical global instance and allocation
+    det = ex.exec_detail
+    npts, nw = np.asarray(det.node_points), np.asarray(det.node_weights)
+    alloc = np.asarray(det.node_alloc)
+    for v in range(g.n):
+        np.testing.assert_array_equal(npts[v], npts[0])
+        np.testing.assert_array_equal(nw[v], nw[0])
+        np.testing.assert_array_equal(alloc[v], alloc[0])
+    assert alloc[0].sum() == t
+
+
+def test_graph_engine_every_node_solves_identically(site_data):
+    """Acceptance: every node, solving its own received copy, produces the
+    same centers the engine reports."""
+    sp, sm, k = site_data
+    g = _graph("er")
+    from repro.core.coreset import Coreset
+    from repro.core.distributed import _solve_on_coreset
+    ex = graph_distributed_kmeans(KEY, sp, sm, k, t=90, graph=g,
+                                  engine="exec")
+    _, k2 = jax.random.split(KEY)
+    det = ex.exec_detail
+    for v in range(g.n):
+        cs_v = Coreset(det.node_points[v], det.node_weights[v])
+        centers_v = _solve_on_coreset(k2, cs_v, k, "kmeans", 8, None)
+        np.testing.assert_array_equal(np.asarray(centers_v),
+                                      np.asarray(ex.centers))
+
+
+@pytest.mark.parametrize("name", sorted(TOPOLOGIES))
+def test_tree_engine_matches_simulation(site_data, name):
+    sp, sm, k = site_data
+    g = _graph(name)
+    tree = topology.bfs_spanning_tree(g, root=0)
+    t = 90
+    sim = distributed_kmeans_tree(KEY, sp, sm, k, t=t, tree=tree)
+    ex = distributed_kmeans_tree(KEY, sp, sm, k, t=t, tree=tree,
+                                 engine="exec")
+    np.testing.assert_array_equal(np.asarray(sim.centers),
+                                  np.asarray(ex.centers))
+    np.testing.assert_array_equal(np.asarray(sim.coreset.points),
+                                  np.asarray(ex.coreset.points))
+    np.testing.assert_array_equal(np.asarray(sim.coreset.weights),
+                                  np.asarray(ex.coreset.weights))
+    assert ex.ledger.scalars == sim.ledger.scalars
+    assert ex.ledger.points == sim.ledger.points
+    assert ex.ledger.messages == sim.ledger.messages
+    # the broadcast delivered the identical solution to every node
+    nc = np.asarray(ex.exec_detail.node_centers)
+    for v in range(g.n):
+        np.testing.assert_array_equal(nc[v], np.asarray(ex.centers))
+    assert np.asarray(ex.exec_detail.node_alloc).sum() == t
+
+
+@pytest.mark.parametrize("objective", ["kmeans", "kmedian"])
+def test_engine_both_objectives(site_data, objective):
+    sp, sm, k = site_data
+    g = _graph("grid")
+    sim = graph_distributed_kmeans(KEY, sp, sm, k, t=60, graph=g,
+                                   objective=objective, lloyd_iters=4)
+    ex = graph_distributed_kmeans(KEY, sp, sm, k, t=60, graph=g,
+                                  objective=objective, lloyd_iters=4,
+                                  engine="exec")
+    np.testing.assert_array_equal(np.asarray(sim.centers),
+                                  np.asarray(ex.centers))
+    tree = topology.bfs_spanning_tree(g, root=0)
+    sim_t = distributed_kmeans_tree(KEY, sp, sm, k, t=60, tree=tree,
+                                    objective=objective, lloyd_iters=4)
+    ex_t = distributed_kmeans_tree(KEY, sp, sm, k, t=60, tree=tree,
+                                   objective=objective, lloyd_iters=4,
+                                   engine="exec")
+    np.testing.assert_array_equal(np.asarray(sim_t.centers),
+                                  np.asarray(ex_t.centers))
+
+
+def test_unknown_engine_raises(site_data):
+    sp, sm, k = site_data
+    g = _graph("ring")
+    with pytest.raises(ValueError):
+        graph_distributed_kmeans(KEY, sp, sm, k, t=30, graph=g,
+                                 engine="warp")
+    with pytest.raises(ValueError):
+        distributed_kmeans_tree(KEY, sp, sm, k, t=30,
+                                tree=topology.bfs_spanning_tree(g),
+                                engine="warp")
