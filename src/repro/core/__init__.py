@@ -21,8 +21,9 @@ from repro.core.message_passing import (ExecResult, GossipSchedule,
                                         tree_broadcast_exec, tree_gather_exec,
                                         tree_scatter_exec, tree_up_sum_exec)
 from repro.core.topology import (Graph, SpanningTree, bfs_spanning_tree,
-                                 diameter, erdos_renyi, grid, preferential,
-                                 ring, star)
+                                 diameter, erdos_renyi, grid, heterogeneous,
+                                 mst_spanning_tree, preferential, ring,
+                                 spanning_tree, star, wan_clusters)
 
 __all__ = [
     "backend", "baselines", "clustering", "comm", "coreset", "distributed",
@@ -40,5 +41,6 @@ __all__ = [
     "tree_broadcast_exec", "tree_gather_exec", "tree_scatter_exec",
     "tree_up_sum_exec",
     "Graph", "SpanningTree", "bfs_spanning_tree", "diameter", "erdos_renyi",
-    "grid", "preferential", "ring", "star",
+    "grid", "heterogeneous", "mst_spanning_tree", "preferential", "ring",
+    "spanning_tree", "star", "wan_clusters",
 ]

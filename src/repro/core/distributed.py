@@ -38,8 +38,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import backend as backend_mod
 from repro.core import clustering
 from repro.core.backend import BackendLike
-from repro.core.comm import (CommLedger, flood_cost, tree_broadcast_cost,
-                             tree_gather_cost, tree_up_cost)
+from repro.core.comm import (CommLedger, flood_cost, flood_portions_cost,
+                             tree_allocation_cost, tree_broadcast_cost,
+                             tree_up_cost)
 from repro.core.coreset import (Coreset, DistributedCoreset,
                                 distributed_coreset, proportional_allocation,
                                 round1_local_solves, round2_local_samples,
@@ -49,7 +50,7 @@ from repro.core.message_passing import (ExecResult, GossipSchedule,
                                         neighbor_rounds_gather, pack_payload,
                                         tree_broadcast_exec, tree_gather_exec,
                                         tree_scatter_exec, unpack_payload)
-from repro.core.topology import Graph, SpanningTree
+from repro.core.topology import Graph, SpanningTree, spanning_tree
 
 from repro.compat import shard_map as _shard_map
 
@@ -108,16 +109,33 @@ def graph_distributed_kmeans(
     lloyd_iters: int = 8,
     backend: BackendLike = None,
     engine: str = "sim",
+    routing: str = "flood",
+    root: int = 0,
 ) -> ClusteringResult:
-    """Algorithm 2 on a general graph. Round 1 floods n scalars (2mn
-    messages); Round 2 floods the n local portions (2m * sum_i |D_i|
-    points); every node then solves the identical weighted instance.
+    """Algorithm 2 on a general graph. With the default ``routing="flood"``
+    Round 1 floods n scalars (2mn messages) and Round 2 floods the n local
+    portions (2m * sum_i |D_i| points); every node then solves the
+    identical weighted instance. ``routing="bfs"`` / ``"min_cost"``
+    restrict communication to a spanning tree of the graph (hop-minimal
+    BFS vs Prim over ``edge_costs``) rooted at ``root`` and run the
+    Theorem-3 tree protocol instead -- same math, same centers, but the
+    ledger prices only tree edges; on heterogeneous links min-cost routing
+    is what makes the cost-weighted ledger (``link_cost``) small.
 
     ``engine="sim"`` computes the rounds globally and prices them with the
     analytic Theorem-2 ledger (the oracle). ``engine="exec"`` executes them
     on a compiled :class:`GossipSchedule` -- same local stages, same keys,
     so the result is bit-identical, but the scalars and portions physically
     move edge by edge and the ledger is measured from the schedule."""
+    if routing in ("bfs", "min_cost"):
+        tree = spanning_tree(graph, root=root, routing=routing)
+        return distributed_kmeans_tree(key, site_points, site_mask, k, t,
+                                       tree, objective=objective,
+                                       lloyd_iters=lloyd_iters,
+                                       backend=backend, engine=engine)
+    if routing != "flood":
+        raise ValueError(f"unknown routing {routing!r}: expected "
+                         f"'flood'|'bfs'|'min_cost'")
     if engine == "exec":
         return _graph_exec(key, site_points, site_mask, k, t, graph,
                            objective, lloyd_iters, backend)
@@ -132,10 +150,10 @@ def graph_distributed_kmeans(
     cs = dc.flatten()
     centers = _solve_on_coreset(k2, cs, k, objective, lloyd_iters, backend)
 
-    portion_pts = float(jnp.sum(dc.t_i)) + graph.n * k
-    ledger = flood_cost(graph, n_messages=graph.n, unit_scalars=1.0)
-    ledger = ledger.add(CommLedger(points=2.0 * graph.m * portion_pts,
-                                   messages=2.0 * graph.m * graph.n, dim=d))
+    ledger = flood_cost(graph, n_messages=graph.n,
+                        unit_scalars=1.0).tag("round1")
+    ledger = ledger.add(flood_portions_cost(graph, np.asarray(dc.t_i), k,
+                                            d).tag("round2"))
     return ClusteringResult(centers, cs, ledger, dc.local_costs)
 
 
@@ -221,7 +239,8 @@ def _graph_exec(key, site_points, site_mask, k, t, graph, objective,
     # every node holds the identical instance; solve it once (node 0's copy)
     cs = Coreset(detail.node_points[0], detail.node_weights[0])
     centers = _solve_on_coreset(k2, cs, k, objective, lloyd_iters, backend)
-    ledger = detail.rounds["round1"].ledger.add(detail.rounds["round2"].ledger)
+    ledger = detail.rounds["round1"].ledger.tag("round1").add(
+        detail.rounds["round2"].ledger.tag("round2"))
     return ClusteringResult(centers, cs, ledger, local_costs,
                             exec_detail=detail)
 
@@ -268,37 +287,40 @@ def distributed_kmeans_tree(
 
     t_i = [float(x) for x in dc.t_i]
     per_node = [t_i[v] + k for v in range(tree.n)]
-    ledger = _tree_round1_cost(tree)
-    ledger = ledger.add(tree_up_cost(tree, per_node, dim=d))
-    ledger = ledger.add(tree_broadcast_cost(tree, unit_points=float(k), dim=d))
+    ledger = tree_allocation_cost(tree).tag("round1")
+    ledger = ledger.add(tree_up_cost(tree, per_node,
+                                     dim=d).tag("round2_gather"))
+    ledger = ledger.add(tree_broadcast_cost(tree, unit_points=float(k),
+                                            dim=d).tag("round2_broadcast"))
     return ClusteringResult(centers, cs, ledger, dc.local_costs)
 
 
-def _tree_round1_cost(tree: SpanningTree) -> CommLedger:
-    """Analytic Round-1 ledger of the executable tree protocol: raw cost
-    scalars up (gather), per-site allocations down (scatter), total down
-    (broadcast)."""
-    ledger = tree_gather_cost(tree, unit_scalars_per_node=1.0)   # costs up
-    ledger = ledger.add(tree_gather_cost(tree, unit_scalars_per_node=1.0))
-    ledger = ledger.add(tree_broadcast_cost(tree, unit_scalars=1.0))
-    return ledger
-
-
-def _tree_exec(key, site_points, site_mask, k, t, tree, objective,
-               lloyd_iters, backend) -> ClusteringResult:
-    """Execute Algorithm 2's communication on a compiled tree schedule:
-    gather the raw Round-1 scalars to the root, replay the allocation
-    there, scatter each site's share down its subtree path, broadcast the
-    total; gather the Round-2 portions to the root, solve there, broadcast
-    the k centers. Bit-identical to the sim path; measured ledger."""
+def exec_algorithm1_tree_rounds(
+    sched: TreeSchedule,
+    key: Array,
+    site_points: Array,
+    w_site: Array,
+    k: int,
+    t: int,
+    t_buffer: int,
+    objective: str,
+    lloyd_iters: int,
+    clip_negative: bool,
+    backend: str,
+):
+    """Algorithm 1 with both communication rounds *executed* on a tree
+    schedule: gather the raw Round-1 cost scalars to the root, replay the
+    exact largest-remainder allocation there, scatter each site's share
+    down its subtree path, broadcast the total; gather the fixed-size
+    Round-2 portions to the root. Same local stage functions and key
+    derivation as ``distributed_coreset``, so the root's assembled table is
+    bit-identical to the host path's coreset. Shared by
+    :func:`distributed_kmeans_tree` and the streaming tree-transport
+    aggregation rounds. Returns ``(root_points, root_weights, t_i,
+    node_totals, rounds, local_costs)`` where ``rounds`` maps phase label
+    to the measured :class:`ExecResult`."""
     n_sites, _, d = site_points.shape
-    if tree.n != n_sites:
-        raise ValueError(f"tree has {tree.n} nodes for {n_sites} sites")
-    backend = backend_mod.resolve_name(backend)
-    sched = TreeSchedule.from_tree(tree)
-    k1, k2 = jax.random.split(key)
-    w_site = site_mask.astype(site_points.dtype)
-    keys = jax.random.split(k1, n_sites * 2).reshape(n_sites, 2, -1)
+    keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
 
     centers_l, m, assign, local_costs = round1_local_solves(
         keys[:, 0], site_points, w_site, k=k, objective=objective,
@@ -316,27 +338,54 @@ def _tree_exec(key, site_points, site_mask, k, t, tree, objective,
 
     portions = round2_local_samples(
         keys[:, 1], site_points, m, w_site, assign, centers_l, t_i,
-        node_totals[:, 0], k=k, t=t, t_buffer=t, clip_negative=False)
+        node_totals[:, 0], k=k, t=t, t_buffer=t_buffer,
+        clip_negative=clip_negative)
 
-    # -- Round 2 executed: portions up, solution down ------------------------
+    # -- Round 2 executed: portions up ---------------------------------------
     payload = pack_payload(portions.points, portions.weights)
     unit_pts = (np.asarray(t_i) + k).astype(np.float64)
     root_table, r2a = tree_gather_exec(sched, payload, unit_points=unit_pts,
                                        dim=d)
     root_pts, root_w = unpack_payload(root_table)
+    rounds = {"round1_gather": r1a, "round1_scatter": r1b,
+              "round1_broadcast": r1c, "round2_gather": r2a}
+    return (root_pts, root_w, t_i, node_totals[:, 0], rounds, local_costs)
+
+
+def _tree_exec(key, site_points, site_mask, k, t, tree, objective,
+               lloyd_iters, backend) -> ClusteringResult:
+    """Execute Algorithm 2's communication on a compiled tree schedule:
+    the Round-1/Round-2 tree protocol of
+    :func:`exec_algorithm1_tree_rounds`, then solve at the root and
+    broadcast the k centers. Bit-identical to the sim path; measured
+    ledger."""
+    n_sites, _, d = site_points.shape
+    if tree.n != n_sites:
+        raise ValueError(f"tree has {tree.n} nodes for {n_sites} sites")
+    backend = backend_mod.resolve_name(backend)
+    sched = TreeSchedule.from_tree(tree)
+    k1, k2 = jax.random.split(key)
+    w_site = site_mask.astype(site_points.dtype)
+
+    root_pts, root_w, t_i, node_totals, rounds, local_costs = \
+        exec_algorithm1_tree_rounds(
+            sched, k1, site_points, w_site, k, t, t_buffer=t,
+            objective=objective, lloyd_iters=lloyd_iters,
+            clip_negative=False, backend=backend)
+
     cs = Coreset(root_pts.reshape(-1, d), root_w.reshape(-1))
     centers = _solve_on_coreset(k2, cs, k, objective, lloyd_iters, backend)
     node_centers, r2b = tree_broadcast_exec(sched, centers,
                                             unit_points=float(k), dim=d)
+    rounds = dict(rounds, round2_broadcast=r2b)
 
-    ledger = r1a.ledger.add(r1b.ledger).add(r1c.ledger) \
-        .add(r2a.ledger).add(r2b.ledger)
+    ledger = (rounds["round1_gather"].ledger
+              .add(rounds["round1_scatter"].ledger)
+              .add(rounds["round1_broadcast"].ledger).tag("round1")
+              .add(rounds["round2_gather"].ledger.tag("round2_gather"))
+              .add(r2b.ledger.tag("round2_broadcast")))
     detail = ExecDetail(node_centers=node_centers, node_alloc=t_i,
-                        node_totals=node_totals[:, 0],
-                        rounds={"round1_gather": r1a, "round1_scatter": r1b,
-                                "round1_broadcast": r1c,
-                                "round2_gather": r2a,
-                                "round2_broadcast": r2b})
+                        node_totals=node_totals, rounds=rounds)
     return ClusteringResult(centers, cs, ledger, local_costs,
                             exec_detail=detail)
 

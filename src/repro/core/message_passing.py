@@ -20,7 +20,10 @@ Three implementations:
    and each primitive returns a *measured* :class:`~repro.core.comm
    .CommLedger` counted from the schedule execution -- by construction it
    must equal the corresponding analytic ``flood_cost`` /
-   ``tree_up_cost``-style ledger, and tests assert exactly that.
+   ``tree_up_cost``-style ledger, and tests assert exactly that. The
+   schedules carry the graph's per-link costs, so every measured ledger
+   also prices each transmission by the edge it crossed
+   (``CommLedger.link_cost``; DESIGN.md Sec. 12).
 
 3. :func:`neighbor_rounds_sum` / :func:`neighbor_rounds_gather` -- the
    TPU-native counterpart: on a physical torus/mesh, the same information
@@ -40,8 +43,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.comm import CommLedger
-from repro.core.topology import Graph, SpanningTree, diameter
+from repro.core.comm import CommLedger, link_cost_of
+from repro.core.topology import Graph, SpanningTree, diameter, spanning_tree
 
 
 @dataclasses.dataclass
@@ -140,12 +143,16 @@ def unpack_payload(table: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 def _units_ledger(per_origin_msgs: np.ndarray, unit_scalars: Units,
                   unit_points: Units, dim: int,
-                  count_all_messages: bool) -> CommLedger:
+                  count_all_messages: bool,
+                  per_origin_link: np.ndarray | None = None) -> CommLedger:
     """Price measured per-origin transmission counts. ``count_all_messages``
     distinguishes flooding (a message id is forwarded whether or not it
     carries metered payload; analytic ``flood_cost`` counts all 2mn) from
     tree routing (only payload-carrying origins move; analytic
-    ``tree_up_cost`` counts only unit>0 nodes)."""
+    ``tree_up_cost`` counts only unit>0 nodes). ``per_origin_link`` is the
+    measured per-origin *edge-cost* total (the sum of link costs each
+    origin's payload crossed); defaults to the hop counts, i.e. uniform
+    unit links."""
     per = np.asarray(per_origin_msgs, np.float64)
     us = np.broadcast_to(np.asarray(unit_scalars, np.float64), per.shape)
     up = np.broadcast_to(np.asarray(unit_points, np.float64), per.shape)
@@ -153,74 +160,108 @@ def _units_ledger(per_origin_msgs: np.ndarray, unit_scalars: Units,
         msgs = float(per.sum())
     else:
         msgs = float(per[(us + np.abs(up)) > 0].sum())
+    link = per if per_origin_link is None else per_origin_link
     return CommLedger(scalars=float((per * us).sum()),
                       points=float((per * up).sum()),
-                      messages=msgs, dim=dim)
+                      messages=msgs, dim=dim,
+                      link_cost=link_cost_of(link, us, up, dim))
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class GossipSchedule:
     """Static flood schedule for a connected :class:`Graph`: padded
     neighbor-index arrays (from ``adjacency()``) plus the round count to
-    quiescence. Compile once per graph, execute many times."""
+    quiescence. Compile once per graph, execute many times. Carries the
+    graph's per-link costs (``neighbor_costs`` aligned with ``neighbors``,
+    plus the per-node ``weighted_degrees``) so executed floods can be
+    priced per edge crossed."""
 
     n: int
     m: int
     n_rounds: int               # diameter + 1: last fresh set still forwards
-    neighbors: np.ndarray       # (n, max_deg) int32, padded with 0
+    neighbors: np.ndarray       # (n, max_deg) int32 out-neighbors, 0-padded
     neighbor_mask: np.ndarray   # (n, max_deg) bool
-    degrees: np.ndarray         # (n,) int32
+    degrees: np.ndarray         # (n,) int32 out-degrees (send pricing)
+    neighbor_costs: np.ndarray  # (n, max_deg) float64, padded with 0
+    weighted_degrees: np.ndarray  # (n,) float64 (== Graph.weighted_degrees)
+    in_neighbors: np.ndarray    # (n, max_in) int32: the receive gather side
+    in_neighbor_mask: np.ndarray  # (n, max_in) bool (== out side undirected)
 
     @classmethod
     def from_graph(cls, g: Graph) -> "GossipSchedule":
-        adj = g.adjacency()
+        adj, adjc = g.adjacency(), g.adjacency_costs()
         max_deg = max((len(a) for a in adj), default=0)
         if g.n > 1 and min(len(a) for a in adj) == 0:
             raise ValueError("graph is not connected (isolated node)")
         max_deg = max(max_deg, 1)
         nb = np.zeros((g.n, max_deg), np.int32)
         mask = np.zeros((g.n, max_deg), bool)
-        for v, a in enumerate(adj):
+        nc = np.zeros((g.n, max_deg), np.float64)
+        for v, (a, cs) in enumerate(zip(adj, adjc)):
             nb[v, :len(a)] = a
             mask[v, :len(a)] = True
+            nc[v, :len(a)] = cs
+        if g.directed:
+            # a node *receives* along its in-links; sends meter out-links
+            in_adj: list = [[] for _ in range(g.n)]
+            for i, j in g.edges:
+                in_adj[j].append(i)
+            max_in = max(1, max(len(a) for a in in_adj))
+            in_nb = np.zeros((g.n, max_in), np.int32)
+            in_mask = np.zeros((g.n, max_in), bool)
+            for v, a in enumerate(in_adj):
+                in_nb[v, :len(a)] = a
+                in_mask[v, :len(a)] = True
+        else:
+            in_nb, in_mask = nb, mask
         return cls(n=g.n, m=g.m, n_rounds=diameter(g) + 1, neighbors=nb,
                    neighbor_mask=mask,
-                   degrees=mask.sum(axis=1).astype(np.int32))
+                   degrees=mask.sum(axis=1).astype(np.int32),
+                   neighbor_costs=nc,
+                   weighted_degrees=np.asarray(g.weighted_degrees()),
+                   in_neighbors=in_nb, in_neighbor_mask=in_mask)
 
 
 @functools.partial(jax.jit, static_argnames=("n_rounds",))
-def _flood_exec_rounds(neighbors, neighbor_mask, payload, n_rounds):
+def _flood_exec_rounds(in_neighbors, in_neighbor_mask, out_degrees, payload,
+                       n_rounds):
     """Execute ``n_rounds`` synchronous flood rounds over per-node state.
 
     State: ``known``/``fresh`` (n, n) bool tables (node x origin) and
     ``table`` (n, n, F) payload copies. Each round every node relays the
-    payloads it learned last round to all its neighbours -- the receive side
-    is a vmapped neighbor gather; the payload copy is selected from the
-    first fresh-holding neighbour, so every copy is a bit-exact relay."""
+    payloads it learned last round to all its (out-)neighbours -- the
+    receive side is a vmapped gather over *in*-neighbors (identical to the
+    out side on undirected graphs; the distinction is what keeps a directed
+    flood moving along link directions rather than the transpose graph);
+    the payload copy is selected from the first fresh-holding in-neighbour,
+    so every copy is a bit-exact relay. ``fwd[v, o]`` counts how often node
+    v forwarded origin o's message (exactly once each on a connected graph)
+    -- the (node, origin) resolution the cost-weighted ledger prices from,
+    with ``out_degrees`` as the per-forward transmission count."""
     n, f = payload.shape
     eye = jnp.eye(n, dtype=bool)
     table = jnp.where(eye[:, :, None], payload[None, :, :],
                       jnp.zeros((), payload.dtype))
-    deg = neighbor_mask.sum(axis=1).astype(jnp.int32)
 
     def body(carry, _):
-        known, fresh, table = carry
-        # transmissions this round: each fresh holder sends to every neighbor
-        sends = jnp.sum(fresh.sum(axis=1) * deg)
-        per_origin = jnp.sum(fresh.astype(jnp.int32) * deg[:, None], axis=0)
-        f_nb = fresh[neighbors] & neighbor_mask[:, :, None]   # (n, deg, n)
+        known, fresh, table, fwd = carry
+        # transmissions this round: each fresh holder sends on every out-link
+        sends = jnp.sum(fresh.sum(axis=1) * out_degrees)
+        fwd = fwd + fresh.astype(jnp.int32)
+        f_nb = fresh[in_neighbors] & in_neighbor_mask[:, :, None]
         incoming = jnp.any(f_nb, axis=1)                      # (n, n)
         src = jnp.argmax(f_nb, axis=1)                        # (n, n)
-        recv = jnp.take_along_axis(table[neighbors],
+        recv = jnp.take_along_axis(table[in_neighbors],
                                    src[:, None, :, None], axis=1)[:, 0]
         new = incoming & ~known
         table = jnp.where(new[:, :, None], recv, table)
         known = known | new
-        return (known, new, table), (sends, per_origin, jnp.all(known))
+        return (known, new, table, fwd), (sends, jnp.all(known))
 
-    (known, _, table), (sends, per_origin, complete) = jax.lax.scan(
-        body, (eye, eye, table), None, length=n_rounds)
-    return table, known, sends, per_origin.sum(axis=0), complete
+    fwd0 = jnp.zeros((n, n), jnp.int32)
+    (known, _, table, fwd), (sends, complete) = jax.lax.scan(
+        body, (eye, eye, table, fwd0), None, length=n_rounds)
+    return table, known, sends, fwd, complete
 
 
 def flood_exec(schedule: Union[GossipSchedule, Graph], payload: jax.Array,
@@ -247,17 +288,29 @@ def flood_exec(schedule: Union[GossipSchedule, Graph], payload: jax.Array,
                          f"{payload.shape[0]} for a {schedule.n}-node graph")
     trailing = payload.shape[1:]
     flat = payload.reshape(schedule.n, -1)
-    table, known, sends, per_origin, complete = _flood_exec_rounds(
-        jnp.asarray(schedule.neighbors), jnp.asarray(schedule.neighbor_mask),
-        flat, n_rounds=schedule.n_rounds)
+    table, known, sends, fwd, complete = _flood_exec_rounds(
+        jnp.asarray(schedule.in_neighbors),
+        jnp.asarray(schedule.in_neighbor_mask),
+        jnp.asarray(schedule.degrees), flat, n_rounds=schedule.n_rounds)
     if not bool(jnp.all(known)):
         raise RuntimeError("flood did not complete: graph disconnected?")
     flags = np.asarray(complete)
     done = int(np.argmax(flags)) + 1 if flags.any() else schedule.n_rounds
     if schedule.n == 1:
         done = 0
-    ledger = _units_ledger(np.asarray(per_origin), unit_scalars, unit_points,
-                           dim, count_all_messages=True)
+    # price the measured (node, origin) forward counts: hop counts with the
+    # node's degree, link costs with its weighted degree (each forward is
+    # one transmission per incident link)
+    fwd_np = np.asarray(fwd, np.int64)
+    deg = np.asarray(schedule.degrees, np.int64)
+    per_origin = (fwd_np * deg[:, None]).sum(axis=0)
+    wdeg = np.asarray(schedule.weighted_degrees, np.float64)
+    per_origin_link = np.asarray(
+        [float((fwd_np[:, o].astype(np.float64) * wdeg).sum())
+         for o in range(schedule.n)], np.float64)
+    ledger = _units_ledger(per_origin, unit_scalars, unit_points,
+                           dim, count_all_messages=True,
+                           per_origin_link=per_origin_link)
     res = ExecResult(rounds=schedule.n_rounds, rounds_to_complete=done,
                      ledger=ledger,
                      per_round_transmissions=[int(s) for s in
@@ -282,6 +335,7 @@ class TreeSchedule:
     levels: np.ndarray      # (height, width) int32, padded with root
     level_mask: np.ndarray  # (height, width) bool
     subtree: np.ndarray     # (n, n) bool; subtree[v, o]: o in subtree of v
+    parent_cost: np.ndarray  # (n,) float64; cost of v's parent link (0 @root)
 
     @classmethod
     def from_tree(cls, tree: SpanningTree) -> "TreeSchedule":
@@ -305,7 +359,48 @@ class TreeSchedule:
             if tree.parent[v] >= 0:
                 sub[tree.parent[v]] |= sub[v]
         return cls(n=tree.n, root=tree.root, height=height, parent=parent,
-                   depth=depth, levels=levels, level_mask=mask, subtree=sub)
+                   depth=depth, levels=levels, level_mask=mask, subtree=sub,
+                   parent_cost=np.asarray(tree.parent_costs()))
+
+    @classmethod
+    def from_graph(cls, g: Graph, root: int = 0,
+                   routing: str = "bfs") -> "TreeSchedule":
+        """Compile a tree schedule straight from a graph under a routing
+        policy (``"bfs"`` hop-minimal | ``"min_cost"`` Prim)."""
+        return cls.from_tree(spanning_tree(g, root=root, routing=routing))
+
+
+def _path_link_costs(schedule: TreeSchedule,
+                     hop_counts: np.ndarray) -> np.ndarray:
+    """Measured per-origin link-cost totals for a gather/scatter: origin o
+    moved ``hop_counts[o]`` edges along its root path; price them with the
+    schedule's parent costs, deepest edge first (the same float64 order
+    ``SpanningTree.path_costs`` accumulates in, so measured == analytic
+    bit-for-bit for fully-routed origins)."""
+    pc = np.asarray(schedule.parent_cost, np.float64)
+    parent = np.asarray(schedule.parent, np.int64)
+    out = np.zeros(schedule.n, np.float64)
+    for o in range(schedule.n):
+        acc, v = 0.0, o
+        for _ in range(int(hop_counts[o])):
+            acc += float(pc[v])
+            v = int(parent[v])
+        out[o] = acc
+    return out
+
+
+def _level_edge_cost_total(schedule: TreeSchedule) -> float:
+    """Total scheduled-edge cost, accumulated level-major / ascending node
+    id -- the same float64 order ``SpanningTree.edge_cost_total`` uses, so
+    executed broadcast / up-sum pricing equals the analytic
+    ``tree_broadcast_cost`` bit-for-bit."""
+    total = 0.0
+    pc = np.asarray(schedule.parent_cost, np.float64)
+    for l in range(schedule.height):
+        for w in range(schedule.levels.shape[1]):
+            if schedule.level_mask[l, w]:
+                total += float(pc[schedule.levels[l, w]])
+    return total
 
 
 def _level_scan(schedule: TreeSchedule, body, carry, bottom_up: bool):
@@ -350,7 +445,9 @@ def tree_gather_exec(schedule: TreeSchedule, payload: jax.Array,
     per_origin = np.asarray(hops.sum(axis=0) if schedule.height else
                             np.zeros(schedule.n, np.int64))
     ledger = _units_ledger(per_origin, unit_scalars, unit_points, dim,
-                           count_all_messages=False)
+                           count_all_messages=False,
+                           per_origin_link=_path_link_costs(schedule,
+                                                            per_origin))
     res = ExecResult(rounds=schedule.height,
                      rounds_to_complete=schedule.height, ledger=ledger,
                      per_round_transmissions=[int(x) for x in
@@ -394,7 +491,9 @@ def tree_scatter_exec(schedule: TreeSchedule, root_values: jax.Array,
                             np.zeros(n, np.int64))
     own = vals[jnp.arange(n), jnp.arange(n)]
     ledger = _units_ledger(per_origin, unit_scalars, unit_points, dim,
-                           count_all_messages=False)
+                           count_all_messages=False,
+                           per_origin_link=_path_link_costs(schedule,
+                                                            per_origin))
     res = ExecResult(rounds=schedule.height,
                      rounds_to_complete=schedule.height, ledger=ledger,
                      per_round_transmissions=[int(x) for x in
@@ -435,6 +534,7 @@ def tree_up_sum_exec(schedule: TreeSchedule, values: jax.Array,
     acc, up_sends = _level_scan(schedule, up, flat, bottom_up=True)
     total = acc[schedule.root]
     sends = int(np.asarray(up_sends).sum()) if schedule.height else 0
+    w_sends = _level_edge_cost_total(schedule) if sends else 0.0
     per_round = ([int(x) for x in np.asarray(up_sends)]
                  if schedule.height else [])
     if broadcast:
@@ -442,13 +542,16 @@ def tree_up_sum_exec(schedule: TreeSchedule, values: jax.Array,
                                         unit_scalars=unit_scalars,
                                         unit_points=unit_points, dim=dim)
         sends_total = sends + int(bres.ledger.messages)
+        w_sends = w_sends + (_level_edge_cost_total(schedule)
+                             if bres.ledger.messages else 0.0)
         per_round = per_round + bres.per_round_transmissions
     else:
         out = jnp.broadcast_to(total, (schedule.n,) + total.shape)
         sends_total = sends
     ledger = _units_ledger(np.asarray([sends_total], np.float64),
                            unit_scalars, unit_points, dim,
-                           count_all_messages=False)
+                           count_all_messages=False,
+                           per_origin_link=np.asarray([w_sends], np.float64))
     res = ExecResult(rounds=schedule.height * (2 if broadcast else 1),
                      rounds_to_complete=schedule.height, ledger=ledger,
                      per_round_transmissions=per_round)
@@ -475,8 +578,10 @@ def tree_broadcast_exec(schedule: TreeSchedule, value: jax.Array,
 
     vals, sends = _level_scan(schedule, body, vals0, bottom_up=False)
     n_sends = int(np.asarray(sends).sum()) if schedule.height else 0
+    w_sends = _level_edge_cost_total(schedule) if n_sends else 0.0
     ledger = _units_ledger(np.asarray([n_sends], np.float64), unit_scalars,
-                           unit_points, dim, count_all_messages=False)
+                           unit_points, dim, count_all_messages=False,
+                           per_origin_link=np.asarray([w_sends], np.float64))
     res = ExecResult(rounds=schedule.height,
                      rounds_to_complete=schedule.height, ledger=ledger,
                      per_round_transmissions=[int(x) for x in

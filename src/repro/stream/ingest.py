@@ -17,6 +17,11 @@ scalars, Round 2 floods the fixed-size portions, and every node ends the
 round holding the same global coreset + centers. Communication is metered
 per round into a :class:`~repro.core.comm.CommLedger` phase
 (``stream_round_<r>``; ``ledger.as_dict(by_phase=True)``).
+``aggregate(transport="tree", routing="bfs"|"min_cost")`` swaps the floods
+for a spanning-tree gather + broadcast of the assembled coreset -- the
+same every-node-ends-identical contract, but the ledger prices only tree
+edges, and min-cost routing keeps the cost-weighted ``link_cost`` small on
+heterogeneous (WAN) links.
 """
 from __future__ import annotations
 
@@ -29,12 +34,18 @@ import numpy as np
 
 from repro.core import backend as backend_mod
 from repro.core import clustering
-from repro.core.comm import CommLedger, flood_cost
+from repro.core.comm import (CommLedger, flood_cost, flood_portions_cost,
+                             link_cost_of, tree_allocation_cost,
+                             tree_broadcast_cost, tree_gather_cost,
+                             tree_up_cost)
 from repro.core.coreset import Coreset, distributed_coreset
-from repro.core.distributed import exec_algorithm1_rounds
-from repro.core.message_passing import (GossipSchedule, flood_exec,
-                                        pack_payload, unpack_payload)
-from repro.core.topology import Graph
+from repro.core.distributed import (exec_algorithm1_rounds,
+                                    exec_algorithm1_tree_rounds)
+from repro.core.message_passing import (GossipSchedule, TreeSchedule,
+                                        flood_exec, pack_payload,
+                                        tree_broadcast_exec,
+                                        tree_gather_exec, unpack_payload)
+from repro.core.topology import Graph, SpanningTree, spanning_tree
 from repro.stream.tree import CoresetTree, TreeConfig
 
 Array = jax.Array
@@ -124,6 +135,7 @@ class DistributedStream:
         ]
         self._agg_key = jax.random.fold_in(key, graph.n)
         self._schedule: Optional[GossipSchedule] = None   # compiled lazily
+        self._trees: dict = {}     # (routing, root) -> (tree, TreeSchedule)
         self.ledger = CommLedger()
         self.rounds = 0
 
@@ -145,10 +157,20 @@ class DistributedStream:
     def total_weight(self) -> float:
         return sum(s.total_weight() for s in self.sites)
 
+    def _tree_schedule(self, routing: str, root: int):
+        """Build (and cache) the spanning tree + compiled schedule for a
+        tree-transport round."""
+        key = (routing, int(root))
+        if key not in self._trees:
+            tree = spanning_tree(self.graph, root=root, routing=routing)
+            self._trees[key] = (tree, TreeSchedule.from_tree(tree))
+        return self._trees[key]
+
     def aggregate(self, k: int, t: int, lloyd_iters: int = 8,
                   clip_negative: bool = False,
                   mode: str = "auto", restarts: int = 3,
-                  engine: str = "sim") -> AggregateResult:
+                  engine: str = "sim", transport: str = "flood",
+                  routing: str = "bfs", root: int = 0) -> AggregateResult:
         """Run one aggregation round over the current per-site summaries.
 
         Every node's tree summary (fixed ``levels * slot + batch_size``
@@ -178,13 +200,30 @@ class DistributedStream:
         ledger is *measured* from the executed schedule (equal to the
         analytic one; the padded vacant slots of a summary ride along
         physically but carry weight 0 and are not metered, matching the
-        effective-size accounting)."""
+        effective-size accounting).
+
+        ``transport="tree"`` restricts the round's communication to a
+        spanning tree of the topology under ``routing`` (``"bfs"``
+        hop-minimal | ``"min_cost"`` Prim over ``edge_costs``) rooted at
+        ``root``: summaries / portions are gathered to the root and the
+        assembled global coreset is broadcast back down, so every node
+        still ends the round holding the identical result, but the ledger
+        prices only tree edges -- on heterogeneous links min-cost routing
+        is what keeps the cost-weighted ``link_cost`` small. Both engines
+        support both transports with the same bit-parity contract."""
         cfg = self.config
         g = self.graph
         if engine not in ("sim", "exec"):
             raise ValueError(f"unknown engine {engine!r}: expected "
                              f"'sim'|'exec'")
-        if engine == "exec" and self._schedule is None:
+        if transport not in ("flood", "tree"):
+            raise ValueError(f"unknown transport {transport!r}: expected "
+                             f"'flood'|'tree'")
+        tree: Optional[SpanningTree] = None
+        tsched: Optional[TreeSchedule] = None
+        if transport == "tree":
+            tree, tsched = self._tree_schedule(routing, root)
+        elif engine == "exec" and self._schedule is None:
             self._schedule = GossipSchedule.from_graph(g)
         summaries = [s.summary() for s in self.sites]
         sp = jnp.stack([c.points for c in summaries])     # (n, S, d)
@@ -200,9 +239,26 @@ class DistributedStream:
 
         if mode == "union":
             local_costs = None
-            if engine == "exec":
+            eff = np.asarray(jnp.sum(sw != 0.0, axis=1), np.float64)
+            if transport == "tree" and engine == "exec":
                 payload = pack_payload(sp, sw)
-                eff = np.asarray(jnp.sum(sw != 0.0, axis=1), np.float64)
+                root_table, gr = tree_gather_exec(tsched, payload,
+                                                  unit_points=eff, dim=cfg.d)
+                _, br = tree_broadcast_exec(tsched, root_table,
+                                            unit_points=float(sum_eff),
+                                            dim=cfg.d)
+                pts0, w0 = unpack_payload(root_table)
+                cs = Coreset(points=pts0.reshape(-1, cfg.d),
+                             weights=w0.reshape(-1))
+                round_ledger = gr.ledger.add(br.ledger)
+            elif transport == "tree":
+                cs = Coreset.concat(*summaries)
+                round_ledger = tree_gather_cost(
+                    tree, unit_points_per_node=eff, dim=cfg.d)
+                round_ledger = round_ledger.add(tree_broadcast_cost(
+                    tree, unit_points=float(sum_eff), dim=cfg.d))
+            elif engine == "exec":
+                payload = pack_payload(sp, sw)
                 tables, rr = flood_exec(self._schedule, payload,
                                         unit_points=eff, dim=cfg.d)
                 pts0, w0 = unpack_payload(tables[0])
@@ -211,10 +267,50 @@ class DistributedStream:
                 round_ledger = rr.ledger
             else:
                 cs = Coreset.concat(*summaries)
-                round_ledger = CommLedger(points=2.0 * g.m * float(sum_eff),
-                                          messages=2.0 * g.m * g.n, dim=cfg.d)
+                # per-origin link pricing mirrors the engine's measured
+                # summation term for term (bit-parity; DESIGN.md Sec. 12)
+                w_pm = float(g.weighted_degrees().sum())
+                round_ledger = CommLedger(
+                    points=2.0 * g.m * float(sum_eff),
+                    messages=2.0 * g.m * g.n, dim=cfg.d,
+                    link_cost=link_cost_of(np.full(g.n, w_pm),
+                                           unit_points=eff, dim=cfg.d))
         elif mode == "resample":
-            if engine == "exec":
+            if transport == "tree" and engine == "exec":
+                root_pts, root_w, t_i, _, rounds, local_costs = \
+                    exec_algorithm1_tree_rounds(
+                        tsched, k1, sp, sw.astype(sp.dtype), k, t,
+                        t_buffer=t, objective=cfg.objective,
+                        lloyd_iters=lloyd_iters,
+                        clip_negative=clip_negative, backend=cfg.backend)
+                table = pack_payload(root_pts, root_w)
+                unit_b = float(np.asarray(t_i, np.float64).sum()) + g.n * k
+                _, br = tree_broadcast_exec(tsched, table,
+                                            unit_points=unit_b, dim=cfg.d)
+                cs = Coreset(points=root_pts.reshape(-1, cfg.d),
+                             weights=root_w.reshape(-1))
+                round_ledger = (rounds["round1_gather"].ledger
+                                .add(rounds["round1_scatter"].ledger)
+                                .add(rounds["round1_broadcast"].ledger)
+                                .add(rounds["round2_gather"].ledger)
+                                .add(br.ledger))
+            elif transport == "tree":
+                dc = distributed_coreset(k1, sp, sw != 0.0, k, t,
+                                         objective=cfg.objective,
+                                         lloyd_iters=lloyd_iters,
+                                         clip_negative=clip_negative,
+                                         backend=cfg.backend, site_weights=sw)
+                cs = dc.flatten()
+                local_costs = dc.local_costs
+                unit_pts = np.asarray(dc.t_i, np.float64) + k
+                unit_b = float(np.asarray(dc.t_i, np.float64).sum()) \
+                    + g.n * k
+                round_ledger = tree_allocation_cost(tree)
+                round_ledger = round_ledger.add(
+                    tree_up_cost(tree, unit_pts, dim=cfg.d))
+                round_ledger = round_ledger.add(tree_broadcast_cost(
+                    tree, unit_points=unit_b, dim=cfg.d))
+            elif engine == "exec":
                 detail, local_costs = exec_algorithm1_rounds(
                     self._schedule, k1, sp, sw.astype(sp.dtype), k, t,
                     t_buffer=t, objective=cfg.objective,
@@ -232,11 +328,9 @@ class DistributedStream:
                                          backend=cfg.backend, site_weights=sw)
                 cs = dc.flatten()
                 local_costs = dc.local_costs
-                portion_pts = float(jnp.sum(dc.t_i)) + g.n * k
                 round_ledger = flood_cost(g, n_messages=g.n, unit_scalars=1.0)
                 round_ledger = round_ledger.add(
-                    CommLedger(points=2.0 * g.m * portion_pts,
-                               messages=2.0 * g.m * g.n, dim=cfg.d))
+                    flood_portions_cost(g, np.asarray(dc.t_i), k, cfg.d))
         else:
             raise ValueError(f"unknown aggregate mode {mode!r}")
 

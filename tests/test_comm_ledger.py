@@ -73,3 +73,42 @@ def test_phase_tagging_composes_with_cost_helpers():
     d = led.as_dict(by_phase=True)
     assert d["phases"]["round1"]["scalars"] == 2.0 * g.m * g.n
     assert d["phases"]["broadcast"]["points"] == 5.0 * (tree.n - 1)
+
+
+def test_link_cost_sums_and_tags():
+    a = CommLedger(scalars=3.0, points=10.0, messages=5.0, dim=4,
+                   link_cost=100.0)
+    b = CommLedger(points=2.0, messages=1.0, dim=4, link_cost=7.0)
+    c = a.add(b)
+    assert c.link_cost == 107.0
+    t = c.tag("phase")
+    assert t.link_cost == 107.0
+    d = t.as_dict(by_phase=True)
+    assert d["link_cost"] == 107.0
+    assert d["phases"]["phase"]["link_cost"] == 107.0
+
+
+def test_link_cost_equals_bytes_on_uniform_costs():
+    g = grid(3, 3)
+    led = flood_cost(g, n_messages=g.n, unit_scalars=1.0)
+    assert led.link_cost == led.bytes
+    led2 = flood_cost(g, n_messages=2, unit_points=5.0, dim=7)
+    assert led2.link_cost == led2.bytes
+    tree = bfs_spanning_tree(g)
+    up = tree_broadcast_cost(tree, unit_points=3.0, dim=2)
+    assert up.link_cost == up.bytes
+
+
+def test_link_cost_prices_heterogeneous_links():
+    from repro.core.comm import link_cost_of, tree_gather_cost
+    from repro.core.topology import heterogeneous
+    g = heterogeneous(grid(3, 3), lambda i, j: 4.0)
+    led = flood_cost(g, n_messages=g.n, unit_scalars=1.0)
+    assert led.link_cost == 4.0 * led.bytes     # every link 4x pricier
+    assert led.scalars == 2.0 * g.m * g.n       # unit axes unchanged
+    tree = bfs_spanning_tree(g)
+    gl = tree_gather_cost(tree, unit_scalars_per_node=1.0)
+    assert gl.link_cost == 4.0 * gl.bytes
+    # link_cost_of: per-origin weights times per-origin byte sizes
+    assert link_cost_of([2.0, 3.0], unit_scalars=[1.0, 10.0]) \
+        == 2.0 * 4.0 + 3.0 * 40.0

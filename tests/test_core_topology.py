@@ -1,10 +1,14 @@
 """Graph topology, message passing (Algorithm 3), and partition tests."""
+import itertools
+
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import topology
-from repro.core.comm import flood_cost, tree_broadcast_cost, tree_up_cost
+from repro.core.comm import (flood_cost, tree_allocation_cost,
+                             tree_broadcast_cost, tree_gather_cost,
+                             tree_up_cost)
 from repro.core.message_passing import flood, flood_scalars
 from repro.core.partition import pad_partition, partition_indices
 
@@ -123,3 +127,217 @@ def test_pad_partition_masks():
     assert sm.sum() == 100
     # padded slots are zero
     assert np.all(sp[~sm] == 0)
+
+
+# -- Graph validation (a malformed edge list used to corrupt schedules
+# silently; now it raises at construction) -----------------------------------
+
+def test_graph_rejects_self_loop():
+    with pytest.raises(ValueError, match="self-loop"):
+        topology.Graph(3, ((0, 1), (2, 2)))
+
+
+def test_graph_rejects_out_of_range_endpoints():
+    with pytest.raises(ValueError, match="out of range"):
+        topology.Graph(3, ((0, 1), (1, 3)))
+    with pytest.raises(ValueError, match="out of range"):
+        topology.Graph(3, ((-1, 1),))
+
+
+def test_graph_rejects_unsorted_and_duplicate_edges():
+    with pytest.raises(ValueError, match="unsorted"):
+        topology.Graph(3, ((1, 2), (0, 1)))
+    with pytest.raises(ValueError, match="duplicate"):
+        topology.Graph(3, ((0, 1), (0, 1), (1, 2)))
+    with pytest.raises(ValueError, match="min, max"):
+        topology.Graph(3, ((1, 0), (1, 2)))
+
+
+def test_graph_rejects_bad_costs():
+    with pytest.raises(ValueError, match="invalid cost"):
+        topology.Graph(3, ((0, 1), (1, 2)), edge_costs=(1.0, -2.0))
+    with pytest.raises(ValueError, match="invalid cost"):
+        topology.Graph(3, ((0, 1), (1, 2)), edge_costs=(float("nan"), 1.0))
+    with pytest.raises(ValueError, match="invalid cost"):
+        topology.Graph(3, ((0, 1), (1, 2)), edge_costs=(float("inf"), 1.0))
+    with pytest.raises(ValueError, match="entries for"):
+        topology.Graph(3, ((0, 1), (1, 2)), edge_costs=(1.0,))
+
+
+def test_graph_directed_allows_both_orientations():
+    g = topology.Graph(3, ((0, 1), (1, 2), (2, 0)), directed=True)
+    assert g.adjacency() == ((1,), (2,), (0,))
+    assert list(g.degrees()) == [1, 1, 1]
+    assert topology.diameter(g) == 2
+    res = flood(g)
+    assert all(r == set(range(3)) for r in res.received)
+    assert res.transmissions == g.m * g.n      # out-links only
+    led = flood_cost(g, n_messages=g.n, unit_scalars=1.0)
+    assert led.scalars == g.m * g.n
+    with pytest.raises(ValueError, match="undirected"):
+        topology.bfs_spanning_tree(g)
+
+
+# -- adjacency/degree caching ------------------------------------------------
+
+def test_adjacency_and_degrees_are_cached():
+    g = topology.grid(3, 3)
+    assert g.adjacency() is g.adjacency()
+    assert g.degrees() is g.degrees()
+    assert g.weighted_degrees() is g.weighted_degrees()
+    assert g.adjacency_costs() is g.adjacency_costs()
+    with pytest.raises(ValueError):
+        g.degrees()[0] = 99                    # cache is read-only
+    np.testing.assert_array_equal(g.weighted_degrees(),
+                                  g.degrees().astype(np.float64))
+
+
+# -- cost accessors and generators -------------------------------------------
+
+def test_uniform_costs_default():
+    g = topology.ring(5)
+    assert g.is_uniform_cost
+    assert g.costs == (1.0,) * g.m
+    assert g.cost_of(0, 1) == 1.0 == g.cost_of(1, 0)
+
+
+def test_heterogeneous_reprices_edges():
+    g = topology.heterogeneous(topology.grid(2, 3),
+                               lambda i, j: 8.0 if j - i > 1 else 1.0)
+    assert not g.is_uniform_cost
+    for (i, j), c in zip(g.edges, g.costs):
+        assert c == (8.0 if j - i > 1 else 1.0)
+        assert g.cost_of(i, j) == c
+    # invalid cost functions are caught by Graph validation
+    with pytest.raises(ValueError, match="invalid cost"):
+        topology.heterogeneous(topology.ring(4), lambda i, j: -1.0)
+
+
+def test_wan_clusters_structure():
+    n_racks, rack_size, cross = 3, 4, 2
+    g = topology.wan_clusters(n_racks, rack_size, intra_cost=1.0,
+                              cross_cost=16.0, cross_links=cross, seed=0)
+    assert g.n == n_racks * rack_size
+    intra = [e for e, c in zip(g.edges, g.costs) if c == 1.0]
+    wan = [(e, c) for e, c in zip(g.edges, g.costs) if c == 16.0]
+    assert len(intra) == n_racks * rack_size * (rack_size - 1) // 2
+    assert len(wan) == cross * n_racks * (n_racks - 1) // 2
+    for (i, j), _ in wan:
+        assert i // rack_size != j // rack_size     # cross links cross racks
+    for i, j in intra:
+        assert i // rack_size == j // rack_size
+    res = flood(g)
+    assert all(r == set(range(g.n)) for r in res.received)  # connected
+    with pytest.raises(ValueError, match="cross_links"):
+        topology.wan_clusters(2, 3, cross_links=0)
+
+
+# -- spanning trees over costs -----------------------------------------------
+
+def test_spanning_tree_dispatcher():
+    g = topology.wan_clusters(2, 3, cross_links=2, seed=1)
+    bfs = topology.spanning_tree(g, routing="bfs")
+    mst = topology.spanning_tree(g, routing="min_cost")
+    assert bfs.parent == topology.bfs_spanning_tree(g).parent
+    assert mst.parent == topology.mst_spanning_tree(g).parent
+    with pytest.raises(ValueError, match="unknown routing"):
+        topology.spanning_tree(g, routing="warp")
+
+
+def test_tree_parent_costs_track_graph_costs():
+    g = topology.wan_clusters(2, 3, cross_links=2, seed=1)
+    for tree in (topology.bfs_spanning_tree(g), topology.mst_spanning_tree(g)):
+        pc = tree.parent_costs()
+        assert pc[tree.root] == 0.0
+        for v in range(g.n):
+            if tree.parent[v] >= 0:
+                assert pc[v] == g.cost_of(tree.parent[v], v)
+        # path costs decompose into parent costs; uniform == depth analogue
+        assert tree.path_costs()[tree.root] == 0.0
+        assert tree.edge_cost_total() == pytest.approx(pc.sum())
+
+
+def test_mst_min_cost_on_wan():
+    """The MST of a wan_clusters graph pays for exactly one cross link per
+    attached rack; BFS pays for every shallow entry point."""
+    g = topology.wan_clusters(3, 3, cross_cost=16.0, cross_links=3, seed=0)
+    bfs = topology.bfs_spanning_tree(g)
+    mst = topology.mst_spanning_tree(g)
+    n_cross = lambda t: sum(1 for v in range(g.n)
+                            if t.parent[v] >= 0 and t.parent_costs()[v] > 1.0)
+    assert n_cross(mst) == 2                   # n_racks - 1
+    assert n_cross(bfs) > n_cross(mst)
+    assert mst.edge_cost_total() < bfs.edge_cost_total()
+
+
+def _brute_force_mst_cost(g: topology.Graph) -> float:
+    best = None
+    for combo in itertools.combinations(range(g.m), g.n - 1):
+        parent = list(range(g.n))
+
+        def find(a):
+            while parent[a] != a:
+                parent[a] = parent[parent[a]]
+                a = parent[a]
+            return a
+
+        total, ok = 0.0, True
+        for ei in combo:
+            i, j = g.edges[ei]
+            ri, rj = find(i), find(j)
+            if ri == rj:            # cycle: n-1 acyclic edges span iff forest
+                ok = False
+                break
+            parent[ri] = rj
+            total += g.costs[ei]
+        if ok and (best is None or total < best):
+            best = total
+    return best
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 7), p=st.floats(0.3, 0.9),
+       seed=st.integers(0, 1000), cost_seed=st.integers(0, 1000))
+def test_mst_total_cost_is_minimal(n, p, seed, cost_seed):
+    """Prim's total equals the brute-force minimum over all spanning trees
+    (integer costs, so float equality is exact)."""
+    base = topology.erdos_renyi(n, p, seed=seed)
+    rng = np.random.default_rng(cost_seed)
+    costs = rng.integers(1, 17, size=base.m).astype(np.float64)
+    g = topology.Graph(base.n, base.edges, edge_costs=tuple(costs))
+    mst = topology.mst_spanning_tree(g)
+    assert mst.edge_cost_total() == _brute_force_mst_cost(g)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 20), seed=st.integers(0, 10_000),
+       root=st.integers(0, 3))
+def test_uniform_cost_mst_is_the_bfs_tree(n, seed, root):
+    """On uniform costs Prim's FIFO tie-breaking explores in BFS frontier
+    order, so the min-cost tree *is* the BFS tree and every uniform-cost
+    min-cost ledger matches the BFS ledger bit-for-bit."""
+    g = topology.erdos_renyi(n, 0.3, seed=seed)
+    root = root % n
+    bfs = topology.bfs_spanning_tree(g, root=root)
+    mst = topology.mst_spanning_tree(g, root=root)
+    assert bfs.parent == mst.parent
+    assert bfs.depth == mst.depth
+    units = [float(i % 5) for i in range(n)]
+    for lb, lm in [(tree_allocation_cost(bfs), tree_allocation_cost(mst)),
+                   (tree_up_cost(bfs, units, dim=3),
+                    tree_up_cost(mst, units, dim=3)),
+                   (tree_broadcast_cost(bfs, unit_points=4.0, dim=3),
+                    tree_broadcast_cost(mst, unit_points=4.0, dim=3))]:
+        assert lb.as_dict() == lm.as_dict()
+        assert lb.link_cost == lb.bytes        # uniform: weighted == plain
+
+
+def test_gather_cost_prices_paths_broadcast_prices_edges():
+    g = topology.wan_clusters(2, 2, intra_cost=1.0, cross_cost=10.0,
+                              cross_links=1, seed=0)
+    tree = topology.mst_spanning_tree(g)
+    led = tree_gather_cost(tree, unit_scalars_per_node=1.0)
+    pc = tree.path_costs()
+    assert led.link_cost == 4.0 * pc.sum()
+    down = tree_broadcast_cost(tree, unit_scalars=1.0)
+    assert down.link_cost == 4.0 * tree.edge_cost_total()

@@ -28,13 +28,17 @@ from repro.core.partition import pad_partition, partition_indices
 KEY = jax.random.PRNGKey(0)
 
 # every generator, all on 9 nodes so the end-to-end runs share jit caches
+# (wan is the heterogeneous-link one: integer 1.0/16.0 costs)
 TOPOLOGIES = {
     "ring": lambda: topology.ring(9),
     "star": lambda: topology.star(9),
     "grid": lambda: topology.grid(3, 3),
     "er": lambda: topology.erdos_renyi(9, 0.3, seed=3),
     "preferential": lambda: topology.preferential(9, 2, seed=0),
+    "wan": lambda: topology.wan_clusters(3, 3, cross_links=2, seed=0),
 }
+
+LEDGER_UNITS = ("scalars", "points", "messages", "link_cost")
 
 
 def _graph(name):
@@ -91,10 +95,16 @@ def test_flood_exec_delivers_and_meters_exactly(name):
     # quiescence: knowledge complete within diameter rounds
     assert res.rounds_to_complete <= topology.diameter(g)
     assert res.rounds == topology.diameter(g) + 1
-    # measured == analytic, exactly
+    # measured == analytic, exactly (link_cost included: every message
+    # crosses every link, priced by the weighted degree sum)
     analytic = flood_cost(g, n_messages=g.n, unit_scalars=1.0)
     assert res.ledger.scalars == analytic.scalars
     assert res.ledger.messages == analytic.messages == 2 * g.m * g.n
+    assert res.ledger.link_cost == analytic.link_cost
+    if g.is_uniform_cost:
+        assert res.ledger.link_cost == res.ledger.bytes
+    else:
+        assert res.ledger.link_cost > res.ledger.bytes
     assert sum(res.per_round_transmissions) == 2 * g.m * g.n
     # executed profile matches the host simulation round for round
     sim = flood(g)
@@ -141,10 +151,13 @@ def test_tree_gather_scatter_roundtrip_and_ledger(name):
     analytic = tree_gather_cost(tree, unit_scalars_per_node=1.0)
     assert gres.ledger.scalars == analytic.scalars == sum(tree.depth)
     assert gres.ledger.messages == analytic.messages
+    assert gres.ledger.link_cost == analytic.link_cost \
+        == 4.0 * tree.path_costs().sum()
 
     own, sres = tree_scatter_exec(sched, vals, unit_scalars=1.0)
     np.testing.assert_array_equal(np.asarray(own), np.asarray(vals))
     assert sres.ledger.scalars == analytic.scalars  # path symmetry
+    assert sres.ledger.link_cost == analytic.link_cost
 
 
 @pytest.mark.parametrize("name", sorted(TOPOLOGIES))
@@ -172,6 +185,8 @@ def test_tree_up_sum_and_broadcast(name):
     analytic = tree_broadcast_cost(tree, unit_points=4.0, dim=2)
     assert bres.ledger.points == analytic.points == 4.0 * (g.n - 1)
     assert bres.ledger.messages == analytic.messages == g.n - 1
+    assert bres.ledger.link_cost == analytic.link_cost \
+        == 4.0 * 3.0 * 4.0 * tree.edge_cost_total()
 
 
 # -- Algorithm 2: engine == simulation, measured == analytic -----------------
@@ -191,10 +206,9 @@ def test_graph_engine_matches_simulation(site_data, name):
                                   np.asarray(ex.coreset.points))
     np.testing.assert_array_equal(np.asarray(sim.coreset.weights),
                                   np.asarray(ex.coreset.weights))
-    # measured ledger == analytic ledger, exactly
-    assert ex.ledger.scalars == sim.ledger.scalars
-    assert ex.ledger.points == sim.ledger.points
-    assert ex.ledger.messages == sim.ledger.messages
+    # measured ledger == analytic ledger, exactly (all axes incl. link_cost)
+    for unit in LEDGER_UNITS:
+        assert getattr(ex.ledger, unit) == getattr(sim.ledger, unit), unit
     # every node assembled the identical global instance and allocation
     det = ex.exec_detail
     npts, nw = np.asarray(det.node_points), np.asarray(det.node_weights)
@@ -239,9 +253,8 @@ def test_tree_engine_matches_simulation(site_data, name):
                                   np.asarray(ex.coreset.points))
     np.testing.assert_array_equal(np.asarray(sim.coreset.weights),
                                   np.asarray(ex.coreset.weights))
-    assert ex.ledger.scalars == sim.ledger.scalars
-    assert ex.ledger.points == sim.ledger.points
-    assert ex.ledger.messages == sim.ledger.messages
+    for unit in LEDGER_UNITS:
+        assert getattr(ex.ledger, unit) == getattr(sim.ledger, unit), unit
     # the broadcast delivered the identical solution to every node
     nc = np.asarray(ex.exec_detail.node_centers)
     for v in range(g.n):
@@ -280,3 +293,157 @@ def test_unknown_engine_raises(site_data):
         distributed_kmeans_tree(KEY, sp, sm, k, t=30,
                                 tree=topology.bfs_spanning_tree(g),
                                 engine="warp")
+
+
+# -- heterogeneous links: weighted ledgers and min-cost routing ---------------
+
+def test_tree_exec_weighted_ledgers_exact_on_noninteger_costs():
+    """Tree gather/scatter/broadcast pricing is structurally identical to
+    the analytic path-cost summation, so measured == analytic bit-for-bit
+    even for arbitrary float costs (floods only guarantee that for
+    integer-valued costs; DESIGN.md Sec. 12)."""
+    g = topology.heterogeneous(topology.grid(3, 3),
+                               lambda i, j: 0.3 + 0.7 / (1 + i + j))
+    tree = topology.mst_spanning_tree(g)
+    sched = TreeSchedule.from_tree(tree)
+    vals = jnp.asarray(np.random.default_rng(7).standard_normal(
+        (g.n, 2)).astype(np.float32))
+    units = np.arange(1.0, g.n + 1.0)
+    _, gres = tree_gather_exec(sched, vals, unit_points=units, dim=2)
+    analytic = tree_gather_cost(tree, unit_points_per_node=units, dim=2)
+    assert gres.ledger.link_cost == analytic.link_cost
+    _, sres = tree_scatter_exec(sched, vals, unit_points=units, dim=2)
+    assert sres.ledger.link_cost == analytic.link_cost
+    _, bres = tree_broadcast_exec(sched, vals[0], unit_points=2.0, dim=2)
+    assert bres.ledger.link_cost == \
+        tree_broadcast_cost(tree, unit_points=2.0, dim=2).link_cost
+
+
+def test_flood_exec_weighted_per_origin_units():
+    g = topology.wan_clusters(3, 3, cross_links=2, seed=0)
+    vals = jnp.zeros((g.n, 1))
+    units = np.arange(g.n, dtype=np.float64)
+    _, res = flood_exec(g, vals, unit_points=units, dim=4)
+    w = float(g.weighted_degrees().sum())
+    # every message crosses every link: per-origin weighted price w * unit
+    assert res.ledger.link_cost == 4.0 * 5.0 * w * units.sum()
+
+
+@pytest.mark.parametrize("engine", ["sim", "exec"])
+def test_min_cost_routing_beats_bfs_on_wan(site_data, engine):
+    """Acceptance: on wan_clusters, routing="min_cost" strictly lowers the
+    cost-weighted bytes vs routing="bfs", with identical centers, and the
+    measured exec ledger equals the analytic min-cost ledger exactly."""
+    sp, sm, k = site_data
+    g = topology.wan_clusters(3, 3, cross_cost=16.0, cross_links=2, seed=0)
+    t = 90
+    res = {r: graph_distributed_kmeans(KEY, sp, sm, k, t=t, graph=g,
+                                       routing=r, engine=engine)
+           for r in ("bfs", "min_cost")}
+    assert res["min_cost"].ledger.link_cost < res["bfs"].ledger.link_cost
+    np.testing.assert_array_equal(np.asarray(res["bfs"].centers),
+                                  np.asarray(res["min_cost"].centers))
+    if engine == "exec":
+        for routing in ("bfs", "min_cost"):
+            sim = graph_distributed_kmeans(KEY, sp, sm, k, t=t, graph=g,
+                                           routing=routing)
+            for unit in LEDGER_UNITS:
+                assert getattr(res[routing].ledger, unit) == \
+                    getattr(sim.ledger, unit), (routing, unit)
+    # the min-cost tree holds exactly n_racks - 1 cross links; BFS enters
+    # remote racks through every shallow cross link it finds
+    mst = topology.mst_spanning_tree(g)
+    bfs = topology.bfs_spanning_tree(g)
+    assert mst.edge_cost_total() < bfs.edge_cost_total()
+
+
+def test_routing_knob_uniform_costs_match_bfs_exactly(site_data):
+    """On a uniform-cost graph min-cost routing is the BFS tree, so the
+    two routings produce bit-identical ledgers (PR 4 compatibility)."""
+    sp, sm, k = site_data
+    g = _graph("er")
+    a = graph_distributed_kmeans(KEY, sp, sm, k, t=90, graph=g,
+                                 routing="bfs")
+    b = graph_distributed_kmeans(KEY, sp, sm, k, t=90, graph=g,
+                                 routing="min_cost")
+    assert a.ledger.as_dict() == b.ledger.as_dict()
+    assert a.ledger.link_cost == a.ledger.bytes
+    np.testing.assert_array_equal(np.asarray(a.centers),
+                                  np.asarray(b.centers))
+
+
+def test_routing_matches_explicit_tree_protocol(site_data):
+    """The routing knob is sugar for the tree protocol on a spanning tree
+    of the graph: same centers, same ledger."""
+    sp, sm, k = site_data
+    g = _graph("wan")
+    via_knob = graph_distributed_kmeans(KEY, sp, sm, k, t=90, graph=g,
+                                        routing="min_cost")
+    tree = topology.mst_spanning_tree(g)
+    direct = distributed_kmeans_tree(KEY, sp, sm, k, t=90, tree=tree)
+    assert via_knob.ledger.as_dict() == direct.ledger.as_dict()
+    np.testing.assert_array_equal(np.asarray(via_knob.centers),
+                                  np.asarray(direct.centers))
+
+
+def test_unknown_routing_raises(site_data):
+    sp, sm, k = site_data
+    with pytest.raises(ValueError, match="unknown routing"):
+        graph_distributed_kmeans(KEY, sp, sm, k, t=30,
+                                 graph=_graph("ring"), routing="warp")
+
+
+def test_ledger_phase_breakdown_carries_link_cost(site_data):
+    """Phase dicts expose the link_cost axis: every phase of an exec tree
+    run prices its own transmissions (round1 scalars cheap, round2 points
+    dominant), and phases decompose the total exactly."""
+    sp, sm, k = site_data
+    g = _graph("wan")
+    ex = graph_distributed_kmeans(KEY, sp, sm, k, t=90, graph=g,
+                                  routing="min_cost", engine="exec")
+    d = ex.ledger.as_dict(by_phase=True)
+    assert set(d["phases"]) == {"round1", "round2_gather",
+                                "round2_broadcast"}
+    for sub in d["phases"].values():
+        assert "link_cost" in sub
+    assert sum(p["link_cost"] for p in d["phases"].values()) \
+        == pytest.approx(d["link_cost"])
+    assert sum(p["points"] for p in d["phases"].values()) == d["points"]
+
+
+def test_flood_exec_directed_follows_link_directions():
+    """On a directed graph the executed flood must move payloads along
+    out-links (receive = in-neighbor gather), not the transpose graph: on
+    this asymmetric strongly-connected digraph the transpose has a
+    different per-round profile, so profile equality with the (correct)
+    host simulation catches any direction flip."""
+    g = topology.Graph(4, ((0, 1), (1, 2), (1, 3), (2, 0), (3, 2)),
+                       directed=True)
+    vals = jnp.asarray(np.random.default_rng(5).standard_normal(
+        (g.n, 2)).astype(np.float32))
+    tables, res = flood_exec(g, vals, unit_scalars=1.0)
+    for v in range(g.n):
+        np.testing.assert_array_equal(np.asarray(tables[v]),
+                                      np.asarray(vals))
+    sim = flood(g)
+    assert res.per_round_transmissions == sim.per_round_transmissions
+    analytic = flood_cost(g, n_messages=g.n, unit_scalars=1.0)
+    # directed: each message crosses each one-way link once => m per message
+    assert res.ledger.messages == analytic.messages == g.m * g.n
+    assert res.ledger.scalars == analytic.scalars
+    assert res.ledger.link_cost == analytic.link_cost
+    assert res.rounds_to_complete <= topology.diameter(g)
+
+
+def test_tree_schedule_from_graph_routing():
+    """TreeSchedule.from_graph compiles the routed spanning tree directly:
+    identical schedule state to from_tree(spanning_tree(...))."""
+    g = topology.wan_clusters(2, 3, cross_links=2, seed=1)
+    for routing in ("bfs", "min_cost"):
+        direct = TreeSchedule.from_graph(g, root=0, routing=routing)
+        via_tree = TreeSchedule.from_tree(
+            topology.spanning_tree(g, root=0, routing=routing))
+        np.testing.assert_array_equal(direct.parent, via_tree.parent)
+        np.testing.assert_array_equal(direct.parent_cost,
+                                      via_tree.parent_cost)
+        np.testing.assert_array_equal(direct.levels, via_tree.levels)
