@@ -1,0 +1,132 @@
+"""Multi-tenant serving benchmarks: fused stacked-center dispatch vs a
+per-tenant serial loop, as JSON rows (``BENCH_serve.json`` in CI).
+
+For each backend and tenant count T, register T tenants (k centers in R^d
+each) on one :class:`~repro.serve.cluster.ClusterServeEngine` and measure:
+
+* **serial** QPS: the pre-engine serving model -- a Python loop issuing one
+  ``query_assignments`` dispatch per tenant (all tenants share one compiled
+  shape, so this is the *best case* for the serial path);
+* **batched** QPS: enqueue every tenant's batch and drain with
+  ``engine.run()`` -- the queue assembles full stacked batches and launches
+  ``ceil(T / max_group)`` fused ``query_assignments_batched`` dispatches;
+* **step-latency p50/p99**: a bursty loop (a random quarter of tenants
+  enqueue per step) timing individual ``step()`` calls -- the tail a
+  tenant's query waits behind everyone else's traffic.
+
+On this CPU container the pallas rows run in interpret mode (a Python
+interpreter per grid tile), so its tenant counts are clamped -- wall times
+are NOT TPU times; jnp rows carry the cross-tenant scaling story here.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import json_row
+from repro.core import backend as backend_mod
+from repro.serve import ClusterServeEngine, StaticCenters
+
+K, D, Q_PER_TENANT = 8, 16, 8
+MAX_GROUP = 1024
+
+
+def _make_tenants(T: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((T, K, D)).astype(np.float32)
+    queries = rng.standard_normal((T, Q_PER_TENANT, D)).astype(np.float32)
+    return centers, queries
+
+
+def _serial_pass(backend: str, queries, centers) -> list:
+    """One dispatch per tenant, identical shapes (one compile total). Like
+    the engine's tickets, results are materialized host-side -- a serving
+    loop hands assignments to the caller, it doesn't keep device handles."""
+    outs = []
+    for t in range(queries.shape[0]):
+        a, dist = backend_mod.query_assignments(queries[t], centers[t],
+                                                backend=backend)
+        outs.append((np.asarray(a), np.asarray(dist)))
+    return outs
+
+
+def _bench_one(backend: str, T: int, n_runs: int, rows: List[str],
+               burst_steps: int) -> None:
+    centers, queries = _make_tenants(T)
+    n_q = T * Q_PER_TENANT
+
+    eng = ClusterServeEngine(backend=backend, max_group=MAX_GROUP)
+    tids = [eng.add_tenant(StaticCenters(centers[t]), k=K, d=D)
+            for t in range(T)]
+
+    def batched_pass():
+        tickets = [eng.enqueue(tid, queries[i])
+                   for i, tid in enumerate(tids)]
+        eng.run()
+        return tickets
+
+    # warm-up compiles both paths, and doubles as the parity check
+    tickets = batched_pass()
+    serial = _serial_pass(backend, queries, centers)
+    agree = np.mean([np.array_equal(tk.assign, a)
+                     for tk, (a, _) in zip(tickets, serial)])
+
+    t_batched = min(_timed(batched_pass) for _ in range(n_runs))
+    t_serial = min(_timed(lambda: _serial_pass(backend, queries, centers))
+                   for _ in range(n_runs))
+
+    # bursty step-latency: a random quarter of tenants arrives per step
+    rng = np.random.default_rng(1)
+    lat_ms = []
+    for _ in range(burst_steps):
+        for i in rng.choice(T, size=max(T // 4, 1), replace=False):
+            eng.enqueue(tids[i], queries[i])
+        t0 = time.perf_counter()
+        while eng.pending_queries():
+            eng.step()
+        lat_ms.append((time.perf_counter() - t0) * 1e3)
+
+    st = eng.stats
+    json_row(rows, f"serve/{backend}/T={T}/k={K}/d={D}",
+             t_batched / n_q * 1e6,
+             tenants=T, n_queries=n_q,
+             qps_batched=round(n_q / t_batched),
+             qps_serial=round(n_q / t_serial),
+             speedup=round(t_serial / t_batched, 2),
+             p50_step_ms=round(float(np.percentile(lat_ms, 50)), 3),
+             p99_step_ms=round(float(np.percentile(lat_ms, 99)), 3),
+             dispatches_per_pass=-(-T // MAX_GROUP),
+             compiled_shapes=len(eng.compiled_shapes),
+             padded_frac=round(st.n_padded / (st.n_padded + st.n_queries),
+                               4),
+             parity=float(agree))
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run(scale: float = 1.0, n_runs: int = 3,
+        out_rows: List[str] | None = None) -> List[str]:
+    rows = out_rows if out_rows is not None else []
+    interpreted = jax.default_backend() != "tpu"
+    full = scale >= 1.0
+    plans = [("jnp", (256, 1024) if full else (16, 64)),
+             ("jnp_chunked", (256, 1024) if full else (16,)),
+             # interpret mode pays a Python loop per grid tile: clamp T
+             ("pallas", ((64,) if interpreted else (256, 1024))
+              if full else (8,))]
+    burst_steps = 30 if full else 5
+    for backend, t_counts in plans:
+        for T in t_counts:
+            _bench_one(backend, T, n_runs, rows, burst_steps)
+    return rows
+
+
+if __name__ == "__main__":
+    run(scale=0.05)

@@ -15,7 +15,8 @@ import time
 
 from benchmarks import (bench_comm_scaling, bench_coreset_size,
                         bench_fig2_graphs, bench_fig3_trees, bench_kernels,
-                        bench_roofline, bench_stream, bench_topologies)
+                        bench_roofline, bench_serve, bench_stream,
+                        bench_topologies)
 from benchmarks.common import write_json_rows
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -27,7 +28,7 @@ def main(argv=None) -> None:
                     help="paper-scale datasets and run counts")
     ap.add_argument("--only", default="",
                     help="comma-separated subset: fig2,fig3,comm,size,"
-                         "kernels,roofline,stream,topologies")
+                         "kernels,roofline,serve,stream,topologies")
     args = ap.parse_args(argv)
     scale = 1.0 if args.full else 0.05
     n_runs = 5 if args.full else 2
@@ -50,6 +51,13 @@ def main(argv=None) -> None:
         rows.extend(kernel_rows)
         out_json = os.path.join(_REPO_ROOT, "BENCH_kernels.json")
         write_json_rows(out_json, kernel_rows)
+        print(f"# wrote {out_json}", file=sys.stderr)
+    if only is None or "serve" in only:
+        serve_rows: list = []
+        bench_serve.run(scale=scale, n_runs=n_runs, out_rows=serve_rows)
+        rows.extend(serve_rows)
+        out_json = os.path.join(_REPO_ROOT, "BENCH_serve.json")
+        write_json_rows(out_json, serve_rows)
         print(f"# wrote {out_json}", file=sys.stderr)
     if only is None or "stream" in only:
         bench_stream.run(scale=scale, out_rows=rows)

@@ -55,6 +55,8 @@ from typing import Dict, Optional, Protocol, Tuple, Union, runtime_checkable
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ref import CENTER_SENTINEL as _CENTER_SENTINEL
+
 Array = jax.Array
 
 _EPS = 1e-12
@@ -62,12 +64,23 @@ _EPS = 1e-12
 
 @runtime_checkable
 class ClusteringBackend(Protocol):
-    """The three primitive ops every numerical path dispatches through."""
+    """The primitive ops every numerical path dispatches through.
+
+    ``min_dist_argmin_batched`` is the *stacked-tenant* sibling of
+    ``min_dist_argmin``: ``(T, m, d), (T, k, d) -> ((T, m) f32, (T, m)
+    i32)`` where tenant t's queries reduce over tenant t's centers only --
+    the multi-tenant serving tier fuses T tenants' query traffic into one
+    such dispatch (DESIGN.md Sec. 13). Ragged center sets arrive sentinel-
+    masked (see :func:`query_assignments_batched`)."""
 
     name: str
 
     def min_dist_argmin(self, points: Array, centers: Array
                         ) -> Tuple[Array, Array]:
+        ...
+
+    def min_dist_argmin_batched(self, points: Array, centers: Array
+                                ) -> Tuple[Array, Array]:
         ...
 
     def lloyd_stats(self, points: Array, centers: Array,
@@ -113,6 +126,14 @@ def _dense_lloyd_stats(points: Array, centers: Array,
     return sums, counts, cost
 
 
+# Batched tenant axis via vmap: on every platform this lowers to one
+# batched dot_general, and each tenant slice runs the *same* arithmetic as
+# a standalone _dense_min_dist_argmin call, so batched results are
+# bit-identical to the per-tenant serial loop (asserted in
+# tests/test_serve_cluster.py).
+_dense_min_dist_argmin_batched = jax.vmap(_dense_min_dist_argmin)
+
+
 def _dense_weiszfeld_stats(points: Array, centers: Array,
                            weights: Optional[Array] = None
                            ) -> Tuple[Array, Array, Array]:
@@ -132,6 +153,9 @@ class JnpBackend:
 
     def min_dist_argmin(self, points, centers):
         return _dense_min_dist_argmin(points, centers)
+
+    def min_dist_argmin_batched(self, points, centers):
+        return _dense_min_dist_argmin_batched(points, centers)
 
     def lloyd_stats(self, points, centers, weights=None):
         return _dense_lloyd_stats(points, centers, weights)
@@ -166,6 +190,24 @@ class JnpChunkedBackend:
         md, am = jax.lax.map(
             lambda blk: _dense_min_dist_argmin(blk, centers), pts)
         return md.reshape(-1)[:n], am.reshape(-1)[:n]
+
+    def min_dist_argmin_batched(self, points, centers):
+        T, m, d = points.shape
+        if T * m <= self.chunk:
+            return _dense_min_dist_argmin_batched(points, centers)
+        # lax.map over fixed-size tenant blocks: the materialized distance
+        # block is (blk, m, k) instead of (T, m, k). Padding tenants carry
+        # sentinel centers (never win) and are sliced off.
+        blk = max(1, self.chunk // max(m, 1))
+        pad = (-T) % blk
+        pts = jnp.pad(points, ((0, pad), (0, 0), (0, 0)))
+        ctr = jnp.pad(centers, ((0, pad), (0, 0), (0, 0)),
+                      constant_values=_CENTER_SENTINEL)
+        k = centers.shape[1]
+        md, am = jax.lax.map(
+            lambda args: _dense_min_dist_argmin_batched(args[0], args[1]),
+            (pts.reshape(-1, blk, m, d), ctr.reshape(-1, blk, k, d)))
+        return md.reshape(-1, m)[:T], am.reshape(-1, m)[:T]
 
     def lloyd_stats(self, points, centers, weights=None):
         n = points.shape[0]
@@ -209,6 +251,14 @@ class PallasBackend:
         return kops.min_dist_argmin(points, centers, block_n=self.block_n,
                                     block_k=self.block_k,
                                     interpret=self.interpret)
+
+    def min_dist_argmin_batched(self, points, centers):
+        from repro.kernels import ops as kops
+
+        return kops.min_dist_argmin_batched(points, centers,
+                                            block_n=self.block_n,
+                                            block_k=self.block_k,
+                                            interpret=self.interpret)
 
     def lloyd_stats(self, points, centers, weights=None):
         from repro.kernels import ops as kops
@@ -321,6 +371,44 @@ def query_assignments(points: Array, centers: Array,
 @functools.partial(jax.jit, static_argnames=("objective", "backend"))
 def _query_assignments(points, centers, objective, backend):
     d2, assign = _REGISTRY[backend].min_dist_argmin(points, centers)
+    dist = d2 if objective == "kmeans" else jnp.sqrt(jnp.maximum(d2, 0.0))
+    return assign, dist
+
+
+def query_assignments_batched(queries: Array, centers: Array,
+                              center_mask: Optional[Array] = None,
+                              objective: str = "kmeans",
+                              backend: BackendLike = None
+                              ) -> Tuple[Array, Array]:
+    """Stacked-tenant cluster-query entry point: ``(T, m, d), (T, k, d)[,
+    (T, k) bool] -> (assign (T, m) i32, dist (T, m) f32)`` -- T tenants'
+    nearest-center queries fused into ONE device dispatch (one Pallas
+    ``distance_argmin_batched`` launch on TPU, one batched dot_general on
+    the jnp backends). This is the multi-tenant serving hot path of
+    :mod:`repro.serve.cluster` (DESIGN.md Sec. 13).
+
+    **Masking contract**: tenants with ragged center counts are stacked
+    into the common ``(T, k, d)`` buffer and described by ``center_mask``
+    (True = live row). Masked-out rows are substituted with the
+    ``CENTER_SENTINEL`` coordinate *here*, uniformly for every backend, so
+    they can never win an argmin and all backends see identical operands
+    -- batched results are bit-identical to a per-tenant serial loop over
+    the same stacked buffers on the jnp backends (and ~1e-7 on pallas,
+    whose padded-k tiling differs). Padded *query* rows are the caller's
+    to slice off. ``dist`` is squared for k-means, euclidean for k-median.
+    """
+    return _query_assignments_batched(queries, centers, center_mask,
+                                      objective=objective,
+                                      backend=resolve_name(backend))
+
+
+@functools.partial(jax.jit, static_argnames=("objective", "backend"))
+def _query_assignments_batched(queries, centers, center_mask, objective,
+                               backend):
+    if center_mask is not None:
+        centers = jnp.where(center_mask[..., None], centers,
+                            jnp.asarray(_CENTER_SENTINEL, centers.dtype))
+    d2, assign = _REGISTRY[backend].min_dist_argmin_batched(queries, centers)
     dist = d2 if objective == "kmeans" else jnp.sqrt(jnp.maximum(d2, 0.0))
     return assign, dist
 

@@ -4,8 +4,10 @@ assignment, fused Lloyd statistics (k-means) and fused Weiszfeld statistics
 formulation, VMEM tiling via BlockSpec)."""
 
 from repro.kernels import ops, ref
-from repro.kernels.ops import (lloyd_stats, lloyd_step, min_dist_argmin,
-                               pad_queries, weiszfeld_stats)
+from repro.kernels.ops import (chunk_queries, lloyd_stats, lloyd_step,
+                               min_dist_argmin, min_dist_argmin_batched,
+                               pad_queries, query_bucket, weiszfeld_stats)
 
-__all__ = ["ops", "ref", "lloyd_stats", "lloyd_step", "min_dist_argmin",
-           "pad_queries", "weiszfeld_stats"]
+__all__ = ["ops", "ref", "chunk_queries", "lloyd_stats", "lloyd_step",
+           "min_dist_argmin", "min_dist_argmin_batched", "pad_queries",
+           "query_bucket", "weiszfeld_stats"]

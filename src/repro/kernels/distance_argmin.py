@@ -57,6 +57,75 @@ def _kernel(p_ref, c_ref, min_ref, arg_ref, *, block_k: int):
         arg_ref[...] = jnp.where(better, local_arg, arg_ref[...])
 
 
+def _kernel_batched(p_ref, c_ref, min_ref, arg_ref, *, block_k: int):
+    """Stacked-tenant variant: identical math, one extra (leading) grid axis
+    selecting the tenant. Block shapes carry a unit tenant dim."""
+    j = pl.program_id(2)
+
+    p = p_ref[0].astype(jnp.float32)            # (bn, d)
+    c = c_ref[0].astype(jnp.float32)            # (bk, d)
+    p2 = jnp.sum(p * p, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1)
+    prod = jax.lax.dot_general(
+        p, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(p2 + c2[None, :] - 2.0 * prod, 0.0)
+
+    local_min = jnp.min(d2, axis=1, keepdims=True)
+    local_arg = jnp.argmin(d2, axis=1).astype(jnp.int32)[:, None]
+    local_arg = local_arg + j * block_k
+
+    @pl.when(j == 0)
+    def _init():
+        min_ref[0] = local_min
+        arg_ref[0] = local_arg
+
+    @pl.when(j > 0)
+    def _update():
+        prev = min_ref[0]
+        better = local_min < prev
+        min_ref[0] = jnp.where(better, local_min, prev)
+        arg_ref[0] = jnp.where(better, local_arg, arg_ref[0])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_k", "interpret"))
+def distance_argmin_batched(points: Array, centers: Array,
+                            block_n: int = 256, block_k: int = 256,
+                            interpret: bool = False):
+    """Stacked-tenant raw kernel entry: ``(T, m, d), (T, k, d) ->
+    (min_d2 (T, m, 1) f32, argmin (T, m, 1) i32)`` in ONE launch over grid
+    ``(T, m/bn, k/bk)`` -- the serving tier's fused dispatch (one kernel
+    call for T tenants instead of T calls). Same pre-padding contract as
+    :func:`distance_argmin` per tenant: m % block_n == 0, k % block_k == 0,
+    padded/masked center rows set to a huge sentinel coordinate so they
+    never win. Use :func:`repro.kernels.ops.min_dist_argmin_batched` for
+    the safe wrapper. The two output blocks depend only on (t, i), so they
+    stay VMEM-resident across the center-tile sweep exactly like the
+    single-tenant kernel."""
+    T, n, d = points.shape
+    Tc, k, _ = centers.shape
+    assert T == Tc, (T, Tc)
+    assert n % block_n == 0 and k % block_k == 0, (n, k, block_n, block_k)
+    grid = (T, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_kernel_batched, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n, d), lambda t, i, j: (t, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda t, i, j: (t, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n, 1), lambda t, i, j: (t, i, 0)),
+            pl.BlockSpec((1, block_n, 1), lambda t, i, j: (t, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((T, n, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(points, centers)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("block_n", "block_k", "interpret"))
 def distance_argmin(points: Array, centers: Array, block_n: int = 256,

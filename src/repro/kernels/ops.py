@@ -18,12 +18,14 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.distance_argmin import distance_argmin as _distance_argmin
+from repro.kernels.distance_argmin import \
+    distance_argmin_batched as _distance_argmin_batched
 from repro.kernels.lloyd_update import lloyd_stats as _lloyd_stats
 from repro.kernels.weiszfeld import weiszfeld_stats as _weiszfeld_stats
 
 Array = jax.Array
 
-_CENTER_SENTINEL = 1.0e15
+_CENTER_SENTINEL = ref.CENTER_SENTINEL
 # (k, d) f32 resident block budget for the fused lloyd kernel (~4 MB).
 _LLOYD_RESIDENT_FLOATS = 1 << 20
 
@@ -44,7 +46,26 @@ def _pad_dim(x: Array, axis: int, multiple: int, value: float = 0.0) -> Array:
     return jnp.pad(x, widths, constant_values=value)
 
 
-def pad_queries(points: Array, min_bucket: int = 8) -> Tuple[Array, int]:
+def query_bucket(n: int, min_bucket: int = 8,
+                 max_bucket: Optional[int] = None) -> int:
+    """The padded row count serving uses for an ``n``-query (chunk of a)
+    batch: next power of two, clamped to ``[min_bucket, max_bucket]``. With
+    a ``max_bucket`` bound the reachable bucket set is
+    ``{min_bucket, 2*min_bucket, ..., max_bucket}`` -- O(log max_bucket)
+    compiled specializations no matter how adversarial the traffic sizes
+    are. ``n`` may exceed ``max_bucket`` only through chunking
+    (:func:`chunk_queries`)."""
+    b = max(min_bucket, 1 << max(n - 1, 0).bit_length())
+    if max_bucket is not None:
+        if max_bucket < min_bucket:
+            raise ValueError(f"max_bucket {max_bucket} < min_bucket "
+                             f"{min_bucket}")
+        b = min(b, max_bucket)
+    return b
+
+
+def pad_queries(points: Array, min_bucket: int = 8,
+                max_bucket: Optional[int] = None) -> Tuple[Array, int]:
     """Pad a query batch ``(n, d)`` to the next power-of-two row count
     (>= ``min_bucket``) with zero rows. Serving traffic arrives in
     arbitrary batch sizes; bucketing bounds the number of jit/kernel
@@ -53,10 +74,44 @@ def pad_queries(points: Array, min_bucket: int = 8) -> Tuple[Array, int]:
     it. Zero-row padding is inert: padded queries get *some* assignment but
     are sliced off before anything consumes them. Always returns >=
     ``min_bucket`` rows (an empty batch pads up, never through, so the
-    kernels see a nonzero shape)."""
+    kernels see a nonzero shape).
+
+    ``max_bucket`` caps the largest specialization this function will ever
+    produce: a batch that does not fit must be split into chunks instead
+    (:func:`chunk_queries`) -- padding a one-off 10M-row burst to the next
+    power of two would compile (and allocate) an unboundedly large kernel
+    specialization."""
     n = points.shape[0]
-    cap = max(min_bucket, 1 << max(n - 1, 0).bit_length())
+    cap = query_bucket(n, min_bucket, max_bucket)
+    if n > cap:
+        raise ValueError(
+            f"query batch of {n} rows exceeds max_bucket={max_bucket}; "
+            f"split it with chunk_queries() instead")
     return jnp.pad(points, ((0, cap - n), (0, 0))), n
+
+
+def chunk_queries(points: Array, min_bucket: int = 8,
+                  max_bucket: Optional[int] = None
+                  ) -> list:
+    """Split a query batch ``(n, d)`` into ``max_bucket``-row chunks, each
+    padded to its own power-of-two bucket (the tail chunk pads to the
+    smallest bucket that holds it). Returns ``[(padded, n_chunk, offset),
+    ...]`` where ``offset`` is the chunk's row offset into the original
+    batch; an empty batch yields one all-padding chunk (``n_chunk == 0``),
+    mirroring :func:`pad_queries`. Under any adversarial sweep of batch
+    sizes the set of emitted padded shapes stays within the bounded bucket
+    set of :func:`query_bucket`."""
+    n = points.shape[0]
+    step = max_bucket if max_bucket is not None else max(n, 1)
+    out = []
+    off = 0
+    while True:
+        part = points[off:off + step]
+        out.append(pad_queries(part, min_bucket, max_bucket)
+                   + (off,))
+        off += part.shape[0]
+        if off >= n:
+            return out
 
 
 def min_dist_argmin(points: Array, centers: Array, block_n: int = 256,
@@ -74,6 +129,29 @@ def min_dist_argmin(points: Array, centers: Array, block_n: int = 256,
     md, am = _distance_argmin(p, c, block_n=block_n, block_k=block_k,
                               interpret=_auto_interpret(interpret))
     return md[:n, 0], am[:n, 0]
+
+
+def min_dist_argmin_batched(points: Array, centers: Array,
+                            block_n: int = 256, block_k: int = 256,
+                            interpret: Optional[bool] = None
+                            ) -> Tuple[Array, Array]:
+    """Stacked-tenant fused min-distance/argmin: ``(T, m, d), (T, k, d) ->
+    ((T, m) f32, (T, m) i32)`` in one kernel launch (the multi-tenant
+    serving hot path). Per-tenant semantics match :func:`min_dist_argmin`;
+    ragged tenants arrive pre-masked -- padded center rows filled with the
+    sentinel (``backend.query_assignments_batched`` does this from a
+    boolean mask) so they never win the argmin."""
+    T, m, d = points.shape
+    k = centers.shape[1]
+    block_n = min(block_n, max(8, 1 << (m - 1).bit_length()))
+    block_k = min(block_k, max(8, 1 << (k - 1).bit_length()))
+    p = _pad_dim(_pad_dim(points, 2, 128), 1, block_n)
+    c = _pad_dim(centers, 2, 128)
+    c = _pad_dim(c, 1, block_k, value=_CENTER_SENTINEL)
+    md, am = _distance_argmin_batched(p, c, block_n=block_n,
+                                      block_k=block_k,
+                                      interpret=_auto_interpret(interpret))
+    return md[:, :m, 0], am[:, :m, 0]
 
 
 def lloyd_stats(points: Array, centers: Array,

@@ -25,6 +25,28 @@ def min_dist_argmin_ref(points: Array, centers: Array
     return jnp.min(d2, axis=-1), jnp.argmin(d2, axis=-1).astype(jnp.int32)
 
 
+# Masking sentinel for padded / masked-out center rows: a center at
+# coordinate 1e15 is ~30 orders of magnitude farther than any real data, so
+# it can never win an argmin, yet its squared distance stays finite in f32
+# (d * 1e30 << 3.4e38) -- no inf/NaN propagation through min reductions.
+# Shared by ops.py shape padding and the stacked-tenant masking contract of
+# backend.query_assignments_batched (DESIGN.md Sec. 13).
+CENTER_SENTINEL = 1.0e15
+
+
+def min_dist_argmin_batched_ref(points: Array, centers: Array
+                                ) -> Tuple[Array, Array]:
+    """Stacked-tenant oracle: ``(T, m, d), (T, k, d) -> ((T, m) f32,
+    (T, m) i32)`` -- tenant t's queries reduced over tenant t's centers
+    only, as a plain per-tenant loop over :func:`min_dist_argmin_ref`.
+    Masked-out / ragged center rows are expected pre-filled with
+    :data:`CENTER_SENTINEL` (they never win the argmin)."""
+    outs = [min_dist_argmin_ref(points[t], centers[t])
+            for t in range(points.shape[0])]
+    return (jnp.stack([md for md, _ in outs]),
+            jnp.stack([am for _, am in outs]))
+
+
 def lloyd_stats_ref(points: Array, centers: Array,
                     weights: Optional[Array] = None
                     ) -> Tuple[Array, Array, Array]:

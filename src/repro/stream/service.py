@@ -5,10 +5,20 @@
 ``config`` surface) and serves batched nearest-center queries against
 centers solved from the current summary:
 
-* **queries** route through :func:`repro.core.backend.query_assignments` --
-  one fused ``min_dist_argmin`` pass (the Pallas ``distance_argmin`` kernel
-  on TPU). Query batches are padded up to power-of-two buckets so arbitrary
-  traffic shapes hit a bounded set of compiled specializations.
+* **queries** are served *through the multi-tenant engine*
+  (:class:`repro.serve.cluster.ClusterServeEngine`): the service registers
+  itself as a center source on a (by default private, single-tenant)
+  engine and each ``query()`` is an enqueue + step -- one fused
+  ``query_assignments_batched`` dispatch (the Pallas
+  ``distance_argmin_batched`` kernel on TPU). Query batches are padded up
+  to power-of-two buckets capped at ``max_bucket`` (oversized batches are
+  chunked, never compiled at unbounded shapes), so arbitrary traffic
+  shapes hit a bounded set of compiled specializations. Passing a shared
+  ``engine`` (or ``engine.add_tenant(service, ...)`` on an external one)
+  co-batches this stream's queries with other tenants' -- the
+  single-tenant path here is the degenerate T=1 case of the same
+  machinery, kept as the simple migration surface for existing callers
+  (DESIGN.md Sec. 13).
 * **freshness** is staleness-bounded: the service re-solves centers from
   the summary (k-means++ + Lloyd on the weighted coreset, one compile --
   the tree summary is constant-shape) whenever the mass ingested since the
@@ -16,31 +26,57 @@ centers solved from the current summary:
   ``max_stale_points``), checked lazily on each query batch. Between
   refreshes queries are answered from the cached centers at zero solve
   cost, so worst-case extra error is the cost drift of one staleness
-  window.
+  window. Under a shared engine the refresh is *scheduled* by the engine's
+  per-step budget instead of running inline, so one tenant's re-solve
+  never stalls another tenant's queries.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import itertools
+import time
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import backend as backend_mod
 from repro.core import clustering
-from repro.kernels.ops import pad_queries
+from repro.kernels.ops import chunk_queries
 from repro.stream.ingest import StreamState
 
 Array = jax.Array
 
+# distinct default-PRNG tenants: each service constructed without an
+# explicit key/tenant_id folds a fresh instance id into the seed, so two
+# services never replay identical restart draws (the shared-PRNGKey(0)
+# hazard)
+_INSTANCE_IDS = itertools.count()
+
 
 @dataclasses.dataclass
 class ServiceStats:
-    """Serving counters (monitoring surface)."""
+    """Serving counters (monitoring surface).
+
+    ``n_padded_queries`` counts padding rows shipped to fill power-of-two
+    buckets (padding overhead = ``n_padded_queries / (n_queries +
+    n_padded_queries)``); ``refresh_s`` / ``assign_s`` accumulate
+    per-phase wall-clock so refresh stalls and padding cost are measurable
+    per service (surfaced by ``as_dict`` for the benchmarks)."""
 
     n_queries: int = 0
     n_batches: int = 0
     n_refreshes: int = 0
+    n_padded_queries: int = 0
+    refresh_s: float = 0.0
+    assign_s: float = 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        d = dataclasses.asdict(self)
+        total = self.n_queries + self.n_padded_queries
+        d["padded_frac"] = self.n_padded_queries / total if total else 0.0
+        return d
 
 
 class ClusterQueryService:
@@ -49,6 +85,12 @@ class ClusterQueryService:
     ``staleness_frac=0.0`` refreshes on every ingest (always-fresh);
     ``staleness_frac=None`` disables fractional triggering (absolute
     ``max_stale_points`` only, if set).
+
+    Also a valid *center source* for a
+    :class:`~repro.serve.cluster.ClusterServeEngine`
+    (``cached_centers`` / ``is_stale`` / ``staleness`` / ``refresh``):
+    register it on a shared engine to co-batch this stream's queries with
+    other tenants'.
     """
 
     def __init__(self, stream: StreamState, k: int,
@@ -57,7 +99,10 @@ class ClusterQueryService:
                  lloyd_iters: int = 8,
                  restarts: int = 2,
                  backend: backend_mod.BackendLike = None,
-                 key: Optional[Array] = None):
+                 key: Optional[Array] = None,
+                 tenant_id: Optional[int] = None,
+                 max_bucket: int = 4096,
+                 engine=None):
         self.stream = stream
         self.k = k
         self.staleness_frac = staleness_frac
@@ -67,10 +112,19 @@ class ClusterQueryService:
         self.backend = backend_mod.resolve_name(
             backend if backend is not None
             else getattr(stream.config, "backend", None))
-        self._key = jax.random.PRNGKey(0) if key is None else key
+        self.tenant_id = (next(_INSTANCE_IDS) if tenant_id is None
+                          else int(tenant_id))
+        # fold the tenant id into the default seed -- a bare PRNGKey(0)
+        # default would make every service replay identical restart seeds
+        self._key = (jax.random.fold_in(jax.random.PRNGKey(0),
+                                        self.tenant_id)
+                     if key is None else key)
+        self.max_bucket = int(max_bucket)
         self._centers: Optional[Array] = None
         self._weight_at_refresh = 0.0
         self.stats = ServiceStats()
+        self._engine = engine
+        self._engine_tid: Optional[int] = None
 
     # -- freshness policy ----------------------------------------------------
 
@@ -78,7 +132,7 @@ class ClusterQueryService:
         """Mass ingested since the centers were last solved."""
         return self.stream.total_weight() - self._weight_at_refresh
 
-    def _stale(self) -> bool:
+    def is_stale(self) -> bool:
         if self._centers is None:
             return True
         s = self.staleness()
@@ -88,11 +142,20 @@ class ClusterQueryService:
         return (self.staleness_frac is not None
                 and s > self.staleness_frac * max(total, 1.0))
 
+    # center-source surface for ClusterServeEngine
+    _stale = is_stale
+
+    def cached_centers(self) -> Optional[Array]:
+        """Currently cached serving centers (``None`` before first solve);
+        never triggers a refresh."""
+        return self._centers
+
     def refresh(self) -> Array:
         """Force a center re-solve from the current summary. Solves on the
         non-negative part of the signed measure -- optimizing centers
         against negative mass admits spurious minima (see
         ``DistributedStream.aggregate``)."""
+        t0 = time.perf_counter()
         objective = self.stream.config.objective
         cs = self.stream.summary()
         w_solve = jnp.maximum(cs.weights, 0.0)
@@ -103,14 +166,16 @@ class ClusterQueryService:
                                       objective=objective,
                                       restarts=self.restarts,
                                       backend=self.backend)
+        jax.block_until_ready(centers)
         self._centers = centers
         self._weight_at_refresh = self.stream.total_weight()
         self.stats.n_refreshes += 1
+        self.stats.refresh_s += time.perf_counter() - t0
         return centers
 
     def centers(self) -> Array:
         """Current serving centers, refreshing first if stale."""
-        if self._stale():
+        if self.is_stale():
             self.refresh()
         return self._centers
 
@@ -138,35 +203,69 @@ class ClusterQueryService:
                              f"{tuple(q.shape)}")
         return q
 
+    def _serve_engine(self):
+        """The engine this service serves through: a private single-tenant
+        :class:`ClusterServeEngine` unless one was injected, with this
+        service registered as its own center source."""
+        if self._engine is None:
+            from repro.serve.cluster import ClusterServeEngine
+
+            self._engine = ClusterServeEngine(backend=self.backend,
+                                              max_bucket=self.max_bucket)
+        if self._engine_tid is None:
+            self._engine_tid = self._engine.add_tenant(
+                self, k=self.k, d=self.stream.config.d,
+                objective=self.stream.config.objective,
+                tenant_id=self.tenant_id
+                if self.tenant_id not in self._engine.tenant_ids()
+                else None)
+        return self._engine
+
     def query(self, points) -> Tuple[Array, Array]:
         """Batched nearest-center query: (n, d) -> (assign (n,) i32,
         dist (n,) f32; squared for k-means, euclidean for k-median).
-        An empty batch returns empty arrays (and costs no solve/refresh)."""
+        An empty batch returns empty arrays (and costs no solve/refresh).
+
+        Delegates to the serving engine (enqueue + step until this ticket
+        completes): the single-tenant migration path of the multi-tenant
+        serving tier, numerically identical to the old direct
+        ``query_assignments`` call."""
         q = self._as_batch(points)
         if q.shape[0] == 0:
             return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.float32))
-        centers = self.centers()
-        qp, n = pad_queries(q)
-        assign, dist = backend_mod.query_assignments(
-            qp, centers, objective=self.stream.config.objective,
-            backend=self.backend)
-        self.stats.n_queries += n
+        eng = self._serve_engine()
+        ticket = eng.enqueue(self._engine_tid, np.asarray(q))
+        r0 = self.stats.refresh_s
+        t0 = time.perf_counter()
+        while not ticket.done:
+            eng.step()
+        # engine-run refreshes call back into refresh() (which books its
+        # own phase time); attribute the rest of the wall to assignment
+        self.stats.assign_s += (time.perf_counter() - t0) \
+            - (self.stats.refresh_s - r0)
+        self.stats.n_queries += ticket.n
         self.stats.n_batches += 1
-        return assign[:n], dist[:n]
+        self.stats.n_padded_queries += ticket.n_padded
+        return jnp.asarray(ticket.assign), jnp.asarray(ticket.dist)
 
     def query_load(self, points, weights: Optional[Array] = None) -> Array:
         """Per-center (optionally weighted) query-load histogram (k,) for
         one batch -- a single fused ``lloyd_stats`` pass (counts output),
         useful for shard/center load monitoring. Batches are bucket-padded
-        like :meth:`query` (weight-0 padding keeps counts exact); an empty
-        batch is an all-zero histogram."""
+        (and chunked at ``max_bucket``) like :meth:`query` (weight-0
+        padding keeps counts exact); an empty batch is an all-zero
+        histogram."""
         q = self._as_batch(points)
         if q.shape[0] == 0:
             return jnp.zeros((self.k,), jnp.float32)
         w = (jnp.ones((q.shape[0],), jnp.float32) if weights is None
              else jnp.asarray(weights, jnp.float32))
-        qp, n = pad_queries(q)
-        wp = jnp.pad(w, (0, qp.shape[0] - n))
-        _, counts, _ = backend_mod.get_backend(self.backend).lloyd_stats(
-            qp, self.centers(), wp)
-        return counts
+        centers = self.centers()
+        be = backend_mod.get_backend(self.backend)
+        total = jnp.zeros((self.k,), jnp.float32)
+        for qp, n, off in chunk_queries(q, max_bucket=self.max_bucket):
+            wp = jnp.zeros((qp.shape[0],), jnp.float32)
+            wp = wp.at[:n].set(w[off:off + n])
+            _, counts, _ = be.lloyd_stats(qp, centers, wp)
+            total = total + counts
+        return total

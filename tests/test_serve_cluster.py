@@ -1,0 +1,314 @@
+"""Multi-tenant serving tests: the stacked-center batched assignment
+primitive (oracle + bit-parity vs a per-tenant serial loop on all three
+backends), the ClusterServeEngine's continuous batching (ragged tenants,
+empty tenants, bounded compiled specializations, budgeted refresh
+scheduling), and the single-tenant service delegation."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backend as backend_mod
+from repro.kernels import ops, ref
+from repro.serve import ClusterServeEngine, StaticCenters
+from repro.stream import ClusterQueryService, StreamState, TreeConfig
+
+BACKENDS = ("jnp", "jnp_chunked", "pallas")
+
+# (T, m, k, d): tenant count, queries/tenant, max centers, dim
+SHAPES = [
+    (1, 8, 4, 3),       # degenerate single tenant
+    (5, 12, 8, 16),     # small multi-tenant
+    (9, 33, 17, 7),     # ragged everywhere
+]
+
+# same tree shape as tests/test_stream.py -- shares the solve jit cache
+SCFG = TreeConfig(k=4, t=60, d=6, batch_size=200, levels=12)
+
+
+def _tenants(T, m, k, d, seed=0):
+    """Random stacked queries/centers with ragged live center counts,
+    sentinel-filled beyond each tenant's k_real (the masking contract)."""
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((T, m, d)).astype(np.float32)
+    c = rng.standard_normal((T, k, d)).astype(np.float32)
+    k_real = rng.integers(1, k + 1, size=T)
+    mask = np.arange(k)[None, :] < k_real[:, None]
+    c_sent = np.where(mask[..., None], c, ref.CENTER_SENTINEL)
+    return (jnp.asarray(q), jnp.asarray(c), jnp.asarray(c_sent),
+            jnp.asarray(mask), k_real)
+
+
+# -- stacked-center primitive ------------------------------------------------
+
+@pytest.mark.parametrize("T,m,k,d", SHAPES)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batched_matches_oracle(T, m, k, d, backend):
+    q, _, c_sent, _, _ = _tenants(T, m, k, d)
+    md_ref, am_ref = ref.min_dist_argmin_batched_ref(q, c_sent)
+    md, am = backend_mod.get_backend(backend).min_dist_argmin_batched(
+        q, c_sent)
+    assert md.shape == (T, m) and am.shape == (T, m)
+    np.testing.assert_array_equal(np.asarray(am), np.asarray(am_ref))
+    np.testing.assert_allclose(np.asarray(md), np.asarray(md_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("T,m,k,d", SHAPES)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batched_parity_vs_serial_loop(T, m, k, d, backend):
+    """The acceptance contract: one stacked dispatch must reproduce a
+    per-tenant serial loop over the same stacked buffers -- bit-exact on
+    the jnp backends (vmap lowers each tenant slice to the identical
+    arithmetic), <= 1e-6 on pallas (its padded-k tiling differs)."""
+    q, _, c_sent, _, _ = _tenants(T, m, k, d, seed=1)
+    be = backend_mod.get_backend(backend)
+    md_b, am_b = be.min_dist_argmin_batched(q, c_sent)
+    for t in range(T):
+        md_s, am_s = be.min_dist_argmin(q[t], c_sent[t])
+        if backend == "pallas":
+            np.testing.assert_allclose(np.asarray(md_b[t]),
+                                       np.asarray(md_s),
+                                       rtol=1e-6, atol=1e-6)
+            np.testing.assert_array_equal(np.asarray(am_b[t]),
+                                          np.asarray(am_s))
+        else:
+            np.testing.assert_array_equal(np.asarray(md_b[t]),
+                                          np.asarray(md_s))
+            np.testing.assert_array_equal(np.asarray(am_b[t]),
+                                          np.asarray(am_s))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batched_mask_matches_real_ragged_centers(backend):
+    """query_assignments_batched with a live-row mask must agree with
+    serial per-tenant queries against each tenant's REAL (sliced, ragged)
+    center set: identical assignments, distances to ~f32 (different XLA
+    shape lowerings may differ in the last bit)."""
+    T, m, k, d = 6, 16, 9, 5
+    q, c, _, mask, k_real = _tenants(T, m, k, d, seed=2)
+    a, dist = backend_mod.query_assignments_batched(q, c, mask,
+                                                    backend=backend)
+    for t in range(T):
+        a_s, d_s = backend_mod.query_assignments(
+            q[t], c[t, :int(k_real[t])], backend=backend)
+        np.testing.assert_array_equal(np.asarray(a[t]), np.asarray(a_s))
+        np.testing.assert_allclose(np.asarray(dist[t]), np.asarray(d_s),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_batched_chunked_backend_actually_chunks():
+    """A chunk smaller than T*m forces the lax.map tenant-block path; the
+    padded tenant blocks (sentinel centers) must not leak into results."""
+    T, m, k, d = 7, 12, 5, 9
+    q, _, c_sent, _, _ = _tenants(T, m, k, d, seed=3)
+    tiny = backend_mod.JnpChunkedBackend(chunk=16, name="_test_tiny_chunk")
+    md, am = tiny.min_dist_argmin_batched(q, c_sent)
+    md_ref, am_ref = ref.min_dist_argmin_batched_ref(q, c_sent)
+    np.testing.assert_array_equal(np.asarray(am), np.asarray(am_ref))
+    # the blocked lax.map lowering may differ from the serial loop in the
+    # last f32 bit; bit-exactness is contractual only for the vmap path
+    np.testing.assert_allclose(np.asarray(md), np.asarray(md_ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_kmedian_objective_reports_euclidean():
+    T, m, k, d = 3, 8, 4, 6
+    q, c, _, mask, _ = _tenants(T, m, k, d, seed=4)
+    _, d_km = backend_mod.query_assignments_batched(q, c, mask,
+                                                    objective="kmeans")
+    _, d_md = backend_mod.query_assignments_batched(q, c, mask,
+                                                    objective="kmedian")
+    np.testing.assert_allclose(np.asarray(d_md),
+                               np.sqrt(np.asarray(d_km)), rtol=1e-6)
+
+
+# -- pad_queries cap / chunking (satellite) ---------------------------------
+
+def test_pad_queries_max_bucket_caps_and_raises():
+    pts = jnp.zeros((100, 4), jnp.float32)
+    padded, n = ops.pad_queries(pts, max_bucket=128)
+    assert padded.shape[0] == 128 and n == 100
+    with pytest.raises(ValueError, match="chunk_queries"):
+        ops.pad_queries(pts, max_bucket=64)
+    with pytest.raises(ValueError, match="max_bucket"):
+        ops.query_bucket(10, min_bucket=8, max_bucket=4)
+
+
+def test_chunk_queries_covers_exactly_with_bounded_shapes():
+    rng = np.random.default_rng(0)
+    for n in [0, 1, 7, 8, 64, 65, 200, 1000]:
+        pts = jnp.asarray(rng.standard_normal((n, 3)).astype(np.float32))
+        chunks = ops.chunk_queries(pts, min_bucket=8, max_bucket=64)
+        # exact coverage, in order, no overlap
+        assert [c[2] for c in chunks] == \
+            [sum(c[1] for c in chunks[:i]) for i in range(len(chunks))]
+        assert sum(c[1] for c in chunks) == n
+        for padded, nc, off in chunks:
+            assert padded.shape[0] in (8, 16, 32, 64)
+            assert nc <= padded.shape[0] <= 64
+            np.testing.assert_array_equal(np.asarray(padded[:nc]),
+                                          np.asarray(pts[off:off + nc]))
+
+
+def test_compiled_shape_set_bounded_under_adversarial_sweep():
+    """Regression for unbounded bucket growth: an adversarial sweep of
+    batch sizes (every size 1..70 plus oversized bursts) must keep the
+    engine's compiled-specialization set within the bounded bucket set."""
+    rng = np.random.default_rng(5)
+    eng = ClusterServeEngine(backend="jnp", min_bucket=8, max_bucket=64)
+    c = rng.standard_normal((4, 8)).astype(np.float32)
+    tid = eng.add_tenant(StaticCenters(c), k=4, d=8)
+    for n in list(range(1, 71)) + [500, 1337]:
+        eng.enqueue(tid, rng.standard_normal((n, 8)).astype(np.float32))
+        eng.run()
+    buckets = {s[1] for s in eng.compiled_shapes}
+    assert buckets <= {8, 16, 32, 64}
+    # specializations live on a pow2 grid in both the query bucket and the
+    # stacked-tenant axis (multi-chunk bursts stack same-tenant chunks)
+    assert all((s[0] & (s[0] - 1)) == 0 for s in eng.compiled_shapes)
+    n_buckets = int(math.log2(64 / 8)) + 1
+    assert len(eng.compiled_shapes) <= 2 * n_buckets
+
+
+# -- ClusterServeEngine ------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_engine_multi_tenant_parity(backend):
+    """Fused multi-tenant serving == per-tenant serial query_assignments
+    across a ragged k/d mix, including empty query batches and idle
+    tenants."""
+    rng = np.random.default_rng(7)
+    eng = ClusterServeEngine(backend=backend, max_bucket=32, max_group=4)
+    work = []
+    for t in range(9):
+        k = int(rng.integers(1, 9))
+        d = int(rng.choice([4, 6, 8]))
+        c = rng.standard_normal((k, d)).astype(np.float32)
+        tid = eng.add_tenant(StaticCenters(c), k=k, d=d)
+        n = [0, 1, 5, 40][t % 4]        # incl. empty batches
+        q = rng.standard_normal((n, d)).astype(np.float32)
+        work.append((eng.enqueue(tid, q), q, c))
+    eng.add_tenant(StaticCenters(np.zeros((2, 4), np.float32)), k=2, d=4)
+    served = eng.run()
+    assert served == sum(q.shape[0] for _, q, _ in work)
+    for ticket, q, c in work:
+        assert ticket.done
+        if q.shape[0] == 0:
+            assert ticket.assign.shape == (0,)
+            continue
+        a_s, d_s = backend_mod.query_assignments(jnp.asarray(q),
+                                                 jnp.asarray(c),
+                                                 backend=backend)
+        np.testing.assert_array_equal(ticket.assign, np.asarray(a_s))
+        np.testing.assert_allclose(ticket.dist, np.asarray(d_s),
+                                   rtol=1e-5, atol=1e-6)
+    # fused: fewer device dispatches than tenant-chunks served
+    assert eng.stats.n_dispatches < eng.stats.n_tenant_dispatches
+
+
+def test_engine_empty_step_is_noop():
+    eng = ClusterServeEngine(backend="jnp")
+    eng.add_tenant(StaticCenters(np.zeros((3, 4), np.float32)), k=3, d=4)
+    before = eng.stats.as_dict()
+    assert eng.step() == 0
+    assert eng.run() == 0
+    assert eng.stats.as_dict() == before
+    assert eng.compiled_shapes == set()
+
+
+def test_engine_validation_errors():
+    eng = ClusterServeEngine(backend="jnp")
+    with pytest.raises(TypeError, match="center source"):
+        eng.add_tenant(object(), k=3, d=4)
+    tid = eng.add_tenant(StaticCenters(np.zeros((3, 4), np.float32)),
+                         k=3, d=4)
+    with pytest.raises(ValueError, match="already registered"):
+        eng.add_tenant(StaticCenters(np.zeros((3, 4), np.float32)),
+                       k=3, d=4, tenant_id=tid)
+    with pytest.raises(ValueError, match="k >= 1"):
+        eng.add_tenant(StaticCenters(np.zeros((1, 4), np.float32)),
+                       k=0, d=4)
+    with pytest.raises(KeyError, match="unknown tenant"):
+        eng.enqueue(tid + 999, np.zeros((2, 4), np.float32))
+    with pytest.raises(ValueError, match="query points"):
+        eng.enqueue(tid, np.zeros((2, 5), np.float32))
+    with pytest.raises(ValueError, match="max_bucket"):
+        ClusterServeEngine(backend="jnp", min_bucket=64, max_bucket=8)
+
+
+def _stream_service(seed, **kw):
+    from repro.data.synthetic import drifting_mixture_stream
+    stream = StreamState(SCFG, key=jax.random.PRNGKey(seed))
+    batch = list(drifting_mixture_stream(1, SCFG.batch_size, d=SCFG.d, k=4,
+                                         seed=seed))[0]
+    stream.push(batch)
+    return ClusterQueryService(stream, k=4, backend="jnp", **kw)
+
+
+def test_engine_refresh_budget_amortizes_across_tenants():
+    """With refresh_budget=1, one step re-solves at most one tenant; a
+    never-solved tenant's queries wait for a later step (deferred, not
+    dropped), while an already-solved stale tenant keeps serving its
+    cached (stale) centers instead of blocking on its own re-solve."""
+    eng = ClusterServeEngine(backend="jnp", refresh_budget=1)
+    s1 = _stream_service(1, staleness_frac=0.0, tenant_id=101, engine=eng)
+    s2 = _stream_service(2, staleness_frac=0.0, tenant_id=102, engine=eng)
+    t1 = eng.add_tenant(s1, k=4, d=SCFG.d, tenant_id=101)
+    t2 = eng.add_tenant(s2, k=4, d=SCFG.d, tenant_id=102)
+    q = np.zeros((5, SCFG.d), np.float32)
+    k1, k2 = eng.enqueue(t1, q), eng.enqueue(t2, q)
+    served = eng.step()
+    # one refresh ran, the other tenant (never solved) was deferred whole
+    assert eng.stats.n_refreshes == 1
+    assert eng.stats.n_deferred_refreshes == 1
+    assert served == 5 and k1.done != k2.done
+    served = eng.step()
+    assert served == 5 and k1.done and k2.done
+    assert eng.stats.n_refreshes == 2
+    # both solved now; a stale tenant with cached centers is served
+    # immediately even when its refresh is deferred by the budget
+    s1.push(np.zeros((10, SCFG.d), np.float32))
+    s2.push(np.zeros((10, SCFG.d), np.float32))
+    assert s1.is_stale() and s2.is_stale()
+    k1, k2 = eng.enqueue(t1, q), eng.enqueue(t2, q)
+    served = eng.step()
+    assert served == 10 and k1.done and k2.done
+    assert eng.stats.n_refreshes == 3
+    assert eng.stats.n_deferred_refreshes == 2
+
+
+def test_service_delegation_matches_direct_and_counts_padding():
+    svc = _stream_service(3, staleness_frac=None)
+    rng = np.random.default_rng(9)
+    q = rng.standard_normal((73, SCFG.d)).astype(np.float32)
+    assign, dist = svc.query(q)
+    a_s, d_s = backend_mod.query_assignments(jnp.asarray(q), svc.centers(),
+                                             backend="jnp")
+    np.testing.assert_array_equal(np.asarray(assign), np.asarray(a_s))
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(d_s),
+                               rtol=1e-5, atol=1e-6)
+    st = svc.stats.as_dict()
+    assert st["n_queries"] == 73
+    assert st["n_padded_queries"] == 128 - 73    # next bucket
+    assert 0.0 < st["padded_frac"] < 1.0
+    assert st["refresh_s"] > 0.0 and st["assign_s"] > 0.0
+    assert st["n_refreshes"] == 1
+
+
+def test_service_oversized_batch_chunks_instead_of_growing():
+    svc = _stream_service(4, staleness_frac=None, max_bucket=64)
+    rng = np.random.default_rng(11)
+    q = rng.standard_normal((200, SCFG.d)).astype(np.float32)
+    assign, dist = svc.query(q)
+    assert assign.shape == (200,)
+    a_s, _ = backend_mod.query_assignments(jnp.asarray(q), svc.centers(),
+                                           backend="jnp")
+    np.testing.assert_array_equal(np.asarray(assign), np.asarray(a_s))
+    buckets = {s[1] for s in svc._engine.compiled_shapes}
+    assert buckets <= {8, 16, 32, 64}
+    # query_load chunks the same way and keeps counts exact
+    load = np.asarray(svc.query_load(q))
+    np.testing.assert_allclose(load.sum(), 200.0, rtol=1e-5)

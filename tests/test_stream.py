@@ -338,6 +338,34 @@ def test_service_empty_and_single_query_batches(backend):
     np.testing.assert_allclose(load.sum(), 6.0, rtol=1e-6)
 
 
+def test_service_default_seeds_decorrelated():
+    """Two services built without explicit keys must not share a PRNG
+    stream (the old shared-PRNGKey(0) default made every service replay
+    identical restart draws): per-instance keys fold in the tenant id, so
+    the k-means++ restart sequences decorrelate."""
+    s1 = StreamState(CFG)
+    s2 = StreamState(CFG)
+    batch = _stream(1, seed=29)[0]
+    s1.push(batch)
+    s2.push(batch)
+    svc1 = ClusterQueryService(s1, k=4, staleness_frac=None, backend="jnp")
+    svc2 = ClusterQueryService(s2, k=4, staleness_frac=None, backend="jnp")
+    assert svc1.tenant_id != svc2.tenant_id
+    assert not np.array_equal(np.asarray(svc1._key), np.asarray(svc2._key))
+    # the restart seeds drawn at refresh time differ too
+    k1 = jax.random.split(svc1._key)[1]
+    k2 = jax.random.split(svc2._key)[1]
+    assert not np.array_equal(np.asarray(k1), np.asarray(k2))
+    # explicit tenant ids pin the stream deterministically
+    svc3 = ClusterQueryService(s1, k=4, tenant_id=svc1.tenant_id)
+    np.testing.assert_array_equal(np.asarray(svc1._key),
+                                  np.asarray(svc3._key))
+    # an explicit key still wins over the derived default
+    svc4 = ClusterQueryService(s1, k=4, key=jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(np.asarray(svc4._key),
+                                  np.asarray(jax.random.PRNGKey(7)))
+
+
 @pytest.mark.parametrize("backend", ["jnp_chunked", "pallas"])
 def test_service_backend_parity(backend):
     """Query assignments agree across backends (pallas runs in interpret
