@@ -14,9 +14,9 @@ import sys
 import time
 
 from benchmarks import (bench_comm_scaling, bench_coreset_size,
-                        bench_fig2_graphs, bench_fig3_trees, bench_kernels,
-                        bench_roofline, bench_serve, bench_stream,
-                        bench_topologies)
+                        bench_faults, bench_fig2_graphs, bench_fig3_trees,
+                        bench_kernels, bench_roofline, bench_serve,
+                        bench_stream, bench_topologies)
 from benchmarks.common import write_json_rows
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -28,7 +28,7 @@ def main(argv=None) -> None:
                     help="paper-scale datasets and run counts")
     ap.add_argument("--only", default="",
                     help="comma-separated subset: fig2,fig3,comm,size,"
-                         "kernels,roofline,serve,stream,topologies")
+                         "kernels,roofline,serve,stream,topologies,faults")
     args = ap.parse_args(argv)
     scale = 1.0 if args.full else 0.05
     n_runs = 5 if args.full else 2
@@ -67,6 +67,13 @@ def main(argv=None) -> None:
         rows.extend(topo_rows)
         out_json = os.path.join(_REPO_ROOT, "BENCH_topologies.json")
         write_json_rows(out_json, topo_rows)
+        print(f"# wrote {out_json}", file=sys.stderr)
+    if only is None or "faults" in only:
+        fault_rows: list = []
+        bench_faults.run(scale=scale, n_runs=n_runs, out_rows=fault_rows)
+        rows.extend(fault_rows)
+        out_json = os.path.join(_REPO_ROOT, "BENCH_faults.json")
+        write_json_rows(out_json, fault_rows)
         print(f"# wrote {out_json}", file=sys.stderr)
     if only is None or "roofline" in only:
         bench_roofline.run(out_rows=rows)

@@ -39,13 +39,22 @@ class CommLedger:
     ``link_cost`` is the cost-weighted byte total over heterogeneous links
     (equals ``bytes`` on uniform unit costs); unlike ``bytes`` it is
     accumulated at pricing time, per transmission, because the per-edge
-    cost is not recoverable from the unit totals."""
+    cost is not recoverable from the unit totals.
+
+    ``staleness`` is the asynchronous-runtime axis (DESIGN.md Sec. 14):
+    mean rounds-behind of the nodes relative to the synchronous lossless
+    engine on the same graph. A synchronous/analytic ledger is 0.0 by
+    definition; the WAN runtime's measured ledgers fill it in. Unlike the
+    traffic axes it is a *lag*, not a volume, so :meth:`add` combines it
+    by max (the staleness of a multi-phase protocol is its worst phase),
+    which keeps every existing volume identity untouched."""
 
     scalars: float = 0.0          # single float values (local costs)
     points: float = 0.0           # weighted d-dim points
     messages: float = 0.0         # individual edge transmissions
     dim: int = 0                  # point dimensionality (for bytes)
     link_cost: float = 0.0        # cost-weighted bytes (heterogeneous links)
+    staleness: float = 0.0        # mean rounds-behind vs the sync engine
     phases: Dict[str, "CommLedger"] = dataclasses.field(default_factory=dict)
 
     def add(self, other: "CommLedger") -> "CommLedger":
@@ -59,6 +68,7 @@ class CommLedger:
             messages=self.messages + other.messages,
             dim=max(self.dim, other.dim),
             link_cost=self.link_cost + other.link_cost,
+            staleness=max(self.staleness, other.staleness),
             phases=phases,
         )
 
@@ -68,7 +78,8 @@ class CommLedger:
         stays one level deep)."""
         totals = CommLedger(scalars=self.scalars, points=self.points,
                             messages=self.messages, dim=self.dim,
-                            link_cost=self.link_cost)
+                            link_cost=self.link_cost,
+                            staleness=self.staleness)
         return dataclasses.replace(totals, phases={phase: totals})
 
     @property
@@ -82,6 +93,7 @@ class CommLedger:
             "messages": self.messages,
             "bytes": self.bytes,
             "link_cost": self.link_cost,
+            "staleness": self.staleness,
         }
         if by_phase:
             out["phases"] = {name: sub.as_dict()

@@ -47,6 +47,7 @@ from repro.core.coreset import (Coreset, DistributedCoreset,
                                 sensitivities, _sample_and_weight)
 from repro.core.message_passing import (ExecResult, GossipSchedule,
                                         TreeSchedule, flood_exec,
+                                        gossip_schedule,
                                         neighbor_rounds_gather, pack_payload,
                                         tree_broadcast_exec, tree_gather_exec,
                                         tree_scatter_exec, unpack_payload)
@@ -111,6 +112,10 @@ def graph_distributed_kmeans(
     engine: str = "sim",
     routing: str = "flood",
     root: int = 0,
+    faults=None,
+    wan_mode: Optional[str] = None,
+    wan_seed: int = 0,
+    wan_p: float = 0.5,
 ) -> ClusteringResult:
     """Algorithm 2 on a general graph. With the default ``routing="flood"``
     Round 1 floods n scalars (2mn messages) and Round 2 floods the n local
@@ -126,7 +131,32 @@ def graph_distributed_kmeans(
     analytic Theorem-2 ledger (the oracle). ``engine="exec"`` executes them
     on a compiled :class:`GossipSchedule` -- same local stages, same keys,
     so the result is bit-identical, but the scalars and portions physically
-    move edge by edge and the ledger is measured from the schedule."""
+    move edge by edge and the ledger is measured from the schedule.
+
+    ``engine="async"`` routes both rounds through the WAN runtime
+    (:mod:`repro.wan.runtime`): asynchronous activation (``wan_mode``:
+    ``"clock"`` default, or ``"random"``/``"full"``; ``wan_seed`` /
+    ``wan_p`` parameterize it) and an optional ``faults=``
+    :class:`~repro.wan.faults.FaultPlan`. Passing ``faults`` with
+    ``engine="exec"`` runs the synchronous schedule under the fault plan
+    (WAN mode ``"full"``). Either way the allocation and coreset are
+    restricted to surviving sites and the returned centers are
+    bit-identical to the sim oracle restricted to the survivors
+    (:func:`repro.wan.runtime.restricted_sim_coreset`); the measured
+    ledger carries the ``staleness`` axis. Flood routing only."""
+    if faults is not None or engine == "async":
+        if routing != "flood":
+            raise ValueError(f"faulty/async runs support routing='flood' "
+                             f"only, got {routing!r}")
+        if engine not in ("exec", "async"):
+            raise ValueError(f"faults require engine='exec'|'async', got "
+                             f"{engine!r} (the fault-free sim oracle is "
+                             f"repro.wan.runtime.restricted_sim_coreset)")
+        mode = wan_mode if wan_mode is not None else (
+            "full" if engine == "exec" else "clock")
+        return _graph_async(key, site_points, site_mask, k, t, graph,
+                            objective, lloyd_iters, backend, mode=mode,
+                            faults=faults, seed=wan_seed, p=wan_p)
     if routing in ("bfs", "min_cost"):
         tree = spanning_tree(graph, root=root, routing=routing)
         return distributed_kmeans_tree(key, site_points, site_mask, k, t,
@@ -229,7 +259,7 @@ def _graph_exec(key, site_points, site_mask, k, t, graph, objective,
     if graph.n != n_sites:
         raise ValueError(f"graph has {graph.n} nodes for {n_sites} sites")
     backend = backend_mod.resolve_name(backend)
-    sched = GossipSchedule.from_graph(graph)
+    sched = gossip_schedule(graph)
     k1, k2 = jax.random.split(key)
     detail, local_costs = exec_algorithm1_rounds(
         sched, k1, site_points, site_mask.astype(site_points.dtype), k, t,
@@ -237,6 +267,39 @@ def _graph_exec(key, site_points, site_mask, k, t, graph, objective,
         clip_negative=False, backend=backend)
 
     # every node holds the identical instance; solve it once (node 0's copy)
+    cs = Coreset(detail.node_points[0], detail.node_weights[0])
+    centers = _solve_on_coreset(k2, cs, k, objective, lloyd_iters, backend)
+    ledger = detail.rounds["round1"].ledger.tag("round1").add(
+        detail.rounds["round2"].ledger.tag("round2"))
+    return ClusteringResult(centers, cs, ledger, local_costs,
+                            exec_detail=detail)
+
+
+def _graph_async(key, site_points, site_mask, k, t, graph, objective,
+                 lloyd_iters, backend, mode, faults, seed,
+                 p) -> ClusteringResult:
+    """Execute Algorithm 2's communication on the asynchronous WAN runtime
+    (imported lazily -- :mod:`repro.wan` layers on this module).
+
+    Every *surviving* node assembles the bit-identical survivor-restricted
+    coreset; the solve uses the first survivor's copy with the same final
+    key split as every other engine, so on a trivial fault plan the
+    centers equal the synchronous paths' bit-for-bit, and under faults
+    they equal the restricted sim oracle's. ``exec_detail`` holds the
+    :class:`repro.wan.runtime.AsyncDetail` (survivor-indexed)."""
+    from repro.wan.runtime import async_algorithm1_rounds
+
+    n_sites, _, d = site_points.shape
+    if graph.n != n_sites:
+        raise ValueError(f"graph has {graph.n} nodes for {n_sites} sites")
+    backend = backend_mod.resolve_name(backend)
+    k1, k2 = jax.random.split(key)
+    detail, local_costs = async_algorithm1_rounds(
+        graph, k1, site_points, site_mask.astype(site_points.dtype), k, t,
+        t_buffer=t, objective=objective, lloyd_iters=lloyd_iters,
+        clip_negative=False, backend=backend, mode=mode, faults=faults,
+        seed=seed, p=p)
+
     cs = Coreset(detail.node_points[0], detail.node_weights[0])
     centers = _solve_on_coreset(k2, cs, k, objective, lloyd_iters, backend)
     ledger = detail.rounds["round1"].ledger.tag("round1").add(

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Dict, List, Sequence, Tuple, Union
 
 import jax
@@ -118,12 +119,19 @@ class ExecResult:
     extra round so the final fresh messages are forwarded, which is what
     makes the measured transmission count equal the analytic 2mn).
     ``ledger`` is *measured*: every scalar/point/message was counted from an
-    actual executed transmission, never from a formula."""
+    actual executed transmission, never from a formula.
+
+    ``wall_s`` is the host wall-clock time the primitive spent (schedule
+    execution + ledger pricing, excluding schedule compilation, which is
+    cached per graph). It feeds the per-phase timing columns of
+    ``bench_topologies`` -- an observability column, deliberately excluded
+    from every ledger-parity identity."""
 
     rounds: int
     rounds_to_complete: int
     ledger: CommLedger
     per_round_transmissions: List[int]
+    wall_s: float = 0.0
 
 
 def pack_payload(points: jax.Array, weights: jax.Array) -> jax.Array:
@@ -222,6 +230,16 @@ class GossipSchedule:
                    in_neighbors=in_nb, in_neighbor_mask=in_mask)
 
 
+@functools.lru_cache(maxsize=128)
+def gossip_schedule(g: Graph) -> GossipSchedule:
+    """Cached :meth:`GossipSchedule.from_graph`: ``Graph`` is a frozen
+    (hashable) dataclass, so identical graphs -- including directed and
+    cost-annotated WAN ones -- compile their padded-neighbor tables once
+    per process. Streaming aggregation and the WAN runtime call this every
+    round; the returned schedule is shared, treat it as read-only."""
+    return GossipSchedule.from_graph(g)
+
+
 @functools.partial(jax.jit, static_argnames=("n_rounds",))
 def _flood_exec_rounds(in_neighbors, in_neighbor_mask, out_degrees, payload,
                        n_rounds):
@@ -281,11 +299,12 @@ def flood_exec(schedule: Union[GossipSchedule, Graph], payload: jax.Array,
     ``flood_cost(g, n_messages=n, ...)`` exactly.
     """
     if isinstance(schedule, Graph):
-        schedule = GossipSchedule.from_graph(schedule)
+        schedule = gossip_schedule(schedule)
     payload = jnp.asarray(payload)
     if payload.shape[0] != schedule.n:
         raise ValueError(f"payload must be origin-indexed: got leading dim "
                          f"{payload.shape[0]} for a {schedule.n}-node graph")
+    t0 = time.perf_counter()
     trailing = payload.shape[1:]
     flat = payload.reshape(schedule.n, -1)
     table, known, sends, fwd, complete = _flood_exec_rounds(
@@ -314,7 +333,8 @@ def flood_exec(schedule: Union[GossipSchedule, Graph], payload: jax.Array,
     res = ExecResult(rounds=schedule.n_rounds, rounds_to_complete=done,
                      ledger=ledger,
                      per_round_transmissions=[int(s) for s in
-                                              np.asarray(sends)])
+                                              np.asarray(sends)],
+                     wall_s=time.perf_counter() - t0)
     return table.reshape((schedule.n, schedule.n) + trailing), res
 
 
@@ -370,6 +390,14 @@ class TreeSchedule:
         return cls.from_tree(spanning_tree(g, root=root, routing=routing))
 
 
+@functools.lru_cache(maxsize=128)
+def tree_schedule(g: Graph, root: int = 0,
+                  routing: str = "bfs") -> TreeSchedule:
+    """Cached :meth:`TreeSchedule.from_graph` (same contract as
+    :func:`gossip_schedule`: one compile per (graph, root, routing))."""
+    return TreeSchedule.from_graph(g, root=root, routing=routing)
+
+
 def _path_link_costs(schedule: TreeSchedule,
                      hop_counts: np.ndarray) -> np.ndarray:
     """Measured per-origin link-cost totals for a gather/scatter: origin o
@@ -422,6 +450,7 @@ def tree_gather_exec(schedule: TreeSchedule, payload: jax.Array,
     if payload.shape[0] != schedule.n:
         raise ValueError(f"payload must be origin-indexed: got leading dim "
                          f"{payload.shape[0]} for a {schedule.n}-node tree")
+    t0 = time.perf_counter()
     trailing = payload.shape[1:]
     flat = payload.reshape(schedule.n, -1)
 
@@ -452,7 +481,8 @@ def tree_gather_exec(schedule: TreeSchedule, payload: jax.Array,
                      rounds_to_complete=schedule.height, ledger=ledger,
                      per_round_transmissions=[int(x) for x in
                                               np.asarray(hops.sum(axis=1))]
-                     if schedule.height else [])
+                     if schedule.height else [],
+                     wall_s=time.perf_counter() - t0)
     return table[schedule.root].reshape((schedule.n,) + trailing), res
 
 
@@ -469,6 +499,7 @@ def tree_scatter_exec(schedule: TreeSchedule, root_values: jax.Array,
         raise ValueError(f"root_values must be origin-indexed: got leading "
                          f"dim {root_values.shape[0]} for a {schedule.n}-"
                          f"node tree")
+    t0 = time.perf_counter()
     trailing = root_values.shape[1:]
     flat = root_values.reshape(schedule.n, -1)
     n = schedule.n
@@ -498,7 +529,8 @@ def tree_scatter_exec(schedule: TreeSchedule, root_values: jax.Array,
                      rounds_to_complete=schedule.height, ledger=ledger,
                      per_round_transmissions=[int(x) for x in
                                               np.asarray(hops.sum(axis=1))]
-                     if schedule.height else [])
+                     if schedule.height else [],
+                     wall_s=time.perf_counter() - t0)
     return own.reshape((n,) + trailing), res
 
 
@@ -520,6 +552,7 @@ def tree_up_sum_exec(schedule: TreeSchedule, values: jax.Array,
     if values.shape[0] != schedule.n:
         raise ValueError(f"values must be node-indexed: got leading dim "
                          f"{values.shape[0]} for a {schedule.n}-node tree")
+    t0 = time.perf_counter()
     trailing = values.shape[1:]
     flat = values.reshape(schedule.n, -1)
 
@@ -554,7 +587,8 @@ def tree_up_sum_exec(schedule: TreeSchedule, values: jax.Array,
                            per_origin_link=np.asarray([w_sends], np.float64))
     res = ExecResult(rounds=schedule.height * (2 if broadcast else 1),
                      rounds_to_complete=schedule.height, ledger=ledger,
-                     per_round_transmissions=per_round)
+                     per_round_transmissions=per_round,
+                     wall_s=time.perf_counter() - t0)
     return out.reshape((schedule.n,) + trailing), res
 
 
@@ -565,6 +599,7 @@ def tree_broadcast_exec(schedule: TreeSchedule, value: jax.Array,
     transmissions). Returns every node's (bit-identical) copy ``(n, ...)``
     and the measured ledger (equals ``tree_broadcast_cost``)."""
     value = jnp.asarray(value)
+    t0 = time.perf_counter()
     flat = value.reshape(-1)
     vals0 = jnp.zeros((schedule.n, flat.shape[0]), flat.dtype).at[
         schedule.root].set(flat)
@@ -586,7 +621,8 @@ def tree_broadcast_exec(schedule: TreeSchedule, value: jax.Array,
                      rounds_to_complete=schedule.height, ledger=ledger,
                      per_round_transmissions=[int(x) for x in
                                               np.asarray(sends)]
-                     if schedule.height else [])
+                     if schedule.height else [],
+                     wall_s=time.perf_counter() - t0)
     return vals.reshape((schedule.n,) + value.shape), res
 
 

@@ -153,6 +153,20 @@ class Graph:
         """Cost of the (directed) link i -> j; KeyError if absent."""
         return self._cost_map[(i, j)]
 
+    @functools.cached_property
+    def _distances(self) -> np.ndarray:
+        d = all_pairs_distances(self)
+        d.setflags(write=False)
+        return d
+
+    def distances(self) -> np.ndarray:
+        """(n, n) hop-count matrix ``dist[s, v]`` (directed distances on a
+        directed graph; -1 for unreachable pairs); cached, read-only. This
+        is the synchronous-flood timetable: origin ``s``'s payload reaches
+        node ``v`` in exactly ``dist[s, v]`` lossless rounds, which is the
+        baseline the WAN runtime's staleness axis is metered against."""
+        return self._distances
+
 
 def _components(n: int, edges) -> List[List[int]]:
     parent = list(range(n))
@@ -461,14 +475,15 @@ def spanning_tree(g: Graph, root: int = 0,
                      f"'bfs'|'min_cost'")
 
 
-def diameter(g: Graph) -> int:
-    """Exact diameter by n BFS passes (n is small in all experiments).
-    Directed graphs use directed distances and must be strongly
-    connected."""
+def all_pairs_distances(g: Graph) -> np.ndarray:
+    """(n, n) hop-count matrix by n BFS passes (n is small in all
+    experiments): ``dist[s, v]`` is the shortest path from s to v along
+    (out-)links, -1 if unreachable. Prefer ``g.distances()`` (the cached
+    accessor) over calling this directly."""
     adj = g.adjacency()
-    best = 0
+    out = np.full((g.n, g.n), -1, np.int64)
     for s in range(g.n):
-        dist = [-1] * g.n
+        dist = out[s]
         dist[s] = 0
         frontier = [s]
         while frontier:
@@ -479,8 +494,62 @@ def diameter(g: Graph) -> int:
                         dist[u] = dist[v] + 1
                         nxt.append(u)
             frontier = nxt
-        if min(dist) < 0:
-            raise ValueError("graph is not connected" if not g.directed
-                             else "directed graph is not strongly connected")
-        best = max(best, max(dist))
-    return best
+    return out
+
+
+def diameter(g: Graph) -> int:
+    """Exact diameter from the cached distance matrix. Directed graphs use
+    directed distances and must be strongly connected."""
+    dist = g.distances()
+    if dist.min() < 0:
+        raise ValueError("graph is not connected" if not g.directed
+                         else "directed graph is not strongly connected")
+    return int(dist.max())
+
+
+def drop_edges(g: Graph, dropped) -> Graph:
+    """A copy of ``g`` with ``dropped`` edges removed (same node set).
+
+    ``dropped`` is an iterable of endpoint pairs; undirected pairs may be
+    given in either orientation. Unknown edges raise -- a fault plan that
+    names a non-existent link is a bug, not a no-op. This is the
+    *surviving graph* constructor of the WAN fault model (DESIGN.md
+    Sec. 14); note the result may be disconnected, which ``diameter()`` /
+    the quiescence checker will surface."""
+    norm = set()
+    for i, j in dropped:
+        e = (int(i), int(j))
+        if not g.directed:
+            e = (min(e), max(e))
+        if e not in g._cost_map and e not in set(g.edges):
+            raise ValueError(f"cannot drop {tuple((int(i), int(j)))}: not an "
+                             f"edge of the graph")
+        norm.add(e)
+    keep = [(e, c) for e, c in zip(g.edges, g.costs) if e not in norm]
+    return Graph(g.n, tuple(e for e, _ in keep),
+                 edge_costs=(None if g.edge_costs is None
+                             else tuple(c for _, c in keep)),
+                 directed=g.directed)
+
+
+def induced_subgraph(g: Graph, keep_nodes) -> Tuple[Graph, np.ndarray]:
+    """Subgraph induced on ``keep_nodes`` with compact relabeling.
+
+    Returns ``(sub, index)`` where ``index`` lists the kept original node
+    ids in ascending order and ``sub``'s node ``r`` is original node
+    ``index[r]``. Edges touching a removed node are dropped (their costs
+    ride along). Used to reason about the surviving topology once churned
+    nodes are declared permanently dead."""
+    index = np.asarray(sorted({int(v) for v in keep_nodes}), np.int64)
+    if index.size == 0:
+        raise ValueError("induced_subgraph needs at least one kept node")
+    if index[0] < 0 or index[-1] >= g.n:
+        raise ValueError(f"keep_nodes out of range for n={g.n}")
+    relabel = {int(v): r for r, v in enumerate(index)}
+    keep = [((relabel[i], relabel[j]), c)
+            for (i, j), c in zip(g.edges, g.costs)
+            if i in relabel and j in relabel]
+    return Graph(len(index), tuple(e for e, _ in keep),
+                 edge_costs=(None if g.edge_costs is None
+                             else tuple(c for _, c in keep)),
+                 directed=g.directed), index

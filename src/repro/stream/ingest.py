@@ -42,8 +42,8 @@ from repro.core.coreset import Coreset, distributed_coreset
 from repro.core.distributed import (exec_algorithm1_rounds,
                                     exec_algorithm1_tree_rounds)
 from repro.core.message_passing import (GossipSchedule, TreeSchedule,
-                                        flood_exec, pack_payload,
-                                        tree_broadcast_exec,
+                                        flood_exec, gossip_schedule,
+                                        pack_payload, tree_broadcast_exec,
                                         tree_gather_exec, unpack_payload)
 from repro.core.topology import Graph, SpanningTree, spanning_tree
 from repro.stream.tree import CoresetTree, TreeConfig
@@ -170,7 +170,10 @@ class DistributedStream:
                   clip_negative: bool = False,
                   mode: str = "auto", restarts: int = 3,
                   engine: str = "sim", transport: str = "flood",
-                  routing: str = "bfs", root: int = 0) -> AggregateResult:
+                  routing: str = "bfs", root: int = 0,
+                  faults=None, wan_mode: Optional[str] = None,
+                  wan_seed: Optional[int] = None,
+                  wan_p: float = 0.5) -> AggregateResult:
         """Run one aggregation round over the current per-site summaries.
 
         Every node's tree summary (fixed ``levels * slot + batch_size``
@@ -210,21 +213,42 @@ class DistributedStream:
         still ends the round holding the identical result, but the ledger
         prices only tree edges -- on heterogeneous links min-cost routing
         is what keeps the cost-weighted ``link_cost`` small. Both engines
-        support both transports with the same bit-parity contract."""
+        support both transports with the same bit-parity contract.
+
+        ``engine="async"`` (or a ``faults=``
+        :class:`~repro.wan.faults.FaultPlan` with either engine) runs the
+        round's floods on the asynchronous WAN runtime (flood transport
+        only): ``wan_mode`` picks the activation schedule (``"clock"``
+        default for async, ``"full"`` when faults ride on
+        ``engine="exec"``), ``wan_seed`` defaults to the round counter so
+        successive rounds draw fresh schedules, and the round's ledger
+        carries the measured ``staleness`` axis. The round result is the
+        *survivor-restricted* aggregate: every surviving node ends
+        holding the bit-identical coreset over surviving sites."""
         cfg = self.config
         g = self.graph
-        if engine not in ("sim", "exec"):
+        if engine not in ("sim", "exec", "async"):
             raise ValueError(f"unknown engine {engine!r}: expected "
-                             f"'sim'|'exec'")
+                             f"'sim'|'exec'|'async'")
         if transport not in ("flood", "tree"):
             raise ValueError(f"unknown transport {transport!r}: expected "
                              f"'flood'|'tree'")
+        use_wan = engine == "async" or faults is not None
+        if use_wan:
+            if transport != "flood":
+                raise ValueError(f"faulty/async rounds support "
+                                 f"transport='flood' only, got {transport!r}")
+            if engine == "sim":
+                raise ValueError("faults require engine='exec'|'async'")
+            wan_mode = wan_mode if wan_mode is not None else (
+                "full" if engine == "exec" else "clock")
+            wan_seed = self.rounds if wan_seed is None else wan_seed
         tree: Optional[SpanningTree] = None
         tsched: Optional[TreeSchedule] = None
         if transport == "tree":
             tree, tsched = self._tree_schedule(routing, root)
         elif engine == "exec" and self._schedule is None:
-            self._schedule = GossipSchedule.from_graph(g)
+            self._schedule = gossip_schedule(g)   # process-wide cache
         summaries = [s.summary() for s in self.sites]
         sp = jnp.stack([c.points for c in summaries])     # (n, S, d)
         sw = jnp.stack([c.weights for c in summaries])    # (n, S)
@@ -240,7 +264,21 @@ class DistributedStream:
         if mode == "union":
             local_costs = None
             eff = np.asarray(jnp.sum(sw != 0.0, axis=1), np.float64)
-            if transport == "tree" and engine == "exec":
+            if use_wan:
+                from repro.wan.faults import FaultPlan
+                from repro.wan.runtime import wan_flood_exec
+                plan = faults if faults is not None else FaultPlan()
+                payload = pack_payload(sp, sw)
+                tables, rr = wan_flood_exec(g, payload, mode=wan_mode,
+                                            faults=plan, unit_points=eff,
+                                            dim=cfg.d, seed=wan_seed,
+                                            p=wan_p)
+                surv = plan.surviving_nodes(g.n)
+                pts0, w0 = unpack_payload(tables[int(surv[0])][surv])
+                cs = Coreset(points=pts0.reshape(-1, cfg.d),
+                             weights=w0.reshape(-1))
+                round_ledger = rr.ledger
+            elif transport == "tree" and engine == "exec":
                 payload = pack_payload(sp, sw)
                 root_table, gr = tree_gather_exec(tsched, payload,
                                                   unit_points=eff, dim=cfg.d)
@@ -276,7 +314,18 @@ class DistributedStream:
                     link_cost=link_cost_of(np.full(g.n, w_pm),
                                            unit_points=eff, dim=cfg.d))
         elif mode == "resample":
-            if transport == "tree" and engine == "exec":
+            if use_wan:
+                from repro.wan.runtime import async_algorithm1_rounds
+                detail, local_costs = async_algorithm1_rounds(
+                    g, k1, sp, sw.astype(sp.dtype), k, t, t_buffer=t,
+                    objective=cfg.objective, lloyd_iters=lloyd_iters,
+                    clip_negative=clip_negative, backend=cfg.backend,
+                    mode=wan_mode, faults=faults, seed=wan_seed, p=wan_p)
+                cs = Coreset(points=detail.node_points[0],
+                             weights=detail.node_weights[0])
+                round_ledger = detail.rounds["round1"].ledger.add(
+                    detail.rounds["round2"].ledger)
+            elif transport == "tree" and engine == "exec":
                 root_pts, root_w, t_i, _, rounds, local_costs = \
                     exec_algorithm1_tree_rounds(
                         tsched, k1, sp, sw.astype(sp.dtype), k, t,

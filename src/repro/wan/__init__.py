@@ -1,0 +1,32 @@
+"""Asynchronous, failure-prone WAN execution runtime (DESIGN.md Sec. 14).
+
+Layers an asynchronous message-passing runtime over the synchronous
+topology execution engine of :mod:`repro.core.message_passing`:
+
+* :mod:`repro.wan.faults` -- :class:`FaultPlan`, the deterministic,
+  seed-replayable fault model (dropped links, duplicated deliveries, node
+  churn with rejoin) and its surviving-graph algebra.
+* :mod:`repro.wan.schedules` -- per-round activation masks: randomized
+  gossip (seeded random edge subsets) and per-edge clocks (heterogeneous
+  periods derived from ``edge_costs``), composed with the fault masks.
+  Everything is precomputed host-side into dense boolean arrays; the scan
+  body never mutates Python state.
+* :mod:`repro.wan.runtime` -- the jitted send-once relay scan
+  (:func:`wan_flood_exec`), the measured per-round ledgers with the
+  ``staleness`` axis, and the faulty Algorithm-1 rounds
+  (:func:`async_algorithm1_rounds`) plus the restricted sim oracle.
+* :mod:`repro.wan.quiesce` -- quiescence certification: flooding
+  completes within the surviving subgraph's diameter after the churn
+  horizon, duplicated deliveries leave relay tables bit-unchanged, and
+  executed centers under faults equal the oracle's bit-for-bit.
+"""
+from repro.wan.faults import FaultPlan, random_fault_plan
+from repro.wan.runtime import (WanExecResult, async_algorithm1_rounds,
+                               restricted_sim_coreset, wan_flood_exec)
+from repro.wan.quiesce import QuiescenceCertificate, certify_quiescence
+
+__all__ = [
+    "FaultPlan", "random_fault_plan", "WanExecResult", "wan_flood_exec",
+    "async_algorithm1_rounds", "restricted_sim_coreset",
+    "QuiescenceCertificate", "certify_quiescence",
+]

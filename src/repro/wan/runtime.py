@@ -1,0 +1,400 @@
+"""The asynchronous WAN flood runtime and the faulty Algorithm-1 rounds.
+
+:func:`wan_flood_exec` executes Algorithm 3 under an asynchronous
+activation schedule and a :class:`~repro.wan.faults.FaultPlan` as one
+jitted ``lax.scan``. The protocol is **send-once relay**: each directed
+out-slot ``(v, i)`` keeps per-origin state ``sent[v, i, o]`` and
+transmits origin ``o``'s payload at the first live round after ``v``
+learns it; receivers overwrite-on-first-receipt, never sum, so every
+copy anywhere is a bit-exact relay of the origin's payload and duplicate
+deliveries are idempotent by construction (the quiescence checker still
+verifies it empirically). Fault and activation masks are dense per-round
+boolean inputs -- the scan body contains no Python-side mutation, so a
+faulty run is jittable and bit-reproducible from ``(plan, mode, seed)``.
+
+The measured :class:`~repro.core.comm.CommLedger` gains the
+``staleness`` axis here: node ``v``'s *completion round* is the first
+round after which it knows every tracked (surviving) origin, its sync
+baseline is its eccentricity in the lossless timetable
+``Graph.distances()``, and ``staleness_v`` is the excess. The ledger
+records the mean over surviving nodes; per-round sub-ledgers are filed
+as ``wan_round_###`` phases.
+
+Quiescence bounds (proved in DESIGN.md Sec. 14, certified in
+:mod:`repro.wan.quiesce`): with a connected surviving subgraph of
+diameter ``D'`` and churn horizon ``H``, mode ``"full"`` completes by
+round ``H + D'`` and quiesces (no send-once obligation outstanding) one
+round later; mode ``"clock"`` multiplies the per-hop latency by the
+maximum edge period; mode ``"random"`` has no deterministic bound and
+doubles its (prefix-stable) round budget until the pending count hits
+zero.
+
+:func:`async_algorithm1_rounds` runs the paper's Algorithm 1 with both
+communication rounds under this runtime, restricting the allocation and
+the assembled coreset to *surviving* origins -- which is exactly what
+makes the result bit-identical to :func:`restricted_sim_coreset`, the
+host oracle run on the surviving sites alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.comm import CommLedger, link_cost_of
+from repro.core.coreset import (proportional_allocation, round1_local_solves,
+                                round2_local_samples)
+from repro.core.message_passing import (Units, _units_ledger, pack_payload,
+                                        unpack_payload)
+from repro.core.topology import Graph, diameter
+from repro.wan.faults import FaultPlan
+from repro.wan.schedules import WanSchedule, liveness_masks, wan_schedule
+
+Array = jax.Array
+
+_MAX_ROUNDS = 4096
+
+
+@dataclasses.dataclass
+class WanExecResult:
+    """Outcome of one asynchronous flood.
+
+    ``rounds`` is the executed round count; ``rounds_to_complete`` the
+    first round after which every surviving node knew every tracked
+    origin; ``rounds_to_quiesce`` the first round after which no
+    send-once obligation remained on any usable slot (all traffic ever
+    after is zero). ``completion``/``staleness`` are per-node (staleness
+    is 0 for non-surviving nodes); ``ledger.staleness`` is the surviving
+    mean. ``known`` is the final (node, origin) knowledge table."""
+
+    rounds: int
+    rounds_to_complete: int
+    rounds_to_quiesce: int
+    ledger: CommLedger
+    per_round_transmissions: List[int]
+    completion: np.ndarray
+    staleness: np.ndarray
+    known: np.ndarray
+    mode: str
+    wall_s: float = 0.0
+
+
+@jax.jit
+def _wan_flood_rounds(in_neighbors, in_neighbor_mask, in_slot, payload,
+                      live, dup, track, usable):
+    """Scan ``live.shape[0]`` asynchronous rounds of send-once relay.
+
+    State: ``known`` (n, n) node-x-origin knowledge, ``sent``
+    (n, max_deg, n) per-out-slot send-once flags, ``table`` (n, n, F)
+    relayed payload copies. Each round a slot transmits every known,
+    not-yet-sent origin if ``live``; ``dup`` forces re-transmission of
+    already-sent origins (metered, delivered, idempotent). The receive
+    side gathers the *sender's* transmit decisions through ``in_slot``
+    (the sender-side slot index of each in-edge), so directed graphs
+    relay strictly along link orientation. Emits per-round transmit
+    cubes (for host-side float64 ledger pricing), per-node tracked-
+    completion flags, and the outstanding send-once count over ``usable``
+    steady-state slots (zero == quiesced)."""
+    n, f = payload.shape
+    eye = jnp.eye(n, dtype=bool)
+    table = jnp.where(eye[:, :, None], payload[None, :, :],
+                      jnp.zeros((), payload.dtype))
+    sent0 = jnp.zeros((n, live.shape[2], n), bool)
+
+    def body(carry, masks):
+        known, sent, table = carry
+        live_r, dup_r = masks
+        want = known[:, None, :] & ~sent & live_r[:, :, None]
+        extra = sent & live_r[:, :, None] & dup_r[:, :, None]
+        xmit = want | extra
+        deliv = xmit[in_neighbors, in_slot] & in_neighbor_mask[:, :, None]
+        incoming = jnp.any(deliv, axis=1)                     # (n, n)
+        src = jnp.argmax(deliv, axis=1)                       # (n, n)
+        recv = jnp.take_along_axis(table[in_neighbors],
+                                   src[:, None, :, None], axis=1)[:, 0]
+        new = incoming & ~known
+        table = jnp.where(new[:, :, None], recv, table)
+        known = known | new
+        sent = sent | want
+        pending = jnp.sum(known[:, None, :] & ~sent & usable[:, :, None])
+        done = jnp.all(known | ~track[None, :], axis=1)       # (n,)
+        return (known, sent, table), (xmit, done, pending)
+
+    (known, _, table), (xmits, done, pending) = jax.lax.scan(
+        body, (eye, sent0, table), (live, dup))
+    return table, known, xmits, done, pending
+
+
+def _round_budget(ws: WanSchedule, mode: str, plan: FaultPlan,
+                  d_surv: int) -> int:
+    """Deterministic round bound (+1 flush slack) for full/clock modes;
+    the starting guess for random mode."""
+    h = plan.horizon()
+    if mode == "clock":
+        return h + ws.max_period * (d_surv + 2)
+    return h + d_surv + 2
+
+
+def wan_flood_exec(graph: Graph, payload: Array, mode: str = "full",
+                   faults: Optional[FaultPlan] = None,
+                   unit_scalars: Units = 0.0, unit_points: Units = 0.0,
+                   dim: int = 0, seed: int = 0, p: float = 0.5,
+                   max_rounds: int = _MAX_ROUNDS
+                   ) -> Tuple[Array, WanExecResult]:
+    """Execute Algorithm 3 asynchronously under faults.
+
+    Same payload/units contract as
+    :func:`~repro.core.message_passing.flood_exec`; tracked origins are
+    the plan's survivors (all nodes on a trivial plan), and the run
+    raises if the surviving subgraph is disconnected or the tracked
+    flood fails to complete within the round budget (random mode doubles
+    its prefix-stable budget up to ``max_rounds`` first). Returns the
+    relay table over *all* nodes -- restrict to surviving rows/origins
+    before consuming it; dead origins' columns are whatever partially
+    spread before death."""
+    plan = faults if faults is not None else FaultPlan()
+    ws = wan_schedule(graph)
+    t0 = time.perf_counter()
+    payload = jnp.asarray(payload)
+    if payload.shape[0] != graph.n:
+        raise ValueError(f"payload must be origin-indexed: got leading dim "
+                         f"{payload.shape[0]} for a {graph.n}-node graph")
+    surv = plan.surviving_nodes(graph.n)
+    sub, _ = plan.surviving_graph(graph)
+    try:
+        d_surv = diameter(sub)
+    except ValueError as e:
+        raise ValueError(f"fault plan disconnects the surviving subgraph "
+                         f"({e}); no quiescence bound exists") from e
+    track = np.zeros(graph.n, bool)
+    track[surv] = True
+
+    trailing = payload.shape[1:]
+    flat = payload.reshape(graph.n, -1)
+    n_rounds = max(1, _round_budget(ws, mode, plan, d_surv))
+    while True:
+        live, dup, usable = liveness_masks(ws, mode, n_rounds, plan,
+                                           seed=seed, p=p)
+        table, known, xmits, done, pending = _wan_flood_rounds(
+            jnp.asarray(ws.base.in_neighbors),
+            jnp.asarray(ws.base.in_neighbor_mask),
+            jnp.asarray(ws.in_slot), flat,
+            jnp.asarray(live), jnp.asarray(dup), jnp.asarray(track),
+            jnp.asarray(usable))
+        pending_np = np.asarray(pending)
+        done_np = np.asarray(done)
+        quiesced = bool(pending_np[-1] == 0)
+        complete = bool(done_np[-1][surv].all())   # the dead owe nothing
+        if complete and quiesced:
+            break
+        if mode == "random" and n_rounds < max_rounds:
+            n_rounds = min(2 * n_rounds, max_rounds)   # prefix-stable
+            continue
+        raise RuntimeError(
+            f"wan flood did not {'complete' if not complete else 'quiesce'} "
+            f"in {n_rounds} rounds (mode={mode!r}, horizon="
+            f"{plan.horizon()}, surviving diameter={d_surv})")
+
+    known_np = np.asarray(known)
+    xmits_np = np.asarray(xmits)                 # (rounds, n, deg, n) bool
+
+    # per-node completion round (0 if a node starts complete, e.g. n == 1)
+    init_done = (np.eye(graph.n, dtype=bool) | ~track[None, :]).all(axis=1)
+    completion = np.empty(graph.n, np.int64)
+    for v in range(graph.n):
+        if init_done[v]:
+            completion[v] = 0
+        else:
+            hits = np.nonzero(done_np[:, v])[0]
+            completion[v] = int(hits[0]) + 1 if hits.size else n_rounds + 1
+    rounds_to_complete = int(completion[surv].max()) if surv.size else 0
+    q_hits = np.nonzero(pending_np == 0)[0]
+    rounds_to_quiesce = int(q_hits[0]) + 1 if q_hits.size else n_rounds
+
+    # staleness vs the synchronous lossless timetable on the full graph
+    dist = graph.distances()
+    ecc = np.zeros(graph.n, np.int64)
+    for v in range(graph.n):
+        dv = dist[surv, v]
+        ecc[v] = int(dv.max()) if (dv >= 0).all() else 0
+    staleness = np.where(track, np.maximum(0, completion - ecc), 0)
+
+    # ledger: totals from the summed counts (canonical float64 pricing),
+    # per-round sub-ledgers filed as phases up to quiescence
+    nc = np.asarray(ws.base.neighbor_costs, np.float64)
+    counts = xmits_np.astype(np.int64)
+    total = counts.sum(axis=0)                   # (n, deg, n)
+    per_origin = total.sum(axis=(0, 1)).astype(np.float64)
+    per_origin_link = (total.astype(np.float64)
+                       * nc[:, :, None]).sum(axis=(0, 1))
+    ledger = _units_ledger(per_origin, unit_scalars, unit_points, dim,
+                           count_all_messages=True,
+                           per_origin_link=per_origin_link)
+    phases: Dict[str, CommLedger] = {}
+    per_round_tx = []
+    for r in range(n_rounds):
+        cr = counts[r]
+        tx = int(cr.sum())
+        per_round_tx.append(tx)
+        if r < rounds_to_quiesce:
+            po = cr.sum(axis=(0, 1)).astype(np.float64)
+            pl = (cr.astype(np.float64) * nc[:, :, None]).sum(axis=(0, 1))
+            phases[f"wan_round_{r:03d}"] = _units_ledger(
+                po, unit_scalars, unit_points, dim,
+                count_all_messages=True, per_origin_link=pl)
+    mean_stale = float(staleness[surv].mean()) if surv.size else 0.0
+    ledger = dataclasses.replace(ledger, staleness=mean_stale,
+                                 phases=phases)
+
+    res = WanExecResult(rounds=n_rounds,
+                        rounds_to_complete=rounds_to_complete,
+                        rounds_to_quiesce=rounds_to_quiesce,
+                        ledger=ledger, per_round_transmissions=per_round_tx,
+                        completion=completion, staleness=staleness,
+                        known=known_np, mode=mode,
+                        wall_s=time.perf_counter() - t0)
+    return table.reshape((graph.n, graph.n) + trailing), res
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 under faults + the restricted sim oracle
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AsyncDetail:
+    """Per-node state after the faulty executed rounds, restricted to
+    surviving origins: the async counterpart of
+    :class:`~repro.core.distributed.ExecDetail`. ``surviving`` maps the
+    compact survivor axis back to original node ids; ``node_points`` /
+    ``node_weights`` are each *surviving* node's assembled coreset over
+    surviving origins (rows bit-identical across survivors)."""
+
+    surviving: np.ndarray
+    node_points: Array
+    node_weights: Array
+    node_alloc: Array
+    node_totals: Array
+    rounds: Dict[str, WanExecResult]
+
+
+def async_algorithm1_rounds(
+    graph: Graph,
+    key: Array,
+    site_points: Array,
+    w_site: Array,
+    k: int,
+    t: int,
+    t_buffer: int,
+    objective: str,
+    lloyd_iters: int,
+    clip_negative: bool,
+    backend: str,
+    mode: str = "clock",
+    faults: Optional[FaultPlan] = None,
+    seed: int = 0,
+    p: float = 0.5,
+) -> Tuple[AsyncDetail, Array]:
+    """Algorithm 1 with both communication rounds executed on the WAN
+    runtime. Identical key derivation and local stage functions as the
+    synchronous exec path (``jax.random.split(key, n*2)`` over *all*
+    sites, dead or not -- per-site stages are independent, which is what
+    keeps survivor-site values bit-identical however many peers die);
+    the allocation and the assembled coreset are restricted to surviving
+    origins in ascending id order, matching
+    :func:`restricted_sim_coreset` bit-for-bit. Returns
+    ``(detail, local_costs)``."""
+    plan = faults if faults is not None else FaultPlan()
+    n_sites, _, d = site_points.shape
+    if graph.n != n_sites:
+        raise ValueError(f"graph has {graph.n} nodes for {n_sites} sites")
+    surv = plan.surviving_nodes(n_sites)
+    keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
+
+    centers_l, m, assign, local_costs = round1_local_solves(
+        keys[:, 0], site_points, w_site, k=k, objective=objective,
+        lloyd_iters=lloyd_iters, backend=backend)
+
+    # -- Round 1: flood the cost scalars under faults ------------------------
+    cost_tables, r1 = wan_flood_exec(graph, local_costs[:, None], mode=mode,
+                                     faults=plan, unit_scalars=1.0,
+                                     seed=seed, p=p)
+    # every surviving node holds bit-identical copies of every surviving
+    # origin's scalar; each replays the exact largest-remainder allocation
+    # over the survivor set (dead origins' partial payloads are discarded)
+    costs_at = cost_tables[surv][:, surv, 0]             # (n', n')
+    node_alloc = jax.vmap(lambda c: proportional_allocation(c, t))(costs_at)
+    t_i = jnp.diagonal(node_alloc)                       # own share, (n',)
+    node_totals = jax.vmap(jnp.sum)(costs_at)
+
+    portions = round2_local_samples(
+        keys[surv, 1], site_points[surv], m[surv], w_site[surv],
+        assign[surv], centers_l[surv], t_i, node_totals, k=k, t=t,
+        t_buffer=t_buffer, clip_negative=clip_negative)
+
+    # -- Round 2: flood the portions (dead origin slots carry zeros; they
+    # are never assembled) ---------------------------------------------------
+    slots = portions.points.shape[1]
+    payload = jnp.zeros((n_sites, slots, d + 1), portions.points.dtype)
+    payload = payload.at[surv].set(pack_payload(portions.points,
+                                                portions.weights))
+    unit_pts = np.zeros(n_sites, np.float64)
+    unit_pts[surv] = np.asarray(t_i, np.float64) + k
+    port_tables, r2 = wan_flood_exec(graph, payload, mode=mode, faults=plan,
+                                     unit_points=unit_pts, dim=d,
+                                     seed=seed + 1, p=p)
+    node_pts, node_w = unpack_payload(port_tables[surv][:, surv])
+    n_surv = int(surv.size)
+    detail = AsyncDetail(
+        surviving=surv,
+        node_points=node_pts.reshape(n_surv, n_surv * slots, d),
+        node_weights=node_w.reshape(n_surv, n_surv * slots),
+        node_alloc=node_alloc, node_totals=node_totals,
+        rounds={"round1": r1, "round2": r2})
+    return detail, local_costs
+
+
+def restricted_sim_coreset(
+    key: Array,
+    site_points: Array,
+    site_mask: Array,
+    k: int,
+    t: int,
+    t_buffer: int,
+    objective: str,
+    lloyd_iters: int,
+    clip_negative: bool,
+    backend: str,
+    surviving: np.ndarray,
+) -> Tuple[Array, Array, Array, Array]:
+    """The host oracle the faulty exec path must reproduce bit-for-bit:
+    Algorithm 1 computed globally, with allocation and coreset assembly
+    restricted to the ``surviving`` sites (ascending original ids). Key
+    derivation spans *all* sites -- survivors must use the same per-site
+    keys they would in a fault-free run. Returns ``(points, weights,
+    t_i, local_costs)`` with the coreset as the survivors' portions
+    concatenated in ascending id order."""
+    n_sites, _, d = site_points.shape
+    surviving = np.asarray(surviving, np.int64)
+    keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
+    w_site = site_mask.astype(site_points.dtype)
+
+    centers_l, m, assign, local_costs = round1_local_solves(
+        keys[:, 0], site_points, w_site, k=k, objective=objective,
+        lloyd_iters=lloyd_iters, backend=backend)
+
+    costs = local_costs[surviving]
+    t_i = proportional_allocation(costs, t)
+    total = jnp.sum(costs)
+    totals = jnp.full(surviving.size, 1.0, costs.dtype) * total
+
+    portions = round2_local_samples(
+        keys[surviving, 1], site_points[surviving], m[surviving],
+        w_site[surviving], assign[surviving], centers_l[surviving], t_i,
+        totals, k=k, t=t, t_buffer=t_buffer, clip_negative=clip_negative)
+    pts = portions.points.reshape(-1, d)
+    w = portions.weights.reshape(-1)
+    return pts, w, t_i, local_costs

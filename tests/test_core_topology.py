@@ -341,3 +341,62 @@ def test_gather_cost_prices_paths_broadcast_prices_edges():
     assert led.link_cost == 4.0 * pc.sum()
     down = tree_broadcast_cost(tree, unit_scalars=1.0)
     assert down.link_cost == 4.0 * tree.edge_cost_total()
+
+
+# -- all-pairs distances + fault-plan surgery (WAN runtime groundwork) -------
+
+def test_distances_cached_and_matches_bfs_floods():
+    g = topology.wan_clusters(3, 3, cross_links=2, seed=0)
+    dist = g.distances()
+    assert dist is g.distances()          # cached, one BFS sweep per graph
+    assert not dist.flags.writeable
+    np.testing.assert_array_equal(np.diag(dist), np.zeros(g.n, np.int64))
+    np.testing.assert_array_equal(dist, dist.T)   # undirected symmetry
+    assert int(dist.max()) == topology.diameter(g)
+    # spot-check one row against the flood round a payload arrives in
+    res = flood(g)
+    assert res.rounds == int(dist.max()) + 1
+
+
+def test_distances_directed_are_asymmetric():
+    g = topology.Graph(3, ((0, 1), (1, 2), (2, 0)), directed=True)
+    dist = g.distances()
+    assert dist[0, 2] == 2 and dist[2, 0] == 1    # one-way cycle
+    assert topology.diameter(g) == 2
+    # weakly- but not strongly-connected: unreachable pairs are -1
+    path = topology.Graph(3, ((0, 1), (1, 2)), directed=True)
+    d2 = path.distances()
+    assert d2[0, 2] == 2 and d2[2, 0] == -1
+    with pytest.raises(ValueError, match="strongly connected"):
+        topology.diameter(path)
+
+
+def test_drop_edges_preserves_costs_and_validates():
+    g = topology.wan_clusters(2, 3, cross_links=2, seed=1)
+    victim = g.edges[0]
+    g2 = topology.drop_edges(g, [victim])
+    assert g2.m == g.m - 1 and victim not in g2.edges
+    for e, c in zip(g2.edges, g2.costs):
+        assert c == g.cost_of(*e)
+    # either orientation names an undirected edge; unknown edges raise
+    g3 = topology.drop_edges(g, [victim[::-1]])
+    assert g3.edges == g2.edges
+    with pytest.raises(ValueError, match="not an edge"):
+        topology.drop_edges(g, [(0, g.n - 1) if (0, g.n - 1) not in g.edges
+                                else (1, 2)])
+
+
+def test_induced_subgraph_relabels_and_keeps_costs():
+    g = topology.wan_clusters(2, 3, cross_links=2, seed=1)
+    keep = [0, 1, 2, 4, 5]
+    sub, index = topology.induced_subgraph(g, keep)
+    np.testing.assert_array_equal(index, np.asarray(keep))
+    assert sub.n == len(keep)
+    for (a, b), c in zip(sub.edges, sub.costs):
+        assert c == g.cost_of(int(index[a]), int(index[b]))
+    # every surviving edge of g appears exactly once, relabeled
+    kept = {tuple(sorted((i, j))) for i, j in g.edges
+            if i in set(keep) and j in set(keep)}
+    relabeled = {tuple(sorted((int(index[a]), int(index[b]))))
+                 for a, b in sub.edges}
+    assert relabeled == kept

@@ -447,3 +447,47 @@ def test_tree_schedule_from_graph_routing():
         np.testing.assert_array_equal(direct.parent_cost,
                                       via_tree.parent_cost)
         np.testing.assert_array_equal(direct.levels, via_tree.levels)
+
+
+def test_directed_ring_relay_regression():
+    """One-way ring: the tightest orientation regression for
+    GossipSchedule.from_graph(directed=True). Every node has exactly one
+    out-slot and one in-edge; payloads travel n-1 hops *with* the arrows
+    (the transpose schedule would be caught by the asymmetric-digraph
+    test above; this one pins the degenerate max_deg == 1 layout)."""
+    n = 6
+    g = topology.Graph(n, tuple((i, (i + 1) % n) for i in range(n)),
+                       directed=True)
+    sched = GossipSchedule.from_graph(g)
+    assert sched.neighbors.shape == (n, 1) and sched.n_rounds >= n - 1
+    np.testing.assert_array_equal(np.asarray(sched.in_neighbors)[:, 0],
+                                  np.arange(-1, n - 1) % n)
+    vals = jnp.arange(n, dtype=jnp.float32)[:, None] * 3.0 + 1.0
+    tables, res = flood_exec(g, vals, unit_scalars=1.0)
+    for v in range(n):
+        np.testing.assert_array_equal(np.asarray(tables[v]),
+                                      np.asarray(vals))
+    sim = flood(g)
+    m = min(len(res.per_round_transmissions),
+            len(sim.per_round_transmissions))
+    assert res.per_round_transmissions[:m] == \
+        sim.per_round_transmissions[:m]
+    assert res.rounds_to_complete == topology.diameter(g) == n - 1
+
+
+def test_schedule_factories_cache_by_graph_value():
+    """gossip_schedule / tree_schedule are lru-cached on the (hashable)
+    Graph value: structurally equal graphs share one compiled schedule,
+    different routings do not."""
+    from repro.core.message_passing import gossip_schedule, tree_schedule
+    g1 = topology.wan_clusters(2, 3, cross_links=2, seed=1)
+    g2 = topology.Graph(g1.n, g1.edges, edge_costs=g1.edge_costs,
+                        directed=g1.directed)
+    assert g1 == g2 and hash(g1) == hash(g2)
+    assert gossip_schedule(g1) is gossip_schedule(g2)
+    assert tree_schedule(g1, root=0) is tree_schedule(g2, root=0)
+    assert tree_schedule(g1, root=0, routing="bfs") is not \
+        tree_schedule(g1, root=0, routing="min_cost")
+    d = topology.Graph(3, ((0, 1), (1, 2), (2, 0)), directed=True)
+    assert gossip_schedule(d) is gossip_schedule(
+        topology.Graph(3, ((0, 1), (1, 2), (2, 0)), directed=True))

@@ -1,0 +1,212 @@
+"""End-to-end WAN runtime tests: Algorithm 1 and the streaming
+aggregation round under faults (DESIGN.md Sec. 14).
+
+The contract: a fault-free asynchronous round is bit-identical to the
+synchronous execution engine; a faulty round is bit-identical to the
+host sim oracle restricted to the surviving sites; the stream layer
+carries the same guarantees round by round, including on adversarially
+contaminated streams.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.distributed import graph_distributed_kmeans
+from repro.core.partition import pad_partition, partition_indices
+from repro.data.synthetic import contaminated_stream, drifting_mixture_stream
+from repro.stream.ingest import DistributedStream
+from repro.stream.tree import TreeConfig
+from repro.wan.faults import FaultPlan
+from repro.wan.quiesce import certify_quiescence
+
+KEY = jax.random.PRNGKey(17)
+UNITS = ("scalars", "points", "messages", "bytes", "link_cost")
+CFG = TreeConfig(k=4, t=60, d=6, batch_size=200, levels=12)
+
+
+@pytest.fixture(scope="module")
+def site_data():
+    rng = np.random.default_rng(2)
+    k, d, n_sites = 3, 5, 12
+    centers = 3.0 * rng.standard_normal((k, d))
+    pts = np.concatenate(
+        [centers[i] + 0.2 * rng.standard_normal((140, d)) for i in range(k)]
+    ).astype(np.float32)
+    idx = partition_indices(pts, n_sites, "weighted", seed=1)
+    sp, sm = pad_partition(pts, idx)
+    return jnp.asarray(sp), jnp.asarray(sm), k
+
+
+@pytest.fixture(scope="module")
+def wan_graph():
+    return topology.wan_clusters(3, 4, cross_links=2, seed=0)
+
+
+# -- graph_distributed_kmeans ------------------------------------------------
+
+def test_async_fault_free_full_mode_is_bit_identical_to_exec(site_data,
+                                                             wan_graph):
+    sp, sm, k = site_data
+    r_ex = graph_distributed_kmeans(KEY, sp, sm, k, 48, wan_graph,
+                                    engine="exec")
+    r_as = graph_distributed_kmeans(KEY, sp, sm, k, 48, wan_graph,
+                                    engine="async", wan_mode="full")
+    np.testing.assert_array_equal(np.asarray(r_ex.coreset.points),
+                                  np.asarray(r_as.coreset.points))
+    np.testing.assert_array_equal(np.asarray(r_ex.coreset.weights),
+                                  np.asarray(r_as.coreset.weights))
+    np.testing.assert_array_equal(np.asarray(r_ex.centers),
+                                  np.asarray(r_as.centers))
+    ed, ad = r_ex.ledger.as_dict(), r_as.ledger.as_dict()
+    for u in UNITS:
+        assert ed[u] == ad[u], u
+    assert ad["staleness"] == 0.0
+
+
+def test_async_clock_mode_same_result_with_staleness(site_data, wan_graph):
+    """Per-edge clocks reorder deliveries but relay bit-exact copies: the
+    round result cannot depend on the schedule, only the staleness can."""
+    sp, sm, k = site_data
+    r_ex = graph_distributed_kmeans(KEY, sp, sm, k, 48, wan_graph,
+                                    engine="exec")
+    r_ck = graph_distributed_kmeans(KEY, sp, sm, k, 48, wan_graph,
+                                    engine="async", wan_mode="clock")
+    np.testing.assert_array_equal(np.asarray(r_ex.centers),
+                                  np.asarray(r_ck.centers))
+    d = r_ck.ledger.as_dict()
+    assert d["staleness"] > 0.0          # 16x-cost cross links lag
+    assert d["link_cost"] == r_ex.ledger.as_dict()["link_cost"]
+
+
+def test_faulty_exec_certified_against_restricted_oracle(site_data,
+                                                         wan_graph):
+    sp, sm, k = site_data
+    plan = FaultPlan(drop=((0, 1),), churn=((5, 1, 3), (9, 0, -1)), seed=3)
+    for mode in ("full", "clock"):
+        cert = certify_quiescence(wan_graph, plan, mode=mode, seed=4,
+                                  check_clustering=True, key=KEY,
+                                  site_points=sp, site_mask=sm, k=k, t=48)
+        assert cert.ok, (mode, cert)
+        assert cert.centers_match is True
+
+
+def test_faulty_round_coreset_spans_survivors_only(site_data, wan_graph):
+    sp, sm, k = site_data
+    plan = FaultPlan(churn=((9, 0, -1),), seed=1)
+    surv = plan.surviving_nodes(wan_graph.n)
+    res = graph_distributed_kmeans(KEY, sp, sm, k, 48, wan_graph,
+                                   engine="exec", faults=plan)
+    detail = res.exec_detail
+    assert np.array_equal(detail.surviving, surv)
+    # one portion of t_i + k rows per surviving site, none for the dead
+    assert detail.node_points.shape[0] == surv.size
+    assert res.ledger.as_dict()["staleness"] >= 0.0
+
+
+def test_faults_require_flood_routing(site_data, wan_graph):
+    sp, sm, k = site_data
+    with pytest.raises(ValueError, match="flood"):
+        graph_distributed_kmeans(KEY, sp, sm, k, 48, wan_graph,
+                                 engine="exec", routing="tree",
+                                 faults=FaultPlan(seed=0))
+
+
+# -- DistributedStream rounds ------------------------------------------------
+
+def _feed(ds, batches):
+    for i, b in enumerate(batches):
+        ds.push(i % ds.graph.n, b)
+
+
+@pytest.mark.parametrize("mode", ["union", "resample"])
+def test_stream_async_round_matches_exec(mode):
+    g = topology.grid(2, 2)
+    key = jax.random.PRNGKey(41)
+    batches = list(drifting_mixture_stream(8, 200, d=6, k=4, seed=37))
+    ds_ex = DistributedStream(g, CFG, key=key)
+    ds_as = DistributedStream(g, CFG, key=key)
+    _feed(ds_ex, batches)
+    _feed(ds_as, batches)
+    r_ex = ds_ex.aggregate(k=4, t=120, mode=mode, engine="exec")
+    r_as = ds_as.aggregate(k=4, t=120, mode=mode, engine="async",
+                           wan_mode="full", wan_seed=0)
+    np.testing.assert_array_equal(np.asarray(r_ex.coreset.points),
+                                  np.asarray(r_as.coreset.points))
+    np.testing.assert_array_equal(np.asarray(r_ex.coreset.weights),
+                                  np.asarray(r_as.coreset.weights))
+    np.testing.assert_array_equal(np.asarray(r_ex.centers),
+                                  np.asarray(r_as.centers))
+    ed, ad = r_ex.ledger.as_dict(), r_as.ledger.as_dict()
+    for u in UNITS:
+        assert ed[u] == ad[u], (mode, u)
+
+
+def test_stream_faulty_union_round_keeps_survivor_mass(wan_graph):
+    """S3: an adversarially contaminated stream (outlier bursts between
+    rounds) aggregated under churn -- the surviving union preserves
+    exactly the surviving sites' summary mass."""
+    ds = DistributedStream(wan_graph, CFG, key=jax.random.PRNGKey(5))
+    batches = contaminated_stream(12, 200, d=6, k=4, outlier_frac=0.05,
+                                  burst_every=4, seed=5)
+    _feed(ds, list(batches))
+    plan = FaultPlan(drop=((0, 1),), churn=((5, 1, 3), (9, 0, -1)), seed=3)
+    surv = plan.surviving_nodes(wan_graph.n)
+    res = ds.aggregate(k=4, t=5000, mode="union", engine="async",
+                       faults=plan)
+    survivor_mass = sum(
+        float(np.asarray(ds.sites[int(s)].summary().weights).sum())
+        for s in surv)
+    np.testing.assert_allclose(float(jnp.sum(res.coreset.weights)),
+                               survivor_mass, rtol=1e-5)
+    d = res.ledger.as_dict()
+    assert d["staleness"] >= 0.0
+    assert res.centers.shape == (4, CFG.d)
+
+
+def test_stream_faulty_resample_round_runs_restricted(wan_graph):
+    ds = DistributedStream(wan_graph, CFG, key=jax.random.PRNGKey(7))
+    _feed(ds, list(contaminated_stream(12, 200, d=6, k=4, seed=9)))
+    plan = FaultPlan(churn=((9, 0, -1),), seed=2)
+    res = ds.aggregate(k=4, t=120, mode="resample", engine="exec",
+                       faults=plan)
+    # the coreset is the survivors' portions: (sum t_i + n'k) rows
+    assert np.isfinite(np.asarray(res.coreset.points)).all()
+    assert res.centers.shape == (4, CFG.d)
+    d = ds.ledger.as_dict(by_phase=True)
+    assert "stream_round_0" in d["phases"]
+
+
+def test_stream_wan_validation():
+    ds = DistributedStream(topology.grid(2, 2), CFG)
+    ds.push(0, next(iter(drifting_mixture_stream(1, 200, d=6, seed=1))))
+    with pytest.raises(ValueError, match="engine"):
+        ds.aggregate(k=4, t=60, engine="sim", faults=FaultPlan(seed=0))
+    with pytest.raises(ValueError, match="flood"):
+        ds.aggregate(k=4, t=60, engine="async", transport="tree")
+
+
+# -- contaminated_stream itself (S3) -----------------------------------------
+
+def test_contaminated_stream_shares_inliers_with_base():
+    clean = list(drifting_mixture_stream(4, 100, d=5, seed=3))
+    dirty = list(contaminated_stream(4, 100, d=5, outlier_frac=0.1, seed=3))
+    assert len(dirty) == 4
+    for c, t in zip(clean, dirty):
+        assert t.shape == c.shape and t.dtype == np.float32
+        changed = np.any(c != t, axis=1)
+        assert changed.sum() == 10               # exactly the outlier count
+        np.testing.assert_array_equal(c[~changed], t[~changed])
+        # outliers live far outside the mixture's 3-sigma shell
+        assert np.linalg.norm(t[changed], axis=1).min() > 20.0
+
+
+def test_contaminated_stream_burst_batches_are_fully_adversarial():
+    dirty = list(contaminated_stream(4, 50, d=5, outlier_frac=0.0,
+                                     burst_every=2, seed=3))
+    radii = [np.linalg.norm(b, axis=1) for b in dirty]
+    assert radii[1].min() > 20.0 and radii[3].min() > 20.0   # bursts
+    assert radii[0].max() < 20.0 and radii[2].max() < 20.0   # clean
+    with pytest.raises(ValueError, match="outlier_frac"):
+        list(contaminated_stream(1, 10, outlier_frac=1.5))

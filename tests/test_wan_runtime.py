@@ -1,0 +1,214 @@
+"""Asynchronous WAN runtime tests (DESIGN.md Sec. 14).
+
+The runtime contract, asserted here:
+
+* a trivial fault plan in mode ``"full"`` reproduces the synchronous
+  execution engine transmission for transmission -- same tables, same
+  per-round profile, same measured ledger;
+* under drops / churn / duplication the tracked flood completes within
+  the proved bound (horizon + period * surviving diameter), quiesces,
+  and duplicate deliveries never change a relay table;
+* per-edge-clock mode prices heterogeneous links into the new
+  ``staleness`` ledger axis; randomized gossip is seed-deterministic and
+  its budget doubling is prefix-stable;
+* :func:`repro.wan.quiesce.certify_quiescence` signs off on every
+  (topology, plan) pair tested, including generated plans.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology
+from repro.core.message_passing import flood, flood_exec
+from repro.wan.faults import FaultPlan, random_fault_plan
+from repro.wan.quiesce import certify_quiescence
+from repro.wan.runtime import wan_flood_exec
+from repro.wan.schedules import wan_schedule
+
+UNITS = ("scalars", "points", "messages", "bytes", "link_cost")
+
+
+def _payload(n, f=3):
+    return (jnp.arange(n, dtype=jnp.float32)[:, None] * 10.0
+            + jnp.arange(f, dtype=jnp.float32)[None, :])
+
+
+# -- fault-free equivalence with the synchronous engine ----------------------
+
+def test_trivial_plan_full_mode_matches_sync_engine():
+    g = topology.grid(3, 3)
+    pay = _payload(g.n)
+    sync_tables, sync_res = flood_exec(g, pay, unit_scalars=1.0)
+    wan_tables, wan_res = wan_flood_exec(g, pay, mode="full",
+                                         unit_scalars=1.0)
+    np.testing.assert_array_equal(np.asarray(sync_tables),
+                                  np.asarray(wan_tables))
+    # transmission-for-transmission: same profile modulo trailing zeros
+    ns, nw = sync_res.per_round_transmissions, wan_res.per_round_transmissions
+    m = min(len(ns), len(nw))
+    assert ns[:m] == nw[:m]
+    assert all(x == 0 for x in ns[m:] + nw[m:])
+    sd, wd = sync_res.ledger.as_dict(), wan_res.ledger.as_dict()
+    for u in UNITS:
+        assert sd[u] == wd[u], u
+    assert wd["staleness"] == 0.0
+    assert wan_res.rounds_to_complete == topology.diameter(g)
+
+
+def test_fault_free_quiesces_one_round_after_completion():
+    g = topology.ring(8)
+    _, res = wan_flood_exec(g, _payload(g.n), mode="full")
+    assert res.rounds_to_complete == topology.diameter(g)
+    # quiescence == the last obligations flushed; trailing rounds silent
+    assert res.rounds_to_quiesce <= res.rounds_to_complete + 1
+    assert all(t == 0 for t in
+               res.per_round_transmissions[res.rounds_to_quiesce:])
+
+
+# -- faults: completion, quiescence, idempotence -----------------------------
+
+@pytest.fixture(scope="module")
+def faulty_case():
+    g = topology.wan_clusters(3, 4, cross_links=2, seed=0)
+    plan = FaultPlan(drop=((0, 1),), churn=((5, 1, 3), (9, 0, -1)), seed=3)
+    return g, plan
+
+
+def test_faulty_flood_completes_within_bound(faulty_case):
+    g, plan = faulty_case
+    sub, _ = plan.surviving_graph(g)
+    surv = plan.surviving_nodes(g.n)
+    tables, res = wan_flood_exec(g, _payload(g.n), mode="full", faults=plan)
+    assert res.rounds_to_complete <= plan.horizon() + topology.diameter(sub)
+    assert res.rounds_to_quiesce <= res.rounds
+    # every survivor holds every surviving origin, bit-exact
+    t = np.asarray(tables)
+    pay = np.asarray(_payload(g.n))
+    for v in surv:
+        np.testing.assert_array_equal(t[v][surv], pay[surv])
+    # the dead node is excluded from tracking: nothing owes it delivery
+    assert 9 not in surv
+
+
+def test_duplicates_change_traffic_not_tables(faulty_case):
+    g, plan = faulty_case
+    surv = plan.surviving_nodes(g.n)
+    base, bres = wan_flood_exec(g, _payload(g.n), mode="full", faults=plan)
+    dup = dataclasses.replace(plan, dup_rate=0.4)
+    dtab, dres = wan_flood_exec(g, _payload(g.n), mode="full", faults=dup)
+    assert dres.ledger.messages > bres.ledger.messages
+    np.testing.assert_array_equal(np.asarray(base)[surv][:, surv],
+                                  np.asarray(dtab)[surv][:, surv])
+
+
+def test_disconnecting_plan_raises():
+    g = topology.star(5)          # hub 0 is a cut vertex
+    plan = FaultPlan(churn=((0, 0, -1),))
+    with pytest.raises(ValueError, match="disconnect"):
+        wan_flood_exec(g, _payload(g.n), faults=plan)
+
+
+def test_unknown_dropped_edge_raises():
+    g = topology.ring(5)
+    with pytest.raises(ValueError, match="not an edge"):
+        wan_flood_exec(g, _payload(g.n), faults=FaultPlan(drop=((0, 2),)))
+
+
+# -- per-edge clocks and staleness -------------------------------------------
+
+def test_clock_mode_prices_slow_links_as_staleness():
+    g = topology.wan_clusters(3, 3, cross_links=2, seed=0)
+    ws = wan_schedule(g)
+    assert ws.max_period > 1          # heterogeneous 1.0 / 16.0 costs
+    _, res = wan_flood_exec(g, _payload(g.n), mode="clock")
+    assert res.ledger.staleness > 0.0
+    assert res.rounds_to_complete <= ws.max_period * topology.diameter(g)
+    surv = np.arange(g.n)
+    assert res.ledger.staleness == pytest.approx(
+        float(res.staleness[surv].mean()))
+    # uniform costs degenerate to the synchronous flood: no staleness
+    _, uni = wan_flood_exec(topology.grid(3, 3), _payload(9), mode="clock")
+    assert uni.ledger.staleness == 0.0
+
+
+def test_ledger_round_phases_sum_to_totals():
+    g = topology.wan_clusters(3, 3, cross_links=2, seed=0)
+    _, res = wan_flood_exec(g, _payload(g.n), mode="clock",
+                            unit_scalars=1.0)
+    d = res.ledger.as_dict(by_phase=True)
+    assert all(name.startswith("wan_round_") for name in d["phases"])
+    for u in ("scalars", "messages", "link_cost"):
+        assert d[u] == pytest.approx(
+            sum(p[u] for p in d["phases"].values()))
+    assert "staleness" in d
+
+
+# -- randomized gossip -------------------------------------------------------
+
+def test_random_mode_is_seed_deterministic():
+    g = topology.grid(3, 3)
+    t1, r1 = wan_flood_exec(g, _payload(g.n), mode="random", seed=7, p=0.4)
+    t2, r2 = wan_flood_exec(g, _payload(g.n), mode="random", seed=7, p=0.4)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    assert r1.per_round_transmissions == r2.per_round_transmissions
+    assert r1.rounds_to_quiesce == r2.rounds_to_quiesce
+    # tables are relays of the originals regardless of the edge draws
+    np.testing.assert_array_equal(
+        np.asarray(t1), np.broadcast_to(np.asarray(_payload(g.n))[None],
+                                        np.asarray(t1).shape))
+
+
+def test_random_mode_budget_doubling_is_prefix_stable():
+    """A sparse activation forces at least one doubling; the masks are
+    seeded per absolute round, so the doubled run must agree with a run
+    granted the final budget up front."""
+    g = topology.ring(6)
+    _, res = wan_flood_exec(g, _payload(g.n), mode="random", seed=1, p=0.05)
+    _, direct = wan_flood_exec(g, _payload(g.n), mode="random", seed=1,
+                               p=0.05, max_rounds=res.rounds)
+    assert res.per_round_transmissions == direct.per_round_transmissions
+    assert res.rounds_to_complete == direct.rounds_to_complete
+
+
+# -- certification -----------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["full", "clock", "random"])
+def test_certify_quiescence_modes(faulty_case, mode):
+    g, plan = faulty_case
+    cert = certify_quiescence(g, plan, mode=mode, seed=2)
+    assert cert.ok, cert
+    assert cert.quiesced and cert.duplicates_idempotent
+    if mode != "random":
+        assert cert.bound is not None
+        assert cert.rounds_to_complete <= cert.bound
+
+
+@pytest.mark.parametrize("topo", ["ring", "grid", "wan"])
+def test_certify_generated_plans(topo):
+    g = {"ring": lambda: topology.ring(9),
+         "grid": lambda: topology.grid(3, 3),
+         "wan": lambda: topology.wan_clusters(3, 3, cross_links=2, seed=0),
+         }[topo]()
+    plan = random_fault_plan(g, seed=11, drop_frac=0.15, n_churn=2,
+                             dead_frac=0.15, dup_rate=0.2)
+    cert = certify_quiescence(g, plan, mode="full", seed=5)
+    assert cert.ok, (topo, cert)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), plan_seed=st.integers(0, 10_000))
+def test_property_connected_survivors_quiesce_within_bound(seed, plan_seed):
+    """S4 property: any connected graph plus any fault plan whose
+    survivors stay connected floods to completion within horizon +
+    surviving diameter, and quiesces."""
+    g = topology.erdos_renyi(8, 0.35, seed=seed % 97)
+    plan = random_fault_plan(g, seed=plan_seed, drop_frac=0.2, n_churn=2,
+                             churn_window=(1, 4), dead_frac=0.2)
+    sub, _ = plan.surviving_graph(g)
+    _, res = wan_flood_exec(g, _payload(g.n), mode="full", faults=plan,
+                            seed=seed)
+    assert res.rounds_to_complete <= plan.horizon() + topology.diameter(sub)
+    assert res.rounds_to_quiesce <= res.rounds
