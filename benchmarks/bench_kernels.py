@@ -28,7 +28,7 @@ import numpy as np
 
 from benchmarks.common import json_row
 from repro.core import backend as backend_mod
-from repro.core import clustering
+from repro.core import clustering, objective
 from repro.kernels import ops, ref
 
 PEAK = 197e12
@@ -71,8 +71,10 @@ def run_dispatch(out_rows: List[str] | None = None,
     """A/B the registered backends on the primitive ops and an end-to-end
     weighted Lloyd solve, all through the dispatch layer. One row per
     (objective, backend, shape): the k-means rows time ``lloyd_stats``, the
-    k-median rows time the fused ``weiszfeld_stats`` primitive -- both
-    objectives are peers of the dispatch layer."""
+    k-median rows time the fused ``weiszfeld_stats`` primitive, and the
+    trimmed rows time the two-pass robust update (``min_dist_argmin`` for
+    the residual trim mask, then ``lloyd_stats`` on the masked weights) --
+    all objectives are peers of the dispatch layer."""
     rows = out_rows if out_rows is not None else []
     interpreted = jax.default_backend() != "tpu"
     for n, k, d in shapes:
@@ -117,6 +119,32 @@ def run_dispatch(out_rows: List[str] | None = None,
                 n=n, k=k, d=d,
                 weiszfeld_stats_us=round(t_ws, 1),
                 lloyd2_e2e_us=round(t_e2e_med, 1),
+            )
+
+            # trimmed robust update: pass 1 residuals (min_dist_argmin),
+            # pass 2 lloyd_stats with the top-t residual weights zeroed --
+            # never an (n, k) materialization
+            trimmed = objective.kmeans_trimmed(max(n // 20, 1))
+            t_trim = _time(
+                jax.jit(lambda p, c, ww: trimmed.update(b, p, ww, c)),
+                pts, ctr, w)
+            t_e2e_trim = _time(
+                lambda p, c, ww: clustering.lloyd(p, c, weights=ww, iters=2,
+                                                  objective=trimmed.name,
+                                                  backend=b),
+                pts, ctr, w, reps=1)
+            json_row(
+                rows,
+                f"backend_dispatch_trimmed/{name}/n={n}/k={k}/d={d}",
+                t_trim,
+                backend=name,
+                objective=trimmed.name,
+                interpret=bool(interpreted and name == "pallas"),
+                chunk=getattr(b, "chunk", None),
+                n=n, k=k, d=d,
+                trimmed_update_us=round(t_trim, 1),
+                lloyd2_e2e_us=round(t_e2e_trim, 1),
+                overhead_vs_lloyd_stats=round(t_trim / t_ls, 2),
             )
     return rows
 

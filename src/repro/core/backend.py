@@ -2,8 +2,8 @@
 
 Every hot path of the pipeline -- Algorithm 1's local solves, D^2 seeding,
 sensitivity computation, and the final coreset solve of Algorithm 2, for
-*both* objectives -- reduces to the same three primitive ops over a
-(possibly weighted) point set:
+*every* registered objective (:mod:`repro.core.objective`) -- reduces to
+the same three primitive ops over a (possibly weighted) point set:
 
 * ``min_dist_argmin(points, centers)``
     ``(n, d), (k, d) -> (min_d2 (n,) f32, argmin (n,) i32)``
@@ -55,6 +55,7 @@ from typing import Dict, Optional, Protocol, Tuple, Union, runtime_checkable
 import jax
 import jax.numpy as jnp
 
+from repro.core import objective as objective_mod
 from repro.kernels.ref import CENTER_SENTINEL as _CENTER_SENTINEL
 
 Array = jax.Array
@@ -354,7 +355,7 @@ def get_backend(backend: BackendLike = None) -> ClusteringBackend:
 
 
 def query_assignments(points: Array, centers: Array,
-                      objective: str = "kmeans",
+                      objective: objective_mod.ObjectiveLike = "kmeans",
                       backend: BackendLike = None) -> Tuple[Array, Array]:
     """Batched cluster-query entry point: nearest center and distance per
     query point, ``(n, d), (k, d) -> (assign (n,) i32, dist (n,) f32)``.
@@ -362,22 +363,25 @@ def query_assignments(points: Array, centers: Array,
     This is the serving hot path of :mod:`repro.stream.service` -- one
     fused ``min_dist_argmin`` pass through the registry (the Pallas
     ``distance_argmin`` kernel on TPU), with the distance reported in the
-    objective's metric (squared for k-means, euclidean for k-median).
+    objective's metric (``dist^z``: squared for z=2, euclidean for z=1;
+    trimmed objectives report the plain z=2 metric -- trimming is a
+    training-time notion, queries always get their true nearest center).
     """
-    return _query_assignments(points, centers, objective=objective,
-                              backend=resolve_name(backend))
+    return _query_assignments(
+        points, centers, objective=objective_mod.resolve_name(objective),
+        backend=resolve_name(backend))
 
 
 @functools.partial(jax.jit, static_argnames=("objective", "backend"))
 def _query_assignments(points, centers, objective, backend):
     d2, assign = _REGISTRY[backend].min_dist_argmin(points, centers)
-    dist = d2 if objective == "kmeans" else jnp.sqrt(jnp.maximum(d2, 0.0))
+    dist = objective_mod.get_objective(objective).clamped_cost(d2)
     return assign, dist
 
 
 def query_assignments_batched(queries: Array, centers: Array,
                               center_mask: Optional[Array] = None,
-                              objective: str = "kmeans",
+                              objective: objective_mod.ObjectiveLike = "kmeans",
                               backend: BackendLike = None
                               ) -> Tuple[Array, Array]:
     """Stacked-tenant cluster-query entry point: ``(T, m, d), (T, k, d)[,
@@ -395,11 +399,13 @@ def query_assignments_batched(queries: Array, centers: Array,
     -- batched results are bit-identical to a per-tenant serial loop over
     the same stacked buffers on the jnp backends (and ~1e-7 on pallas,
     whose padded-k tiling differs). Padded *query* rows are the caller's
-    to slice off. ``dist`` is squared for k-means, euclidean for k-median.
+    to slice off. ``dist`` is the objective's metric ``dist^z`` (squared
+    for z=2 -- including trimmed variants -- euclidean for z=1).
     """
-    return _query_assignments_batched(queries, centers, center_mask,
-                                      objective=objective,
-                                      backend=resolve_name(backend))
+    return _query_assignments_batched(
+        queries, centers, center_mask,
+        objective=objective_mod.resolve_name(objective),
+        backend=resolve_name(backend))
 
 
 @functools.partial(jax.jit, static_argnames=("objective", "backend"))
@@ -409,7 +415,7 @@ def _query_assignments_batched(queries, centers, center_mask, objective,
         centers = jnp.where(center_mask[..., None], centers,
                             jnp.asarray(_CENTER_SENTINEL, centers.dtype))
     d2, assign = _REGISTRY[backend].min_dist_argmin_batched(queries, centers)
-    dist = d2 if objective == "kmeans" else jnp.sqrt(jnp.maximum(d2, 0.0))
+    dist = objective_mod.get_objective(objective).clamped_cost(d2)
     return assign, dist
 
 

@@ -24,6 +24,7 @@ from repro.core import backend as backend_mod
 from repro.core import clustering
 from repro.core.backend import BackendLike
 from repro.core.comm import CommLedger, flood_cost
+from repro.core.objective import ObjectiveLike
 from repro.core.coreset import Coreset, build_coreset
 from repro.core.topology import Graph, SpanningTree
 
@@ -36,7 +37,7 @@ def combine(
     site_mask: Array,     # (n_sites, M)
     k: int,
     t_total: int,
-    objective: str = "kmeans",
+    objective: ObjectiveLike = "kmeans",
     lloyd_iters: int = 5,
     backend: BackendLike = None,
 ) -> Coreset:
@@ -78,7 +79,7 @@ def zhang_tree(
     tree: SpanningTree,
     k: int,
     s: int,
-    objective: str = "kmeans",
+    objective: ObjectiveLike = "kmeans",
     lloyd_iters: int = 5,
     backend: BackendLike = None,
 ) -> Tuple[Coreset, CommLedger]:

@@ -10,10 +10,16 @@ Every distance/statistics hot loop dispatches through the backend registry
 (:mod:`repro.core.backend`): ``backend`` accepts a registry name
 (``"jnp"``, ``"jnp_chunked"``, ``"pallas"``), a :class:`ClusteringBackend`
 instance, or ``None`` for the ambient default (``use_backend`` /
-auto-detection). The k-means Lloyd step consumes the fused one-pass
-``lloyd_stats`` primitive and the k-median refinement consumes the fused
-``weiszfeld_stats`` primitive -- on the Pallas backend the (n, k) distance
-matrix never exists in HBM for either objective (DESIGN.md Sec. 8, 10).
+auto-detection). The *objective* dispatches the same way through
+:mod:`repro.core.objective`: ``objective`` accepts a registry name
+(``"kmeans"``, ``"kmedian"``, parametrized ``"kmeans_trimmed(<t>)"`` /
+``"power(<z>)"``) or an :class:`Objective` instance, resolved once at the
+public boundary (unknown names raise). Center updates, seeding masses, and
+per-point costs all come from the descriptor's hooks: the k-means instance
+consumes the fused one-pass ``lloyd_stats`` primitive and the k-median
+instance the fused ``weiszfeld_stats`` primitive -- on the Pallas backend
+the (n, k) distance matrix never exists in HBM for any objective
+(DESIGN.md Sec. 8, 10, 15).
 """
 from __future__ import annotations
 
@@ -24,7 +30,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import backend as backend_mod
+from repro.core import objective as objective_mod
 from repro.core.backend import BackendLike
+from repro.core.objective import ObjectiveLike
 
 Array = jax.Array
 
@@ -82,18 +90,29 @@ def weiszfeld_stats(
         points, centers, weights)
 
 
+def _costing_backend(chunk, backend):
+    """Resolve a backend instance for a costing call, applying the ``chunk``
+    upgrade of :func:`min_dist_argmin`."""
+    b = backend_mod.get_backend(backend)
+    if chunk is not None and type(b) is backend_mod.JnpBackend:
+        b = backend_mod.JnpChunkedBackend(chunk)
+    return b
+
+
 def cost(
     points: Array,
     centers: Array,
     weights: Optional[Array] = None,
-    objective: str = "kmeans",
+    objective: ObjectiveLike = "kmeans",
     chunk: Optional[int] = None,
     backend: BackendLike = None,
 ) -> Array:
-    """Weighted clustering cost: sum_p w_p d(p, X)^2 (k-means) or ^1
-    (k-median)."""
-    d2, _ = min_dist_argmin(points, centers, chunk=chunk, backend=backend)
-    per_point = d2 if objective == "kmeans" else jnp.sqrt(d2)
+    """Weighted clustering cost: sum_p w_p d(p, X)^z in the objective's
+    metric (z=2 k-means, z=1 k-median, trimmed variants exclude their
+    top-t residual points)."""
+    obj = objective_mod.get_objective(objective)
+    per_point, _ = obj.costs(_costing_backend(chunk, backend),
+                             points, centers, weights)
     if weights is not None:
         per_point = per_point * weights
     return jnp.sum(per_point)
@@ -102,15 +121,20 @@ def cost(
 def point_costs(
     points: Array,
     centers: Array,
-    objective: str = "kmeans",
+    objective: ObjectiveLike = "kmeans",
     chunk: Optional[int] = None,
     backend: BackendLike = None,
+    weights: Optional[Array] = None,
 ) -> Tuple[Array, Array]:
-    """Per-point cost to the nearest center and the assignment (n,), (n,)."""
-    d2, assign = min_dist_argmin(points, centers, chunk=chunk,
-                                 backend=backend)
-    c = d2 if objective == "kmeans" else jnp.sqrt(d2)
-    return c, assign
+    """Per-point cost to the nearest center and the assignment (n,), (n,).
+
+    ``weights`` only feeds the objective's liveness mask (trimmed
+    objectives never count weight-0 padding against the trim budget); the
+    returned costs are *unweighted*.
+    """
+    obj = objective_mod.get_objective(objective)
+    return obj.costs(_costing_backend(chunk, backend),
+                     points, centers, weights)
 
 
 def kmeans_pp_init(
@@ -118,15 +142,18 @@ def kmeans_pp_init(
     points: Array,
     k: int,
     weights: Optional[Array] = None,
-    objective: str = "kmeans",
+    objective: ObjectiveLike = "kmeans",
     backend: BackendLike = None,
 ) -> Array:
-    """k-means++ (D^2) / k-median++ (D^1) seeding with optional weights.
-
-    Weight-0 points (padding) are never selected: the categorical logits are
-    ``log(w * D^power)`` which is -inf for them.
+    """D^z seeding (k-means++ for z=2, k-median++ for z=1) with optional
+    weights. The seeding mass of each step comes from the objective's
+    ``seeding_mass`` hook: plain objectives use ``w * D^z`` (weight-0
+    padding is never selected -- its logit is -inf), trimmed objectives
+    additionally zero the mass of the current top-t residual points so
+    seeds avoid far-field outliers.
     """
-    return _kmeans_pp_init(key, points, weights, k=k, objective=objective,
+    return _kmeans_pp_init(key, points, weights, k=k,
+                           objective=objective_mod.resolve_name(objective),
                            backend=backend_mod.resolve_name(backend))
 
 
@@ -143,16 +170,16 @@ def _masked_choice(key, mass):
 
 @functools.partial(jax.jit, static_argnames=("k", "objective", "backend"))
 def _kmeans_pp_init(key, points, weights, k, objective, backend):
+    obj = objective_mod.get_objective(objective)
     b = backend_mod.get_backend(backend)
     n, d = points.shape
     w = jnp.ones((n,), points.dtype) if weights is None else weights
     w = jnp.maximum(w, 0.0)
-    power = 1.0 if objective == "kmedian" else 2.0
 
     def dist_to(c):
         # distance of every point to one candidate center, via the backend
         d2 = b.min_dist_argmin(points, c[None, :])[0]
-        return d2 if power == 2.0 else jnp.sqrt(jnp.maximum(d2, 0.0))
+        return obj.clamped_cost(d2)
 
     key, k0 = jax.random.split(key)
     first = _masked_choice(k0, w)
@@ -162,7 +189,7 @@ def _kmeans_pp_init(key, points, weights, k, objective, backend):
     def body(i, carry):
         centers, mind, key = carry
         key, ki = jax.random.split(key)
-        idx = _masked_choice(ki, w * mind)
+        idx = _masked_choice(ki, obj.seeding(w, mind))
         c = points[idx]
         centers = centers.at[i].set(c)
         mind = jnp.minimum(mind, dist_to(c))
@@ -172,72 +199,39 @@ def _kmeans_pp_init(key, points, weights, k, objective, backend):
     return centers
 
 
-def _kmeans_update(points, weights, centers, k, b):
-    """One weighted Lloyd step for the k-means objective: a single fused
-    statistics pass (assignment + per-cluster sums/counts + cost)."""
-    sums, counts, c = b.lloyd_stats(points, centers, weights)
-    new = sums / jnp.where(counts > _EPS, counts, 1.0)[:, None]
-    new = jnp.where((counts > _EPS)[:, None], new,
-                    centers.astype(jnp.float32))
-    return new.astype(centers.dtype), c
-
-
-def _kmedian_update(points, weights, centers, k, b, weiszfeld_iters=4):
-    """One weighted alternating step for k-median: ``weiszfeld_iters`` fused
-    refinement passes through the backend's ``weiszfeld_stats`` primitive.
-
-    Each pass assigns every point to its nearest current center and applies
-    one Weiszfeld geometric-median update to each cluster -- both the
-    reassignment and the Weiszfeld step (an MM step for the Fermat-Weber
-    objective) are non-increasing in k-median cost, so the composition is
-    monotone. Membership mass is max(w, 0) (signed coreset measures must
-    not pull medians toward negative mass); the returned cost is the signed
-    assignment cost at the *incoming* centers, matching the k-means update's
-    history semantics."""
-    del k  # static center count is implicit in the centers shape
-
-    def wstep(y):
-        nums, denoms, c = b.weiszfeld_stats(points, y, weights)
-        ynew = nums / jnp.where(denoms > _EPS, denoms, 1.0)[:, None]
-        ynew = jnp.where((denoms > _EPS)[:, None], ynew,
-                         y.astype(jnp.float32))
-        return ynew.astype(centers.dtype), c
-
-    new, c = wstep(centers)
-    new = jax.lax.fori_loop(1, weiszfeld_iters,
-                            lambda _, y: wstep(y)[0], new)
-    return new, c
-
-
 def lloyd(
     points: Array,
     centers: Array,
     weights: Optional[Array] = None,
     iters: int = 10,
-    objective: str = "kmeans",
+    objective: ObjectiveLike = "kmeans",
     k: Optional[int] = None,
     backend: BackendLike = None,
 ) -> Tuple[Array, Array]:
-    """Weighted Lloyd iterations. Returns (centers, cost_history (iters,)).
+    """Weighted center-update iterations in the objective's metric (Lloyd
+    steps for k-means, fused Weiszfeld passes for k-median, trimmed /
+    IRLS passes for the registered extensions). Returns
+    (centers, cost_history (iters,)).
 
     Handles negative weights (signed coreset measures): clusters whose total
     weight is <= eps keep their previous center.
     """
     k = centers.shape[0] if k is None else k
-    return _lloyd(points, centers, weights, iters=iters, objective=objective,
+    return _lloyd(points, centers, weights, iters=iters,
+                  objective=objective_mod.resolve_name(objective),
                   k=k, backend=backend_mod.resolve_name(backend))
 
 
 @functools.partial(jax.jit,
                    static_argnames=("iters", "objective", "k", "backend"))
 def _lloyd(points, centers, weights, iters, objective, k, backend):
+    obj = objective_mod.get_objective(objective)
     b = backend_mod.get_backend(backend)
     w = jnp.ones((points.shape[0],), points.dtype) if weights is None \
         else weights
-    upd = _kmeans_update if objective == "kmeans" else _kmedian_update
 
     def body(centers, _):
-        new, c = upd(points, w, centers, k, b)
+        new, c = obj.update(b, points, w, centers)
         return new, c
 
     centers, hist = jax.lax.scan(body, centers, None, length=iters)
@@ -250,20 +244,22 @@ def solve(
     k: int,
     weights: Optional[Array] = None,
     lloyd_iters: int = 10,
-    objective: str = "kmeans",
+    objective: ObjectiveLike = "kmeans",
     restarts: int = 1,
     backend: BackendLike = None,
 ) -> Tuple[Array, Array]:
-    """Constant-approximation solver: k-means++ seeding + Lloyd refinement,
+    """Constant-approximation solver: D^z seeding + iterative refinement,
     best of ``restarts`` independent seedings (k-means++ is only O(log k) in
     expectation; restarts make the constant-approximation assumption of
-    Theorem 1 hold in practice).
+    Theorem 1 hold in practice). Restart selection uses the objective's own
+    cost, so trimmed objectives pick the best *trimmed* restart.
 
     This is the ``A_alpha`` subroutine of Algorithm 2 and the local solver
     ``B_i`` of Algorithm 1. Returns (centers (k,d), final cost scalar).
     """
     return _solve(key, points, weights, k=k, lloyd_iters=lloyd_iters,
-                  objective=objective, restarts=restarts,
+                  objective=objective_mod.resolve_name(objective),
+                  restarts=restarts,
                   backend=backend_mod.resolve_name(backend))
 
 

@@ -26,7 +26,14 @@ validity mask (XLA static shapes; see DESIGN.md Sec. 7).
 
 Both constructions dispatch their distance/statistics hot loops through the
 backend registry (``backend=`` accepts ``"jnp"``/``"jnp_chunked"``/
-``"pallas"`` or ``None`` for the ambient default; DESIGN.md Sec. 8).
+``"pallas"`` or ``None`` for the ambient default; DESIGN.md Sec. 8) and are
+objective-generic through the objective registry (``objective=`` accepts
+any registered :class:`Objective` name -- ``"kmeans"``, ``"kmedian"``,
+``"kmeans_trimmed(<t>)"``, ``"power(<z>)"`` -- resolved once at the public
+boundary; DESIGN.md Sec. 15). The objective's ``sensitivity_rule`` supplies
+both the sampling masses and the *effective weights* Round 2 must use --
+trimmed objectives zero their outliers' weights so trimmed mass never
+reaches the sampled portions or the center weights.
 """
 from __future__ import annotations
 
@@ -39,7 +46,9 @@ import jax.numpy as jnp
 
 from repro.core import backend as backend_mod
 from repro.core import clustering
+from repro.core import objective as objective_mod
 from repro.core.backend import BackendLike
+from repro.core.objective import ObjectiveLike
 
 Array = jax.Array
 _TINY = 1e-30
@@ -61,7 +70,8 @@ class Coreset:
     def effective_size(self) -> Array:
         return jnp.sum(self.weights != 0.0)
 
-    def cost(self, centers: Array, objective: str = "kmeans") -> Array:
+    def cost(self, centers: Array,
+             objective: ObjectiveLike = "kmeans") -> Array:
         return clustering.cost(self.points, centers, weights=self.weights,
                                objective=objective)
 
@@ -91,20 +101,28 @@ class Coreset:
 
 
 def sensitivities(points: Array, centers: Array, weights: Array,
-                  objective: str = "kmeans", backend: BackendLike = None
-                  ) -> Tuple[Array, Array]:
-    """Per-point sampling mass m_p = |w_p| * cost(p, B) and assignments.
+                  objective: ObjectiveLike = "kmeans",
+                  backend: BackendLike = None
+                  ) -> Tuple[Array, Array, Array]:
+    """Per-point sampling masses, assignments, and *effective weights*
+    ``(m, assign, w_eff)`` via the objective's ``sensitivity_rule``.
 
-    The absolute value matters only for *signed* instances (re-sampling a
-    coreset whose center weights went negative, as the streaming
-    merge-and-reduce tree does): masses must be a valid sampling
-    distribution, while the sample-weight formula keeps the original sign,
-    so ``E[sum_q w_q f(q)] = sum_p w_p f(p)`` still holds and the total
-    weight identity stays exact. For mask/non-negative weights this is the
-    paper's m_p unchanged."""
-    c, assign = clustering.point_costs(points, centers, objective=objective,
-                                       backend=backend)
-    return jnp.abs(weights) * c, assign
+    Plain objectives: the paper's m_p = |w_p| * cost(p, B) with
+    ``w_eff = weights`` passed through unchanged. The absolute value
+    matters only for *signed* instances (re-sampling a coreset whose
+    center weights went negative, as the streaming merge-and-reduce tree
+    does): masses must be a valid sampling distribution, while the
+    sample-weight formula keeps the original sign, so
+    ``E[sum_q w_q f(q)] = sum_p w_p f(p)`` still holds and the total
+    weight identity stays exact.
+
+    Trimmed objectives additionally zero both the mass *and* ``w_eff`` on
+    their top-t residual points -- downstream sampling and center
+    weighting must consume ``w_eff``, not the raw weights, so outlier mass
+    never folds back into the coreset."""
+    obj = objective_mod.get_objective(objective)
+    b = backend_mod.get_backend(backend)
+    return obj.sensitivities(b, points, centers, weights)
 
 
 def weighted_choice(key: Array, masses: Array, n_draws: int) -> Array:
@@ -149,7 +167,7 @@ def build_coreset(
     k: int,
     t: int,
     weights: Optional[Array] = None,
-    objective: str = "kmeans",
+    objective: ObjectiveLike = "kmeans",
     lloyd_iters: int = 5,
     clip_negative: bool = False,
     backend: BackendLike = None,
@@ -157,7 +175,8 @@ def build_coreset(
     """Centralized [10]-style coreset of ``t`` samples + ``k`` solution
     centers on a weighted instance. Output size t + k."""
     return _build_coreset(key, points, weights, k=k, t=t,
-                          objective=objective, lloyd_iters=lloyd_iters,
+                          objective=objective_mod.resolve_name(objective),
+                          lloyd_iters=lloyd_iters,
                           clip_negative=clip_negative,
                           backend=backend_mod.resolve_name(backend))
 
@@ -180,11 +199,11 @@ def _build_coreset(key, points, weights, k, t, objective, lloyd_iters,
     centers, _ = clustering.lloyd(points, centers, weights=w_solve,
                                   iters=lloyd_iters, objective=objective,
                                   backend=backend)
-    m, assign = sensitivities(points, centers, w, objective=objective,
-                              backend=backend)
+    m, assign, w_eff = sensitivities(points, centers, w, objective=objective,
+                                     backend=backend)
     total_m = jnp.sum(m)
     sampled, w_s, w_b = _sample_and_weight(
-        ks, points, m, w, assign, k, jnp.asarray(t), t, total_m,
+        ks, points, m, w_eff, assign, k, jnp.asarray(t), t, total_m,
         jnp.asarray(float(t)))
     if clip_negative:
         w_b = jnp.maximum(w_b, 0.0)
@@ -197,7 +216,7 @@ def merge_coresets(
     b: Coreset,
     k: int,
     t: int,
-    objective: str = "kmeans",
+    objective: ObjectiveLike = "kmeans",
     lloyd_iters: int = 5,
     backend: BackendLike = None,
 ) -> Coreset:
@@ -288,7 +307,7 @@ def distributed_coreset(
     k: int,
     t: int,
     t_buffer: Optional[int] = None,
-    objective: str = "kmeans",
+    objective: ObjectiveLike = "kmeans",
     lloyd_iters: int = 5,
     clip_negative: bool = False,
     backend: BackendLike = None,
@@ -309,12 +328,13 @@ def distributed_coreset(
     """
     t_buffer = t if t_buffer is None else t_buffer
     backend = backend_mod.resolve_name(backend)
+    objective = objective_mod.resolve_name(objective)
     n_sites = site_points.shape[0]
     w_site = (site_mask.astype(site_points.dtype) if site_weights is None
               else site_weights.astype(site_points.dtype))
     keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
 
-    centers, m, assign, local_costs = round1_local_solves(
+    centers, m, assign, local_costs, w_eff = round1_local_solves(
         keys[:, 0], site_points, w_site, k=k, objective=objective,
         lloyd_iters=lloyd_iters, backend=backend)
 
@@ -326,7 +346,7 @@ def distributed_coreset(
     t_i = proportional_allocation(local_costs, t)
 
     portions = round2_local_samples(
-        keys[:, 1], site_points, m, w_site, assign, centers, t_i,
+        keys[:, 1], site_points, m, w_eff, assign, centers, t_i,
         jnp.broadcast_to(total_m, (n_sites,)), k=k, t=t, t_buffer=t_buffer,
         clip_negative=clip_negative)
     return DistributedCoreset(points=portions.points,
@@ -340,8 +360,11 @@ def round1_local_solves(keys, site_points, w_site, k, objective, lloyd_iters,
                         backend):
     """Algorithm 1 Round 1, the purely-local stage: every site solves its
     own weighted instance. Returns (centers (n,k,d), sensitivities m (n,M),
-    assignments (n,M), local_costs (n,)) -- ``local_costs`` are the only
-    values any communication round needs to move. Shared verbatim by the
+    assignments (n,M), local_costs (n,), w_eff (n,M)) -- ``local_costs``
+    are the only values any communication round needs to move, and
+    ``w_eff`` are the objective's effective weights Round 2 must sample
+    and center-weight with (identical to ``w_site`` for plain objectives;
+    zeroed on trimmed-out points for trimmed ones). Shared verbatim by the
     host-simulation path, the topology execution engine, and the streaming
     aggregation rounds, so their numerics are identical by construction."""
 
@@ -355,30 +378,34 @@ def round1_local_solves(keys, site_points, w_site, k, objective, lloyd_iters,
         centers, _ = clustering.lloyd(pts, centers, weights=w_solve,
                                       iters=lloyd_iters, objective=objective,
                                       backend=backend)
-        m, assign = sensitivities(pts, centers, w, objective=objective,
-                                  backend=backend)
-        return centers, m, assign
+        m, assign, w_eff = sensitivities(pts, centers, w,
+                                         objective=objective,
+                                         backend=backend)
+        return centers, m, assign, w_eff
 
-    centers, m, assign = jax.vmap(local_solve)(keys, site_points, w_site)
-    return centers, m, assign, m.sum(axis=1)   # costs == cost(P_i, B_i)
+    centers, m, assign, w_eff = jax.vmap(local_solve)(
+        keys, site_points, w_site)
+    # costs == trimmed/plain cost(P_i, B_i) in the objective's own metric
+    return centers, m, assign, m.sum(axis=1), w_eff
 
 
 @functools.partial(
     jax.jit, static_argnames=("k", "t", "t_buffer", "clip_negative"))
-def round2_local_samples(keys, site_points, m, w_site, assign, centers, t_i,
+def round2_local_samples(keys, site_points, m, w_eff, assign, centers, t_i,
                          total_m, k, t, t_buffer, clip_negative):
     """Algorithm 1 Round 2, the purely-local stage: every site draws its
-    ``t_i`` samples and assembles its portion S_i u B_i. ``total_m`` is
-    per-site (n,) -- each site uses the global sensitivity total *it
-    received* (all entries are bit-identical copies on every path, but the
-    execution engine genuinely delivers one per node)."""
+    ``t_i`` samples and assembles its portion S_i u B_i. ``w_eff`` are the
+    Round-1 effective weights (raw site weights for plain objectives).
+    ``total_m`` is per-site (n,) -- each site uses the global sensitivity
+    total *it received* (all entries are bit-identical copies on every
+    path, but the execution engine genuinely delivers one per node)."""
 
     def local_sample(ki, pts, m_i, w_i, a_i, ti, tm):
         return _sample_and_weight(ki, pts, m_i, w_i, a_i, k, ti, t_buffer,
                                   tm, jnp.asarray(float(t)))
 
     sampled, w_s, w_b = jax.vmap(local_sample)(
-        keys, site_points, m, w_site, assign, t_i, total_m)
+        keys, site_points, m, w_eff, assign, t_i, total_m)
     if clip_negative:
         w_b = jnp.maximum(w_b, 0.0)
     # per-site portion S_i u B_i, stitched via the shared mask-aware union

@@ -37,7 +37,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import backend as backend_mod
 from repro.core import clustering
+from repro.core import objective as objective_mod
 from repro.core.backend import BackendLike
+from repro.core.objective import ObjectiveLike
 from repro.core.comm import (CommLedger, flood_cost, flood_portions_cost,
                              tree_allocation_cost, tree_broadcast_cost,
                              tree_up_cost)
@@ -106,7 +108,7 @@ def graph_distributed_kmeans(
     k: int,
     t: int,
     graph: Graph,
-    objective: str = "kmeans",
+    objective: ObjectiveLike = "kmeans",
     lloyd_iters: int = 8,
     backend: BackendLike = None,
     engine: str = "sim",
@@ -144,6 +146,7 @@ def graph_distributed_kmeans(
     bit-identical to the sim oracle restricted to the survivors
     (:func:`repro.wan.runtime.restricted_sim_coreset`); the measured
     ledger carries the ``staleness`` axis. Flood routing only."""
+    objective = objective_mod.resolve_name(objective)
     if faults is not None or engine == "async":
         if routing != "flood":
             raise ValueError(f"faulty/async runs support routing='flood' "
@@ -213,7 +216,7 @@ def exec_algorithm1_rounds(
     n_sites, _, d = site_points.shape
     keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
 
-    centers_l, m, assign, local_costs = round1_local_solves(
+    centers_l, m, assign, local_costs, w_eff = round1_local_solves(
         keys[:, 0], site_points, w_site, k=k, objective=objective,
         lloyd_iters=lloyd_iters, backend=backend)
 
@@ -226,7 +229,7 @@ def exec_algorithm1_rounds(
     node_totals = jax.vmap(jnp.sum)(costs_at)
 
     portions = round2_local_samples(
-        keys[:, 1], site_points, m, w_site, assign, centers_l, t_i,
+        keys[:, 1], site_points, m, w_eff, assign, centers_l, t_i,
         node_totals, k=k, t=t, t_buffer=t_buffer,
         clip_negative=clip_negative)
 
@@ -315,7 +318,7 @@ def distributed_kmeans_tree(
     k: int,
     t: int,
     tree: SpanningTree,
-    objective: str = "kmeans",
+    objective: ObjectiveLike = "kmeans",
     lloyd_iters: int = 8,
     backend: BackendLike = None,
     engine: str = "sim",
@@ -334,6 +337,7 @@ def distributed_kmeans_tree(
     reduction neither delivers them nor reproduces the host's float-exact
     total. The ledger now prices the executable gather/scatter protocol --
     the ``engine="exec"`` path runs it and measures the same numbers.)"""
+    objective = objective_mod.resolve_name(objective)
     if engine == "exec":
         return _tree_exec(key, site_points, site_mask, k, t, tree,
                           objective, lloyd_iters, backend)
@@ -385,7 +389,7 @@ def exec_algorithm1_tree_rounds(
     n_sites, _, d = site_points.shape
     keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
 
-    centers_l, m, assign, local_costs = round1_local_solves(
+    centers_l, m, assign, local_costs, w_eff = round1_local_solves(
         keys[:, 0], site_points, w_site, k=k, objective=objective,
         lloyd_iters=lloyd_iters, backend=backend)
 
@@ -400,7 +404,7 @@ def exec_algorithm1_tree_rounds(
     t_i = own_t[:, 0]
 
     portions = round2_local_samples(
-        keys[:, 1], site_points, m, w_site, assign, centers_l, t_i,
+        keys[:, 1], site_points, m, w_eff, assign, centers_l, t_i,
         node_totals[:, 0], k=k, t=t, t_buffer=t_buffer,
         clip_negative=clip_negative)
 
@@ -463,7 +467,7 @@ def spmd_distributed_kmeans_fn(
     k: int,
     t: int,
     t_buffer: int,
-    objective: str = "kmeans",
+    objective: ObjectiveLike = "kmeans",
     lloyd_iters: int = 8,
     final_lloyd_iters: int = 10,
     backend: BackendLike = None,
@@ -495,6 +499,7 @@ def spmd_distributed_kmeans_fn(
     ``shard_map``: the Pallas kernels run per-device on that device's shard.
     """
     backend = backend_mod.resolve_name(backend)
+    objective = objective_mod.resolve_name(objective)
     if collectives not in ("all_gather", "neighbor_rounds"):
         raise ValueError(f"unknown collectives {collectives!r}: expected "
                          f"'all_gather'|'neighbor_rounds'")
@@ -517,8 +522,9 @@ def spmd_distributed_kmeans_fn(
         centers, _ = clustering.lloyd(pts, centers, weights=w,
                                       iters=lloyd_iters, objective=objective,
                                       backend=backend)
-        m, assign = sensitivities(pts, centers, w, objective=objective,
-                                  backend=backend)
+        m, assign, w_eff = sensitivities(pts, centers, w,
+                                         objective=objective,
+                                         backend=backend)
         local_cost = jnp.sum(m)
         all_costs = gather(local_cost)                         # <- Round 1
         total_cost = jnp.sum(all_costs)
@@ -533,8 +539,8 @@ def spmd_distributed_kmeans_fn(
         t_total = jnp.sum(t_all).astype(pts.dtype)   # == t exactly
 
         sampled, w_s, w_b = _sample_and_weight(
-            k_sample, pts, m, w, assign, k, t_local, t_buffer, total_cost,
-            t_total)
+            k_sample, pts, m, w_eff, assign, k, t_local, t_buffer,
+            total_cost, t_total)
         portion_pts = jnp.concatenate([sampled, centers], axis=0)
         portion_w = jnp.concatenate([w_s, w_b], axis=0)
 
@@ -566,7 +572,7 @@ def spmd_distributed_kmeans(
     k: int,
     t: int,
     t_buffer: Optional[int] = None,
-    objective: str = "kmeans",
+    objective: ObjectiveLike = "kmeans",
     lloyd_iters: int = 8,
     backend: BackendLike = None,
     collectives: str = "all_gather",

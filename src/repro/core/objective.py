@@ -1,0 +1,493 @@
+"""First-class clustering objectives (DESIGN.md Sec. 15).
+
+The paper's coreset recipe is objective-generic: sensitivities, the Round-1
+constant-factor solves, and Round-2 sampling only need a per-point cost and
+a center-update rule. An :class:`Objective` is that contract as a frozen,
+hashable descriptor -- the registry maps canonical names to instances,
+mirroring :mod:`repro.core.backend`'s backend registry, and every layer
+that used to branch on ``objective == "kmeans"`` strings now consumes the
+descriptor's hooks instead.
+
+**Descriptor fields** (every hook takes the descriptor itself first, so
+parametrized instances -- trimmed count, power ``z`` -- stay plain
+module-level functions and instance equality/hashability hold):
+
+* ``power_z`` -- the ``z`` of the (k, z) objective: per-point cost is
+  ``dist^z`` (z=2 k-means, z=1 k-median).
+* ``point_cost(obj, d2)`` -- map squared distances to the objective's
+  metric (``d2`` for z=2, ``sqrt(d2)`` for z=1, ``d2^(z/2)`` otherwise;
+  the z in {1, 2} special cases are exact, not ``pow`` lowerings, so the
+  legacy formulas are reproduced bit for bit).
+* ``point_costs(obj, b, points, centers, weights)`` -- fused per-point
+  costs + assignments through a backend instance ``b``; the trimmed
+  variant zeroes the ``t`` largest-residual live points.
+* ``update_stats(obj, b, points, weights, centers)`` -- one center-update
+  pass returning ``(new_centers, cost)``: the k-means instance consumes
+  the fused ``lloyd_stats`` backend primitive, the k-median instance the
+  fused ``weiszfeld_stats`` primitive, generic powers an IRLS pass, and
+  the trimmed instance a two-pass trim-then-``lloyd_stats`` (DESIGN.md
+  Sec. 15).
+* ``sensitivity_rule(obj, b, points, centers, weights)`` -- the paper's
+  per-point sampling mass ``m_p`` plus the *effective weights* downstream
+  stages must use (``w`` unchanged for plain objectives; zeroed on
+  trimmed-out points so outliers are never sampled and never pollute the
+  coreset's center weights).
+* ``seeding_mass(obj, w, mind)`` -- the D^z seeding distribution of one
+  k-means++ step (trimmed: the current top-``t`` residuals carry zero
+  seeding mass, so seeds avoid far-field outliers).
+* ``validate(obj)`` -- parameter validation, run at construction.
+
+**Registry resolution rules**: public APIs keep accepting strings.
+:func:`resolve_name` maps a selection (name, :class:`Objective` instance,
+or ``None`` for ``"kmeans"``) to a canonical registry name -- suitable as
+a static jit argument, exactly like ``backend.resolve_name`` -- and
+**raises ValueError on unknown names** listing the registered ones (the
+legacy string branches silently mis-dispatched typos like ``"kmeans "``).
+Parametrized names round-trip: ``kmeans_trimmed(16)`` registers itself
+under ``"kmeans_trimmed(16)"`` and resolving that string re-derives the
+instance through the factory, so tree configs and serve bucket keys can
+carry the plain name.
+
+**Bit-compat discipline**: the ``"kmeans"`` / ``"kmedian"`` instances are
+the exact legacy code paths (same primitives, same formula shapes, same
+clamp placement), so every existing caller gets bit-identical centers,
+coresets, and ledgers through the descriptor indirection.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import re
+from typing import Callable, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import WEISZFELD_ETA2
+
+Array = jax.Array
+
+_EPS = 1e-12
+
+# Weiszfeld refinement passes per k-median update step (the fused
+# assign+refine composition of DESIGN.md Sec. 10).
+WEISZFELD_ITERS = 4
+
+
+# ---------------------------------------------------------------------------
+# trimming (shared by the trimmed hooks)
+# ---------------------------------------------------------------------------
+
+def resolve_trim_count(obj: "Objective", live_count: Array) -> Array:
+    """The number of points this trimmed instance excludes, as a traced
+    int32: an integer ``t_outliers`` is an absolute count, a float in
+    (0, 1) a fraction of the *live* (weight-carrying) slots -- the natural
+    parametrization when the same descriptor drives per-site solves and
+    the final coreset solve, whose live counts differ by orders of
+    magnitude. Clamped to ``[0, live_count]``."""
+    t = obj.t_outliers
+    if isinstance(t, float) and 0.0 < t < 1.0:
+        te = jnp.floor(t * live_count.astype(jnp.float32) + 0.5)
+        te = te.astype(jnp.int32)
+    else:
+        te = jnp.asarray(int(t), jnp.int32)
+    return jnp.clip(te, 0, live_count.astype(jnp.int32))
+
+
+def trim_mask(obj: "Objective", resid: Array, weights: Optional[Array]
+              ) -> Array:
+    """Keep-mask (n,) bool: False exactly on the ``t`` largest-residual
+    *live* slots (``weights != 0``; padding and vacated slots are never
+    counted against the budget). Rank-based -- a double argsort over the
+    (n,) residual vector, never an (n, k) materialization -- so exactly
+    ``t`` points are trimmed even under ties (deterministic index
+    tie-break), and the count stays correct when ``t`` is traced
+    (fractional trimming)."""
+    if weights is None:
+        live = jnp.ones(resid.shape, bool)
+    else:
+        live = weights != 0.0
+    t_eff = resolve_trim_count(obj, jnp.sum(live))
+    # descending residual order with dead slots last; rank[i] = position
+    order = jnp.argsort(jnp.where(live, -resid, jnp.inf))
+    rank = jnp.argsort(order)
+    return rank >= t_eff
+
+
+# ---------------------------------------------------------------------------
+# default hook implementations (module-level: instances built from the same
+# parameters compare/hash equal, which jit static arguments rely on)
+# ---------------------------------------------------------------------------
+
+def _pow_point_cost(obj: "Objective", d2: Array) -> Array:
+    """d2 -> per-point cost in the (k, z) metric. z in {1, 2} reproduce
+    the legacy formulas exactly (identity / ``jnp.sqrt``, never a ``pow``
+    lowering)."""
+    z = obj.power_z
+    if z == 2.0:
+        return d2
+    if z == 1.0:
+        return jnp.sqrt(d2)
+    return jnp.power(jnp.maximum(d2, 0.0), 0.5 * z)
+
+
+def _plain_point_costs(obj, b, points, centers, weights
+                       ) -> Tuple[Array, Array]:
+    d2, assign = b.min_dist_argmin(points, centers)
+    return obj.point_cost(obj, d2), assign
+
+
+def _trimmed_point_costs(obj, b, points, centers, weights
+                         ) -> Tuple[Array, Array]:
+    """Per-point costs with the top-``t`` residual live points zeroed --
+    one fused assignment pass plus an (n,)-shaped rank, no (n, k)
+    materialization."""
+    d2, assign = b.min_dist_argmin(points, centers)
+    keep = trim_mask(obj, d2, weights)
+    return jnp.where(keep, obj.point_cost(obj, d2), 0.0), assign
+
+
+def _kmeans_update_stats(obj, b, points, weights, centers
+                         ) -> Tuple[Array, Array]:
+    """One weighted Lloyd step: a single fused statistics pass
+    (assignment + per-cluster sums/counts + cost) through the backend's
+    ``lloyd_stats`` primitive."""
+    sums, counts, c = b.lloyd_stats(points, centers, weights)
+    new = sums / jnp.where(counts > _EPS, counts, 1.0)[:, None]
+    new = jnp.where((counts > _EPS)[:, None], new,
+                    centers.astype(jnp.float32))
+    return new.astype(centers.dtype), c
+
+
+def _weiszfeld_update_stats(obj, b, points, weights, centers
+                            ) -> Tuple[Array, Array]:
+    """One weighted alternating k-median step: ``WEISZFELD_ITERS`` fused
+    refinement passes through the backend's ``weiszfeld_stats`` primitive.
+
+    Each pass assigns every point to its nearest current center and applies
+    one Weiszfeld geometric-median update to each cluster -- both the
+    reassignment and the Weiszfeld step (an MM step for the Fermat-Weber
+    objective) are non-increasing in k-median cost, so the composition is
+    monotone. Membership mass is max(w, 0) (signed coreset measures must
+    not pull medians toward negative mass); the returned cost is the signed
+    assignment cost at the *incoming* centers, matching the k-means update's
+    history semantics."""
+
+    def wstep(y):
+        nums, denoms, c = b.weiszfeld_stats(points, y, weights)
+        ynew = nums / jnp.where(denoms > _EPS, denoms, 1.0)[:, None]
+        ynew = jnp.where((denoms > _EPS)[:, None], ynew,
+                         y.astype(jnp.float32))
+        return ynew.astype(centers.dtype), c
+
+    new, c = wstep(centers)
+    new = jax.lax.fori_loop(1, WEISZFELD_ITERS,
+                            lambda _, y: wstep(y)[0], new)
+    return new, c
+
+
+def _power_update_stats(obj, b, points, weights, centers
+                        ) -> Tuple[Array, Array]:
+    """Generic (k, z) IRLS update: one fused assignment pass, then the
+    gradient-stationary weighted mean with per-point IRLS mass
+    ``max(w, 0) * (d2 + eta^2)^((z-2)/2)`` -- z=2 reduces to the plain
+    mean, z=1 to the eta-smoothed Weiszfeld step (those two route to the
+    fused primitives instead; this path serves arbitrary z). The one-hot
+    reduction materializes (n, k) in XLA, so arbitrary z is a
+    dense-formulation feature; the cost is the signed, unsmoothed
+    ``sum w * d2^(z/2)`` at the incoming centers. An MM-monotone step for
+    z in (0, 2]; for z > 2 it is the natural fixed-point heuristic."""
+    d2, assign = b.min_dist_argmin(points, centers)
+    p = points.astype(jnp.float32)
+    w = weights.astype(jnp.float32)
+    cost = jnp.sum(w * obj.point_cost(obj, d2))
+    iw = jnp.maximum(w, 0.0) * jnp.power(d2 + WEISZFELD_ETA2,
+                                         0.5 * (obj.power_z - 2.0))
+    k = centers.shape[0]
+    oh = jax.nn.one_hot(assign, k, dtype=jnp.float32) * iw[:, None]
+    nums = oh.T @ p
+    denoms = jnp.sum(oh, axis=0)
+    new = nums / jnp.where(denoms > _EPS, denoms, 1.0)[:, None]
+    new = jnp.where((denoms > _EPS)[:, None], new,
+                    centers.astype(jnp.float32))
+    return new.astype(centers.dtype), cost
+
+
+def _trimmed_update_stats(obj, b, points, weights, centers
+                          ) -> Tuple[Array, Array]:
+    """One trimmed Lloyd step, two fused passes on every backend: pass 1
+    (``min_dist_argmin``) finds the per-point residuals that rank the
+    top-``t`` outliers, pass 2 (``lloyd_stats``) re-runs the fused
+    statistics with those points' weights zeroed -- excluded from the
+    sums, the counts, and the reported cost alike. No (n, k) matrix ever
+    materializes; on the Pallas backend this is the documented two-pass
+    form (DESIGN.md Sec. 15)."""
+    d2, _ = b.min_dist_argmin(points, centers)
+    keep = trim_mask(obj, d2, weights)
+    w_t = jnp.where(keep, weights, 0.0)
+    sums, counts, c = b.lloyd_stats(points, centers, w_t)
+    new = sums / jnp.where(counts > _EPS, counts, 1.0)[:, None]
+    new = jnp.where((counts > _EPS)[:, None], new,
+                    centers.astype(jnp.float32))
+    return new.astype(centers.dtype), c
+
+
+def _plain_sensitivities(obj, b, points, centers, weights
+                         ) -> Tuple[Array, Array, Array]:
+    """The paper's m_p = |w_p| * cost(p, B) (absolute value: signed
+    streaming summaries need a valid sampling distribution; DESIGN.md
+    Sec. 9) with the weights passed through unchanged."""
+    c, assign = obj.point_costs(obj, b, points, centers, weights)
+    return jnp.abs(weights) * c, assign, weights
+
+
+def _trimmed_sensitivities(obj, b, points, centers, weights
+                           ) -> Tuple[Array, Array, Array]:
+    """Trimmed sampling masses: the top-``t`` residual points carry zero
+    mass (never sampled into the coreset) AND zero effective weight, so
+    their mass does not land on their assigned center's ``w_b`` either --
+    the trimmed coreset genuinely drops the outliers instead of folding
+    them back in through the center-weight identity."""
+    d2, assign = b.min_dist_argmin(points, centers)
+    keep = trim_mask(obj, d2, weights)
+    w_eff = jnp.where(keep, weights, 0.0)
+    return jnp.abs(w_eff) * obj.point_cost(obj, d2), assign, w_eff
+
+
+def _plain_seeding_mass(obj, w, mind) -> Array:
+    return w * mind
+
+
+def _trimmed_seeding_mass(obj, w, mind) -> Array:
+    """D^2 seeding mass with the current top-``t`` residuals zeroed: far-
+    field outliers otherwise dominate the D^2 distribution (a 5% fraction
+    at 10x radius carries ~80% of the mass) and seeds land on exactly the
+    points the update pass will trim."""
+    keep = trim_mask(obj, mind, w)
+    return w * jnp.where(keep, mind, 0.0)
+
+
+def _plain_validate(obj) -> None:
+    if not obj.power_z > 0.0:
+        raise ValueError(f"objective power_z must be > 0, got "
+                         f"{obj.power_z}")
+    if obj.t_outliers:
+        raise ValueError(f"objective {obj.name!r} does not support "
+                         f"t_outliers (use kmeans_trimmed)")
+
+
+def _trimmed_validate(obj) -> None:
+    t = obj.t_outliers
+    bad = (t < 0 or (isinstance(t, float)
+                     and not (0.0 < t < 1.0) and t != 0.0))
+    if bad:
+        raise ValueError(
+            f"t_outliers must be a non-negative integer count or a "
+            f"fraction in (0, 1), got {t!r}")
+
+
+# ---------------------------------------------------------------------------
+# the descriptor
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """A registered (k, z) clustering objective. Frozen and hashable --
+    instances are valid static jit arguments, though the plumbing passes
+    canonical *names* (resolved once at the public boundary) exactly like
+    the backend registry does."""
+
+    name: str
+    power_z: float = 2.0
+    t_outliers: Union[int, float] = 0
+    point_cost: Callable = _pow_point_cost
+    update_stats: Optional[Callable] = None
+    point_costs: Callable = _plain_point_costs
+    sensitivity_rule: Callable = _plain_sensitivities
+    seeding_mass: Callable = _plain_seeding_mass
+    validate: Callable = _plain_validate
+
+    def __post_init__(self):
+        if self.update_stats is None:
+            upd = (_kmeans_update_stats if self.power_z == 2.0 else
+                   _weiszfeld_update_stats if self.power_z == 1.0 else
+                   _power_update_stats)
+            object.__setattr__(self, "update_stats", upd)
+        self.validate(self)
+
+    # -- convenience wrappers (hooks take the descriptor first) --------------
+
+    def per_point_cost(self, d2: Array) -> Array:
+        """Raw metric map d2 -> cost (no clamp: callers that feed backend
+        outputs rely on the backend's own nonnegativity contract)."""
+        return self.point_cost(self, d2)
+
+    def clamped_cost(self, d2: Array) -> Array:
+        """Metric map with a defensive clamp for the z != 2 branches --
+        the exact formula the legacy seeding and query paths used
+        (``d2`` unchanged for z=2, ``point_cost(max(d2, 0))`` otherwise),
+        preserved bit for bit."""
+        if self.power_z == 2.0:
+            return d2
+        return self.point_cost(self, jnp.maximum(d2, 0.0))
+
+    def costs(self, b, points: Array, centers: Array,
+              weights: Optional[Array] = None) -> Tuple[Array, Array]:
+        """Fused per-point costs + assignments via backend ``b``."""
+        return self.point_costs(self, b, points, centers, weights)
+
+    def update(self, b, points: Array, weights: Array, centers: Array
+               ) -> Tuple[Array, Array]:
+        """One center-update pass: (new_centers, cost-at-incoming)."""
+        return self.update_stats(self, b, points, weights, centers)
+
+    def sensitivities(self, b, points: Array, centers: Array,
+                      weights: Array) -> Tuple[Array, Array, Array]:
+        """(m, assign, w_eff): sampling masses, assignments, and the
+        effective weights Round-2 sampling / center-weighting must use."""
+        return self.sensitivity_rule(self, b, points, centers, weights)
+
+    def seeding(self, w: Array, mind: Array) -> Array:
+        """Seeding mass of one k-means++ step."""
+        return self.seeding_mass(self, w, mind)
+
+
+# ---------------------------------------------------------------------------
+# registry + factories
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Objective] = {}
+
+ObjectiveLike = Union[str, Objective, None]
+
+
+def register_objective(obj: Objective) -> Objective:
+    """Add an objective to the registry (a new robust or power objective is
+    one ``register_objective`` call). Re-registering the *same* instance
+    (or an equal one) is a no-op; shadowing a name with a different
+    objective raises -- jitted entry points cache compiled traces keyed on
+    the name, so a silent swap would serve stale numerics."""
+    existing = _REGISTRY.get(obj.name)
+    if existing is not None and existing != obj:
+        raise ValueError(
+            f"a different objective is already registered as {obj.name!r}; "
+            f"give this instance a unique name")
+    _REGISTRY[obj.name] = obj
+    return obj
+
+
+def available_objectives() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+KMEANS = register_objective(Objective(name="kmeans", power_z=2.0))
+KMEDIAN = register_objective(Objective(name="kmedian", power_z=1.0))
+
+
+def _canonical_count(t: Union[int, float]) -> Union[int, float]:
+    """16.0 and 16 are the same trim budget; fold to int so the factory
+    cache and the registered name agree."""
+    if isinstance(t, float) and t.is_integer() and not 0.0 < t < 1.0:
+        return int(t)
+    return t
+
+
+@functools.lru_cache(maxsize=None)
+def _kmeans_trimmed(t: Union[int, float]) -> Objective:
+    return register_objective(Objective(
+        name=f"kmeans_trimmed({t:g})", power_z=2.0, t_outliers=t,
+        update_stats=_trimmed_update_stats,
+        point_costs=_trimmed_point_costs,
+        sensitivity_rule=_trimmed_sensitivities,
+        seeding_mass=_trimmed_seeding_mass,
+        validate=_trimmed_validate))
+
+
+def kmeans_trimmed(t_outliers: Union[int, float]) -> Objective:
+    """Trimmed outlier-robust k-means: cost, update statistics, seeding
+    mass, and sampling sensitivities all exclude the ``t_outliers``
+    largest-residual live points (an integer count, or a float in (0, 1)
+    for a fraction of the live slots). Registered under
+    ``kmeans_trimmed(<t>)`` so the name round-trips through tree configs,
+    jit static arguments, and serve bucket keys."""
+    return _kmeans_trimmed(_canonical_count(t_outliers))
+
+
+@functools.lru_cache(maxsize=None)
+def _power(z: float) -> Objective:
+    return register_objective(Objective(name=f"power({z:g})", power_z=z))
+
+
+def power_objective(z: float) -> Objective:
+    """Generalized (k, z) power-cost objective: per-point cost
+    ``dist^z``. z=1 and z=2 share the exact fused k-median / k-means code
+    paths (bit-identical costs and updates); other z run the IRLS update
+    of :func:`_power_update_stats` (dense-formulation reduction)."""
+    return _power(float(z))
+
+
+_PARAM_NAME = re.compile(
+    r"^(?P<factory>[a-z][a-z0-9_]*)\((?P<arg>[-+]?[0-9.eE+-]+)\)$")
+
+_FACTORIES: Dict[str, Callable] = {
+    "kmeans_trimmed": kmeans_trimmed,
+    "power": power_objective,
+}
+
+
+def _parse_number(s: str) -> Union[int, float]:
+    try:
+        return int(s)
+    except ValueError:
+        return float(s)
+
+
+def _resolve_parametrized(name: str) -> Optional[Objective]:
+    m = _PARAM_NAME.match(name)
+    if m is None:
+        return None
+    factory = _FACTORIES.get(m.group("factory"))
+    if factory is None:
+        return None
+    try:
+        obj = factory(_parse_number(m.group("arg")))
+    except ValueError:
+        return None
+    # only accept round-trips: "kmeans_trimmed(2.0)" must not silently
+    # alias the canonical "kmeans_trimmed(2)" under a second jit cache key
+    return obj if obj.name == name else None
+
+
+def resolve_name(objective: ObjectiveLike) -> str:
+    """Resolve a selection (canonical name, :class:`Objective` instance,
+    or ``None`` for the k-means default) to a registry name, raising
+    ``ValueError`` on unknown strings. This is the single boundary where
+    the legacy string API meets the descriptor layer: every public entry
+    point resolves here once, then threads the canonical name through its
+    static jit arguments."""
+    if objective is None:
+        return KMEANS.name
+    if isinstance(objective, Objective):
+        return register_objective(objective).name
+    if not isinstance(objective, str):
+        raise TypeError(f"objective must be a name or Objective, got "
+                        f"{type(objective).__name__}")
+    if objective in _REGISTRY:
+        return objective
+    obj = _resolve_parametrized(objective)
+    if obj is not None:
+        return obj.name
+    raise ValueError(
+        f"unknown objective {objective!r}; known objectives: "
+        f"{', '.join(available_objectives())} (plus parametrized "
+        f"'kmeans_trimmed(<t>)' / 'power(<z>)')")
+
+
+def get_objective(objective: ObjectiveLike = None) -> Objective:
+    """Resolve a selection to the descriptor instance. Pure registry
+    lookup for already-canonical names -- safe at trace time inside jitted
+    functions, exactly like ``backend.get_backend``."""
+    if isinstance(objective, Objective):
+        register_objective(objective)
+        return objective
+    return _REGISTRY[resolve_name(objective)]

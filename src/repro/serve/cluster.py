@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import backend as backend_mod
+from repro.core import objective as objective_mod
 from repro.kernels.ops import query_bucket
 
 Array = jax.Array
@@ -179,10 +180,15 @@ class ClusterServeEngine:
 
     # -- tenant admission ----------------------------------------------------
 
-    def add_tenant(self, source, k: int, d: int, objective: str = "kmeans",
+    def add_tenant(self, source, k: int, d: int,
+                   objective: objective_mod.ObjectiveLike = "kmeans",
                    tenant_id: Optional[int] = None) -> int:
         """Register a center source serving ``k`` centers in R^``d``.
+        ``objective`` is any registered objective (name or instance; unknown
+        names raise here, before any traffic) -- its *canonical* name rides
+        in the bucket/grouping keys and picks the query-distance metric.
         Returns the tenant id (auto-assigned when not given)."""
+        objective = objective_mod.resolve_name(objective)
         if tenant_id is None:
             while self._next_tid in self._tenants:
                 self._next_tid += 1

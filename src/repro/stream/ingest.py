@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core import backend as backend_mod
 from repro.core import clustering
+from repro.core import objective as objective_mod
 from repro.core.comm import (CommLedger, flood_cost, flood_portions_cost,
                              link_cost_of, tree_allocation_cost,
                              tree_broadcast_cost, tree_gather_cost,
@@ -126,9 +127,11 @@ class DistributedStream:
         self.graph = graph
         # freeze the ambient backend now, like the per-site trees do --
         # otherwise a later aggregate() could resolve a different ambient
-        # default than the pushes ran under
+        # default than the pushes ran under; the objective resolves through
+        # its registry too (unknown names fail loudly before any push)
         self.config = dataclasses.replace(
-            config, backend=backend_mod.resolve_name(config.backend))
+            config, backend=backend_mod.resolve_name(config.backend),
+            objective=objective_mod.resolve_name(config.objective))
         self.sites: List[StreamState] = [
             StreamState(config, key=jax.random.fold_in(key, i))
             for i in range(graph.n)

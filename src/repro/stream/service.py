@@ -223,7 +223,8 @@ class ClusterQueryService:
 
     def query(self, points) -> Tuple[Array, Array]:
         """Batched nearest-center query: (n, d) -> (assign (n,) i32,
-        dist (n,) f32; squared for k-means, euclidean for k-median).
+        dist (n,) f32 in the stream objective's metric: squared for z=2 --
+        including trimmed objectives -- euclidean for z=1).
         An empty batch returns empty arrays (and costs no solve/refresh).
 
         Delegates to the serving engine (enqueue + step until this ticket

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import backend as backend_mod
+from repro.core import objective as objective_mod
 from repro.core.backend import BackendLike
 from repro.core.coreset import Coreset, build_coreset, merge_coresets
 
@@ -50,7 +51,7 @@ class TreeConfig:
     d: int                     # point dimensionality
     batch_size: int            # points per ingested batch (fixed shape)
     levels: int = 24           # >= log2(#batches); 24 ~ 16M batches
-    objective: str = "kmeans"
+    objective: str = "kmeans"  # any registered objective name
     lloyd_iters: int = 5
     backend: Optional[str] = None   # resolved at tree construction
 
@@ -66,8 +67,11 @@ class CoresetTree:
     def __init__(self, config: TreeConfig, key: Optional[Array] = None):
         if config.levels < 1:
             raise ValueError("need at least one level")
+        # resolve both registries once: unknown names fail loudly here, and
+        # every jitted stage below sees the canonical static strings
         self.config = dataclasses.replace(
-            config, backend=backend_mod.resolve_name(config.backend))
+            config, backend=backend_mod.resolve_name(config.backend),
+            objective=objective_mod.resolve_name(config.objective))
         s = config.slot
         self._points = jnp.zeros((config.levels, s, config.d), jnp.float32)
         self._weights = jnp.zeros((config.levels, s), jnp.float32)

@@ -314,7 +314,7 @@ def async_algorithm1_rounds(
     surv = plan.surviving_nodes(n_sites)
     keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
 
-    centers_l, m, assign, local_costs = round1_local_solves(
+    centers_l, m, assign, local_costs, w_eff = round1_local_solves(
         keys[:, 0], site_points, w_site, k=k, objective=objective,
         lloyd_iters=lloyd_iters, backend=backend)
 
@@ -331,7 +331,7 @@ def async_algorithm1_rounds(
     node_totals = jax.vmap(jnp.sum)(costs_at)
 
     portions = round2_local_samples(
-        keys[surv, 1], site_points[surv], m[surv], w_site[surv],
+        keys[surv, 1], site_points[surv], m[surv], w_eff[surv],
         assign[surv], centers_l[surv], t_i, node_totals, k=k, t=t,
         t_buffer=t_buffer, clip_negative=clip_negative)
 
@@ -382,7 +382,7 @@ def restricted_sim_coreset(
     keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
     w_site = site_mask.astype(site_points.dtype)
 
-    centers_l, m, assign, local_costs = round1_local_solves(
+    centers_l, m, assign, local_costs, w_eff = round1_local_solves(
         keys[:, 0], site_points, w_site, k=k, objective=objective,
         lloyd_iters=lloyd_iters, backend=backend)
 
@@ -393,7 +393,7 @@ def restricted_sim_coreset(
 
     portions = round2_local_samples(
         keys[surviving, 1], site_points[surviving], m[surviving],
-        w_site[surviving], assign[surviving], centers_l[surviving], t_i,
+        w_eff[surviving], assign[surviving], centers_l[surviving], t_i,
         totals, k=k, t=t, t_buffer=t_buffer, clip_negative=clip_negative)
     pts = portions.points.reshape(-1, d)
     w = portions.weights.reshape(-1)

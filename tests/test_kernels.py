@@ -125,12 +125,12 @@ def test_lloyd_stats_large_k_fallback_path():
 
 
 def test_lloyd_step_matches_clustering_update():
-    from repro.core import backend, clustering
+    from repro.core import backend, objective
     pts, ctr, w = _data(300, 8, 16, jnp.float32)
     new_k, cost_k = ops.lloyd_step(pts, ctr, w)
     # one reference weighted Lloyd step through the jnp dispatch backend
-    new_r, cost_r = clustering._kmeans_update(pts, w, ctr, 8,
-                                              backend.get_backend("jnp"))
+    new_r, cost_r = objective.KMEANS.update(backend.get_backend("jnp"),
+                                            pts, w, ctr)
     np.testing.assert_allclose(np.asarray(new_k), np.asarray(new_r),
                                rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(float(cost_k), float(cost_r), rtol=1e-4)

@@ -1,0 +1,345 @@
+"""First-class objective layer (DESIGN.md Sec. 15).
+
+Covers the registry boundary (unknown names raise with the known names
+listed -- the legacy string branches silently mis-dispatched typos), the
+bit-compat discipline (z=1/z=2 power objectives equal the legacy
+kmedian/kmeans paths bit for bit across backends; trimmed at t=0 equals
+untrimmed), the trimmed objective's semantics (monotone non-increasing in
+t, outlier mass excluded from coresets), and the contamination acceptance
+test: on PR 7's ``contaminated_stream`` the trimmed objective recovers the
+clean-stream cost where plain k-means is destroyed, for both the sim and
+exec aggregation engines and all three backends.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import backend as backend_mod
+from repro.core import clustering, objective, topology
+from repro.core.coreset import build_coreset, sensitivities
+from repro.core.distributed import graph_distributed_kmeans
+from repro.data.synthetic import contaminated_stream, drifting_mixture_stream
+from repro.serve.cluster import ClusterServeEngine, StaticCenters
+from repro.stream.ingest import DistributedStream
+from repro.stream.tree import CoresetTree, TreeConfig
+
+BACKENDS = ("jnp", "jnp_chunked", "pallas")
+
+
+@pytest.fixture(scope="module")
+def outlier_mixture():
+    """3 tight clusters + 10 far-field outliers (n=160, d=2)."""
+    rng = np.random.default_rng(0)
+    centers = np.array([[0, 0], [10, 0], [0, 10]], np.float32)
+    pts = np.concatenate(
+        [centers[i] + 0.3 * rng.standard_normal((50, 2)) for i in range(3)]
+        + [100.0 * rng.standard_normal((10, 2))]).astype(np.float32)
+    return jnp.asarray(pts)
+
+
+# ---------------------------------------------------------------------------
+# registry boundary (satellite: unknown strings must raise, not mis-dispatch)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", ["kmeans ", "median", "kmens", "KMEANS",
+                                 "kmeans_trimmed", "power(0)", "power(-1)",
+                                 "kmeans_trimmed(-3)"])
+def test_unknown_objective_raises_with_known_names(bad):
+    with pytest.raises(ValueError, match="unknown objective"):
+        objective.resolve_name(bad)
+    with pytest.raises(ValueError, match="kmedian"):
+        # the error must list the registered names
+        objective.resolve_name(bad)
+
+
+def test_unknown_objective_raises_at_every_public_boundary(outlier_mixture):
+    pts = outlier_mixture
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="unknown objective"):
+        clustering.solve(key, pts, 3, objective="kmeans ")
+    with pytest.raises(ValueError, match="unknown objective"):
+        clustering.cost(pts, pts[:3], objective="median")
+    with pytest.raises(ValueError, match="unknown objective"):
+        clustering.kmeans_pp_init(key, pts, 3, objective="kmens")
+    with pytest.raises(ValueError, match="unknown objective"):
+        build_coreset(key, pts, 3, 16, objective="kmeanss")
+    with pytest.raises(ValueError, match="unknown objective"):
+        backend_mod.query_assignments(pts, pts[:3], objective=" kmedian")
+    with pytest.raises(ValueError, match="unknown objective"):
+        CoresetTree(TreeConfig(k=3, t=8, d=2, batch_size=16,
+                               objective="kmean"))
+    with pytest.raises(ValueError, match="unknown objective"):
+        ClusterServeEngine().add_tenant(StaticCenters(pts[:3]), k=3, d=2,
+                                        objective="kmeans!")
+    sp = pts[:160].reshape(4, 40, 2)
+    with pytest.raises(ValueError, match="unknown objective"):
+        graph_distributed_kmeans(key, sp, jnp.ones((4, 40), bool), 3, 16,
+                                 topology.ring(4), objective="kmedian ")
+
+
+def test_parametrized_names_round_trip():
+    obj = objective.kmeans_trimmed(16)
+    assert obj.name == "kmeans_trimmed(16)"
+    assert objective.resolve_name("kmeans_trimmed(16)") == obj.name
+    assert objective.get_objective("kmeans_trimmed(16)") is obj
+    # float count folds to the int spelling; fractions keep theirs
+    assert objective.kmeans_trimmed(16.0) is obj
+    frac = objective.kmeans_trimmed(0.05)
+    assert frac.name == "kmeans_trimmed(0.05)"
+    assert objective.get_objective("kmeans_trimmed(0.05)") is frac
+    pw = objective.power_objective(3)
+    assert pw.name == "power(3)"
+    assert objective.resolve_name(pw) == "power(3)"
+    # instances are accepted anywhere a name is
+    assert objective.resolve_name(objective.KMEANS) == "kmeans"
+
+
+def test_register_conflicting_name_raises():
+    other = objective.Objective(name="kmeans_conflict_probe", power_z=2.0)
+    objective.register_objective(other)
+    clone = objective.Objective(name="kmeans_conflict_probe", power_z=2.0)
+    # equal instance: no-op re-register
+    objective.register_objective(clone)
+    different = objective.Objective(name="kmeans_conflict_probe",
+                                    power_z=1.0)
+    with pytest.raises(ValueError, match="already registered"):
+        objective.register_objective(different)
+
+
+def test_invalid_trim_parameters_raise():
+    with pytest.raises(ValueError, match="t_outliers"):
+        objective.kmeans_trimmed(-1)
+    with pytest.raises(ValueError, match="t_outliers"):
+        objective.kmeans_trimmed(2.5)
+    with pytest.raises(ValueError):
+        objective.power_objective(0.0)
+
+
+# ---------------------------------------------------------------------------
+# bit-compat discipline (satellite: hypothesis properties)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       z=st.sampled_from([1, 2]),
+       backend=st.sampled_from(BACKENDS))
+def test_power_z12_bit_identical_to_legacy(seed, z, backend):
+    rng = np.random.default_rng(seed)
+    pts = jnp.asarray(rng.standard_normal((120, 5)).astype(np.float32))
+    w = jnp.asarray(np.abs(rng.standard_normal(120)).astype(np.float32))
+    key = jax.random.PRNGKey(seed)
+    legacy = "kmeans" if z == 2 else "kmedian"
+    c_p, cost_p = clustering.solve(key, pts, 4, weights=w, lloyd_iters=3,
+                                   objective=f"power({z})", backend=backend)
+    c_l, cost_l = clustering.solve(key, pts, 4, weights=w, lloyd_iters=3,
+                                   objective=legacy, backend=backend)
+    np.testing.assert_array_equal(np.asarray(c_p), np.asarray(c_l))
+    assert float(cost_p) == float(cost_l)
+    cs_p = build_coreset(key, pts, 4, 16, weights=w,
+                         objective=f"power({z})", backend=backend)
+    cs_l = build_coreset(key, pts, 4, 16, weights=w, objective=legacy,
+                         backend=backend)
+    np.testing.assert_array_equal(np.asarray(cs_p.points),
+                                  np.asarray(cs_l.points))
+    np.testing.assert_array_equal(np.asarray(cs_p.weights),
+                                  np.asarray(cs_l.weights))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_trimmed_t0_equals_untrimmed_bitwise(seed):
+    rng = np.random.default_rng(seed)
+    pts = jnp.asarray(rng.standard_normal((100, 4)).astype(np.float32))
+    key = jax.random.PRNGKey(seed)
+    c_t, cost_t = clustering.solve(key, pts, 3, lloyd_iters=4,
+                                   objective="kmeans_trimmed(0)")
+    c_u, cost_u = clustering.solve(key, pts, 3, lloyd_iters=4,
+                                   objective="kmeans")
+    np.testing.assert_array_equal(np.asarray(c_t), np.asarray(c_u))
+    assert float(cost_t) == float(cost_u)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       t_lo=st.integers(0, 10), t_delta=st.integers(1, 20))
+def test_trimmed_cost_monotone_nonincreasing_in_t(seed, t_lo, t_delta):
+    """At FIXED centers, trimming more points can only drop cost: the
+    trimmed cost sums the n - t smallest residuals."""
+    rng = np.random.default_rng(seed)
+    pts = jnp.asarray(rng.standard_normal((80, 3)).astype(np.float32))
+    centers = pts[:4]
+    c_lo = float(clustering.cost(
+        pts, centers, objective=f"kmeans_trimmed({t_lo})"))
+    c_hi = float(clustering.cost(
+        pts, centers, objective=f"kmeans_trimmed({t_lo + t_delta})"))
+    c_un = float(clustering.cost(pts, centers, objective="kmeans"))
+    assert c_hi <= c_lo <= c_un
+
+
+def test_trimmed_cost_excludes_exactly_t_largest(outlier_mixture):
+    """Trimmed per-point costs zero exactly the t largest residuals (ties
+    broken deterministically), on every backend."""
+    pts = outlier_mixture
+    centers = pts[:3]
+    for be in BACKENDS:
+        full, _ = clustering.point_costs(pts, centers, objective="kmeans",
+                                         backend=be)
+        trimmed, _ = clustering.point_costs(
+            pts, centers, objective="kmeans_trimmed(10)", backend=be)
+        full = np.asarray(full)
+        trimmed = np.asarray(trimmed)
+        zeroed = np.flatnonzero((trimmed == 0.0) & (full > 0.0))
+        assert zeroed.size == 10
+        kept_max = full[trimmed > 0.0].max() if (trimmed > 0.0).any() else 0
+        assert full[zeroed].min() >= kept_max
+        assert trimmed.sum() <= full.sum()
+
+
+def test_trimmed_fractional_t_counts_live_slots_only():
+    """t as a fraction is taken of the *live* (weight != 0) slots, so
+    padding never eats the trim budget."""
+    rng = np.random.default_rng(1)
+    pts = jnp.asarray(rng.standard_normal((50, 3)).astype(np.float32))
+    w = jnp.ones((50,), jnp.float32).at[40:].set(0.0)   # 40 live, 10 pad
+    obj = objective.kmeans_trimmed(0.25)
+    keep = objective.trim_mask(obj, jnp.arange(50, dtype=jnp.float32), w)
+    keep = np.asarray(keep)
+    # 25% of 40 live = 10 trimmed, all from the live largest residuals
+    assert (~keep).sum() == 10
+    assert np.array_equal(np.flatnonzero(~keep), np.arange(30, 40))
+    del pts
+
+
+def test_trimmed_sensitivities_zero_outlier_mass(outlier_mixture):
+    pts = outlier_mixture
+    w = jnp.ones((pts.shape[0],), jnp.float32)
+    centers = pts[:3]
+    m, _, w_eff = sensitivities(pts, centers, w,
+                                objective="kmeans_trimmed(10)")
+    assert int(jnp.sum(w_eff == 0.0)) == 10
+    assert float(m[np.asarray(w_eff) == 0.0].sum()) == 0.0
+    # plain objectives pass the weights through untouched (bit-identity)
+    m2, _, w_eff2 = sensitivities(pts, centers, w, objective="kmeans")
+    assert w_eff2 is w
+    assert float(jnp.sum(m2 > 0.0)) > 0
+
+
+def test_trimmed_coreset_drops_outlier_weight(outlier_mixture):
+    """Total coreset weight equals the inlier count: the 10 outliers'
+    mass is genuinely excluded, not folded into center weights."""
+    pts = outlier_mixture
+    cs = build_coreset(jax.random.PRNGKey(0), pts, 3, 32,
+                       objective="kmeans_trimmed(10)")
+    assert float(cs.weights.sum()) == pytest.approx(150.0, abs=1e-3)
+
+
+def test_trimmed_solve_ignores_outliers_on_all_backends(outlier_mixture):
+    pts = outlier_mixture
+    key = jax.random.PRNGKey(0)
+    for be in BACKENDS:
+        c, cost = clustering.solve(key, pts, 3, restarts=3,
+                                   objective="kmeans_trimmed(10)",
+                                   backend=be)
+        # every center lands on a true cluster (radius ~10), never on the
+        # far field (radius ~100)
+        assert float(jnp.abs(c).max()) < 20.0
+        assert float(cost) < 100.0
+
+
+def test_query_metric_matches_objective(outlier_mixture):
+    pts = outlier_mixture
+    ctr = pts[:3]
+    a_km, d_km = backend_mod.query_assignments(pts, ctr, objective="kmeans")
+    a_tr, d_tr = backend_mod.query_assignments(
+        pts, ctr, objective="kmeans_trimmed(10)")
+    a_md, d_md = backend_mod.query_assignments(pts, ctr,
+                                               objective="kmedian")
+    # queries are never trimmed: z=2 metric, identical to plain k-means
+    np.testing.assert_array_equal(np.asarray(a_km), np.asarray(a_tr))
+    np.testing.assert_array_equal(np.asarray(d_km), np.asarray(d_tr))
+    np.testing.assert_allclose(np.asarray(d_md) ** 2, np.asarray(d_km),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_power_general_z_runs_dense():
+    rng = np.random.default_rng(2)
+    pts = jnp.asarray(rng.standard_normal((90, 4)).astype(np.float32))
+    key = jax.random.PRNGKey(2)
+    for z in (0.5, 3):
+        c, cost = clustering.solve(key, pts, 3, lloyd_iters=4,
+                                   objective=f"power({z})", backend="jnp")
+        assert np.isfinite(float(cost))
+        assert np.isfinite(np.asarray(c)).all()
+
+
+# ---------------------------------------------------------------------------
+# contamination acceptance (satellite: trimmed defeats contaminated_stream)
+# ---------------------------------------------------------------------------
+
+def _stream_recovery_cost(objective_name, engine, backend, contaminated,
+                          seed=0):
+    """Aggregate a (possibly contaminated) stream and score the recovered
+    centers on the CLEAN stream's points in the plain k-means metric."""
+    g = topology.ring(4)
+    cfg = TreeConfig(k=5, t=48, d=10, batch_size=128,
+                     objective=objective_name, backend=backend)
+    ds = DistributedStream(g, cfg, key=jax.random.PRNGKey(3))
+    gen = (contaminated_stream(12, 128, d=10, k=5, outlier_frac=0.05,
+                               seed=seed)
+           if contaminated else
+           drifting_mixture_stream(12, 128, d=10, k=5, seed=seed))
+    for i, b in enumerate(gen):
+        ds.push(i % 4, b)
+    res = ds.aggregate(5, 40, engine=engine)
+    clean = np.concatenate(
+        list(drifting_mixture_stream(12, 128, d=10, k=5, seed=seed)))
+    return float(clustering.cost(jnp.asarray(clean), res.centers,
+                                 objective="kmeans", backend=backend))
+
+
+@pytest.mark.parametrize("engine", ["sim", "exec"])
+def test_trimmed_defeats_contaminated_stream(engine):
+    """At 5% far-field contamination, plain k-means exceeds 3x the
+    clean-stream cost while kmeans_trimmed recovers within 1.5x -- for
+    both the sim and exec aggregation engines."""
+    base = _stream_recovery_cost("kmeans", engine, "jnp", False)
+    plain = _stream_recovery_cost("kmeans", engine, "jnp", True)
+    trimmed = _stream_recovery_cost("kmeans_trimmed(0.08)", engine, "jnp",
+                                    True)
+    assert plain > 3.0 * base
+    assert trimmed < 1.5 * base
+
+
+@pytest.mark.parametrize("backend", ["jnp_chunked", "pallas"])
+def test_trimmed_contamination_recovery_all_backends(backend):
+    """The acceptance contrast holds on the chunked and Pallas backends
+    too (sim engine; the jnp case is the parametrized test above)."""
+    base = _stream_recovery_cost("kmeans", "sim", backend, False)
+    plain = _stream_recovery_cost("kmeans", "sim", backend, True)
+    trimmed = _stream_recovery_cost("kmeans_trimmed(0.08)", "sim", backend,
+                                    True)
+    assert plain > 3.0 * base
+    assert trimmed < 1.5 * base
+
+
+def test_trimmed_through_graph_distributed(outlier_mixture):
+    """kmeans_trimmed threads through graph_distributed_kmeans: sim and
+    exec engines agree bit-for-bit and both avoid the far field."""
+    perm = np.random.default_rng(7).permutation(160)
+    pts = outlier_mixture[perm]      # spread the outliers across sites
+    sp = pts.reshape(4, 40, 2)
+    mask = jnp.ones((4, 40), bool)
+    g = topology.ring(4)
+    key = jax.random.PRNGKey(1)
+    rs = graph_distributed_kmeans(key, sp, mask, 3, 24, g,
+                                  objective="kmeans_trimmed(0.125)",
+                                  engine="sim", backend="jnp")
+    re = graph_distributed_kmeans(key, sp, mask, 3, 24, g,
+                                  objective="kmeans_trimmed(0.125)",
+                                  engine="exec", backend="jnp")
+    np.testing.assert_array_equal(np.asarray(rs.centers),
+                                  np.asarray(re.centers))
+    assert rs.ledger.as_dict() == re.ledger.as_dict()
+    assert float(jnp.abs(rs.centers).max()) < 20.0
