@@ -1,0 +1,95 @@
+"""Accuracy-vs-communication frontier across coreset strategies
+(``BENCH_frontier.json`` at the repo root is the CI artifact).
+
+For each registered :class:`~repro.core.strategy.CoresetStrategy` x
+topology pair, sweep the sample budget ``t`` and record the (bytes,
+cost-ratio) curve of one full Algorithm-2 run on the sim engine: bytes is
+the analytic :class:`~repro.core.comm.CommLedger` total for the round
+(Theorem-2 flood pricing for exchange strategies; the single
+tree-shuffle for ``"mapreduce"``), cost-ratio is the solution's k-means
+cost on the *full* data normalized by a restarted central solve (the
+paper's Fig. 2 metric). Each row also reports the distance to the
+communication lower bound of Zhang-Xiao-Liu (arXiv 1507.00026):
+Omega(s * k) points must move for any O(1)-approximation over ``s``
+sites, priced here as ``lb_bytes = s * k * 4(d+1)`` -- the
+``bytes_over_lb`` column is how far each strategy sits above the
+information-theoretic floor, so the communication/accuracy tradeoff
+regresses visibly per PR.
+
+The ``frontier/undercut/wan`` row certifies the mapreduce claim on the
+heterogeneous WAN topology: its single shuffle strictly undercuts
+Algorithm 1's two diameter floods in both raw bytes and cost-weighted
+link bytes.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import json_row
+from repro.core import clustering, strategy, topology
+from repro.core.distributed import graph_distributed_kmeans
+from repro.core.partition import pad_partition, partition_indices
+
+N_SITES = 9
+K, D = 4, 8
+
+
+def _topologies():
+    return {
+        "ring": topology.ring(N_SITES),
+        "er": topology.erdos_renyi(N_SITES, 0.3, seed=3),
+        "wan": topology.wan_clusters(3, 3, cross_cost=16.0, cross_links=2,
+                                     seed=0),
+    }
+
+
+def _site_data(scale: float):
+    rng = np.random.default_rng(0)
+    per = max(int(400 * scale), 60)
+    centers = 3.0 * rng.standard_normal((K, D))
+    pts = np.concatenate(
+        [centers[i] + 0.15 * rng.standard_normal((per, D))
+         for i in range(K)]).astype(np.float32)
+    idx = partition_indices(pts, N_SITES, "weighted", seed=1)
+    sp, sm = pad_partition(pts, idx)
+    return jnp.asarray(pts), jnp.asarray(sp), jnp.asarray(sm)
+
+
+def run(scale: float = 0.05, n_runs: int = 2,
+        out_rows: List[str] = None) -> None:
+    pts, sp, sm = _site_data(scale)
+    key = jax.random.PRNGKey(0)
+    _, central = clustering.solve(jax.random.PRNGKey(1), pts, K, restarts=4)
+    central = float(central)
+    budgets = (48, 96, 192)
+    lb_bytes = N_SITES * K * 4.0 * (D + 1)   # Zhang et al. Omega(s k) floor
+
+    wan_bytes = {}
+    for topo_name, g in _topologies().items():
+        for name in strategy.available_strategies():
+            for t in budgets:
+                t0 = time.time()
+                r = graph_distributed_kmeans(key, sp, sm, K, t, graph=g,
+                                             engine="sim", strategy=name)
+                jax.block_until_ready(r.centers)
+                us = (time.time() - t0) * 1e6
+                ratio = float(clustering.cost(pts, r.centers)) / central
+                by = float(r.ledger.bytes)
+                if topo_name == "wan" and t == budgets[-1]:
+                    wan_bytes[name] = by
+                json_row(out_rows, f"frontier/{name}/{topo_name}/t{t}", us,
+                         strategy=name, topology=topo_name, t=t,
+                         cost_ratio=round(ratio, 4), bytes=by,
+                         link_cost=round(float(r.ledger.link_cost), 1),
+                         lb_bytes=lb_bytes,
+                         bytes_over_lb=round(by / lb_bytes, 2))
+
+    a, m = wan_bytes["algorithm1"], wan_bytes["mapreduce"]
+    json_row(out_rows, "frontier/undercut/wan", 0.0,
+             algorithm1_bytes=a, mapreduce_bytes=m,
+             undercut=bool(m < a), ratio=round(m / a, 4))

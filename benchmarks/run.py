@@ -15,8 +15,8 @@ import time
 
 from benchmarks import (bench_comm_scaling, bench_coreset_size,
                         bench_faults, bench_fig2_graphs, bench_fig3_trees,
-                        bench_kernels, bench_roofline, bench_serve,
-                        bench_stream, bench_topologies)
+                        bench_frontier, bench_kernels, bench_roofline,
+                        bench_serve, bench_stream, bench_topologies)
 from benchmarks.common import write_json_rows
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -28,7 +28,8 @@ def main(argv=None) -> None:
                     help="paper-scale datasets and run counts")
     ap.add_argument("--only", default="",
                     help="comma-separated subset: fig2,fig3,comm,size,"
-                         "kernels,roofline,serve,stream,topologies,faults")
+                         "kernels,roofline,serve,stream,topologies,faults,"
+                         "frontier")
     args = ap.parse_args(argv)
     scale = 1.0 if args.full else 0.05
     n_runs = 5 if args.full else 2
@@ -74,6 +75,14 @@ def main(argv=None) -> None:
         rows.extend(fault_rows)
         out_json = os.path.join(_REPO_ROOT, "BENCH_faults.json")
         write_json_rows(out_json, fault_rows)
+        print(f"# wrote {out_json}", file=sys.stderr)
+    if only is None or "frontier" in only:
+        frontier_rows: list = []
+        bench_frontier.run(scale=scale, n_runs=n_runs,
+                           out_rows=frontier_rows)
+        rows.extend(frontier_rows)
+        out_json = os.path.join(_REPO_ROOT, "BENCH_frontier.json")
+        write_json_rows(out_json, frontier_rows)
         print(f"# wrote {out_json}", file=sys.stderr)
     if only is None or "roofline" in only:
         bench_roofline.run(out_rows=rows)

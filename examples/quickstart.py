@@ -66,6 +66,16 @@ def main(argv=None):
           f"ratio {float(clustering.cost(jnp.asarray(data), res_t.centers)/central_cost):.4f}, "
           f"{res_t.ledger.points:.0f} points moved")
 
+    # pluggable round protocols: same API, different communication shape
+    print(f"\n{'strategy':<12} {'ratio':>8} {'KB':>8}")
+    for name in ("algorithm1", "cohen_addad", "mapreduce"):
+        r = distributed_kmeans(key, jnp.asarray(sp), jnp.asarray(sm), k,
+                               t=400, graph=g, backend=args.backend,
+                               strategy=name)
+        ratio = float(clustering.cost(jnp.asarray(data), r.centers)
+                      / central_cost)
+        print(f"{name:<12} {ratio:>8.4f} {r.ledger.bytes/1e3:>8.1f}")
+
 
 if __name__ == "__main__":
     main()

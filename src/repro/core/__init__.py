@@ -2,7 +2,8 @@
 on general topologies (Balcan-Ehrlich-Liang 2013)."""
 
 from repro.core import backend, baselines, clustering, comm, coreset
-from repro.core import distributed, message_passing, partition, topology
+from repro.core import distributed, message_passing, partition, strategy
+from repro.core import topology
 from repro.core.backend import (ClusteringBackend, available_backends,
                                 get_backend, query_assignments,
                                 register_backend, use_backend)
@@ -16,6 +17,8 @@ from repro.core.distributed import (ClusteringResult, ExecDetail,
                                     distributed_kmeans_tree,
                                     graph_distributed_kmeans,
                                     spmd_distributed_kmeans)
+from repro.core.strategy import (CoresetStrategy, available_strategies,
+                                 get_strategy, register_strategy)
 from repro.core.message_passing import (ExecResult, GossipSchedule,
                                         TreeSchedule, flood_exec,
                                         tree_broadcast_exec, tree_gather_exec,
@@ -27,7 +30,9 @@ from repro.core.topology import (Graph, SpanningTree, bfs_spanning_tree,
 
 __all__ = [
     "backend", "baselines", "clustering", "comm", "coreset", "distributed",
-    "message_passing", "partition", "topology",
+    "message_passing", "partition", "strategy", "topology",
+    "CoresetStrategy", "available_strategies", "get_strategy",
+    "register_strategy",
     "ClusteringBackend", "available_backends", "get_backend",
     "query_assignments", "register_backend", "use_backend",
     "cost", "kmeans_pp_init", "lloyd", "lloyd_stats", "min_dist_argmin",

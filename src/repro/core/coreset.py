@@ -312,13 +312,19 @@ def distributed_coreset(
     clip_negative: bool = False,
     backend: BackendLike = None,
     site_weights: Optional[Array] = None,   # (n_sites, M) overrides mask
+    strategy: "strategy_mod.StrategyLike" = None,
 ) -> DistributedCoreset:
-    """Algorithm 1 over all sites at once (vmapped host simulation).
+    """The distributed coreset rounds over all sites at once (vmapped host
+    simulation), driven by a registered
+    :class:`~repro.core.strategy.CoresetStrategy` (default
+    ``"algorithm1"``, the paper's protocol -- bit-identical to the
+    pre-strategy-layer implementation).
 
-    The only cross-site quantities used are ``local_costs`` (Round 1: n
-    scalars) and their sum -- exactly the paper's communication pattern. The
-    SPMD/mesh execution of the same math lives in
-    :mod:`repro.core.distributed`.
+    For exchanging strategies the only cross-site quantities used are
+    ``local_costs`` (Round 1: n scalars) and their sum -- exactly the
+    paper's communication pattern; single-shuffle strategies
+    (``"mapreduce"``) use none at all. The SPMD/mesh execution of the same
+    math lives in :mod:`repro.core.distributed`.
 
     ``site_weights`` generalizes each site's instance from masked raw points
     to an arbitrary *weighted* (possibly signed) local summary -- the
@@ -326,29 +332,34 @@ def distributed_coreset(
     summaries this way. When given, ``site_mask`` is ignored (a zero weight
     is an invalid slot).
     """
+    from repro.core import strategy as strategy_mod
     t_buffer = t if t_buffer is None else t_buffer
     backend = backend_mod.resolve_name(backend)
     objective = objective_mod.resolve_name(objective)
+    strat = strategy_mod.get_strategy(strategy)
     n_sites = site_points.shape[0]
     w_site = (site_mask.astype(site_points.dtype) if site_weights is None
               else site_weights.astype(site_points.dtype))
-    keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
+    keys = strat.keys(key, n_sites)
 
-    centers, m, assign, local_costs, w_eff = round1_local_solves(
-        keys[:, 0], site_points, w_site, k=k, objective=objective,
-        lloyd_iters=lloyd_iters, backend=backend)
+    r1 = strat.summary(keys[:, 0], site_points, w_site, k=k,
+                       objective=objective, lloyd_iters=lloyd_iters,
+                       backend=backend)
+    local_costs = r1.local_costs
 
-    # -- the single communicated aggregate -----------------------------------
+    # -- the single communicated aggregate (exchanging strategies only) ------
     # (the topology execution engine in repro.core.distributed runs these
     # same two stages but moves local_costs / the portions through executed
     # message-passing rounds instead of touching them globally here)
-    total_m = jnp.sum(local_costs)
-    t_i = proportional_allocation(local_costs, t)
+    t_i = strat.allocate(local_costs, t)
+    if strat.needs_exchange:
+        totals = jnp.broadcast_to(jnp.sum(local_costs), (n_sites,))
+    else:
+        totals = strat.local_totals(local_costs)
 
-    portions = round2_local_samples(
-        keys[:, 1], site_points, m, w_eff, assign, centers, t_i,
-        jnp.broadcast_to(total_m, (n_sites,)), k=k, t=t, t_buffer=t_buffer,
-        clip_negative=clip_negative)
+    portions = strat.contribute(keys[:, 1], site_points, r1, t_i, totals,
+                                k=k, t=t, t_buffer=t_buffer,
+                                clip_negative=clip_negative)
     return DistributedCoreset(points=portions.points,
                               weights=portions.weights, t_i=t_i,
                               local_costs=local_costs)
@@ -409,5 +420,30 @@ def round2_local_samples(keys, site_points, m, w_eff, assign, centers, t_i,
     if clip_negative:
         w_b = jnp.maximum(w_b, 0.0)
     # per-site portion S_i u B_i, stitched via the shared mask-aware union
+    return jax.vmap(Coreset.concat)(Coreset(sampled, w_s),
+                                    Coreset(centers, w_b))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "t_buffer", "clip_negative"))
+def round2_local_samples_localized(keys, site_points, m, w_eff, assign,
+                                   centers, t_i, total_m, k, t_buffer,
+                                   clip_negative):
+    """Round 2 with *per-site* normalization: each site's weight formula
+    uses its own sensitivity total (``total_m`` carries each site's own
+    scalar) and its own realized draw count ``t_i`` -- the site's portion
+    is a standalone coreset of its local data, no cross-site quantity
+    anywhere. This is the mapreduce strategy's local stage
+    (:mod:`repro.core.strategy`); composability of eps-coresets makes the
+    union of the portions a coreset of the union."""
+
+    def local_sample(ki, pts, m_i, w_i, a_i, ti, tm):
+        return _sample_and_weight(ki, pts, m_i, w_i, a_i, k, ti, t_buffer,
+                                  tm, ti.astype(jnp.float32))
+
+    sampled, w_s, w_b = jax.vmap(local_sample)(
+        keys, site_points, m, w_eff, assign, t_i, total_m)
+    if clip_negative:
+        w_b = jnp.maximum(w_b, 0.0)
     return jax.vmap(Coreset.concat)(Coreset(sampled, w_s),
                                     Coreset(centers, w_b))

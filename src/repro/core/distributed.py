@@ -38,8 +38,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import backend as backend_mod
 from repro.core import clustering
 from repro.core import objective as objective_mod
+from repro.core import strategy as strategy_mod
 from repro.core.backend import BackendLike
 from repro.core.objective import ObjectiveLike
+from repro.core.strategy import StrategyLike
 from repro.core.comm import (CommLedger, flood_cost, flood_portions_cost,
                              tree_allocation_cost, tree_broadcast_cost,
                              tree_up_cost)
@@ -118,6 +120,7 @@ def graph_distributed_kmeans(
     wan_mode: Optional[str] = None,
     wan_seed: int = 0,
     wan_p: float = 0.5,
+    strategy: StrategyLike = None,
 ) -> ClusteringResult:
     """Algorithm 2 on a general graph. With the default ``routing="flood"``
     Round 1 floods n scalars (2mn messages) and Round 2 floods the n local
@@ -147,6 +150,8 @@ def graph_distributed_kmeans(
     (:func:`repro.wan.runtime.restricted_sim_coreset`); the measured
     ledger carries the ``staleness`` axis. Flood routing only."""
     objective = objective_mod.resolve_name(objective)
+    strategy = strategy_mod.resolve_name(strategy)
+    strat = strategy_mod.get_strategy(strategy)
     if faults is not None or engine == "async":
         if routing != "flood":
             raise ValueError(f"faulty/async runs support routing='flood' "
@@ -159,19 +164,26 @@ def graph_distributed_kmeans(
             "full" if engine == "exec" else "clock")
         return _graph_async(key, site_points, site_mask, k, t, graph,
                             objective, lloyd_iters, backend, mode=mode,
-                            faults=faults, seed=wan_seed, p=wan_p)
+                            faults=faults, seed=wan_seed, p=wan_p,
+                            strategy=strategy)
+    if not strat.needs_exchange and routing == "flood":
+        # single-shuffle strategies never flood: with no scalar round to
+        # disseminate, the portions move map->shuffle->reduce along a
+        # hop-minimal spanning tree (Theorem-3 pricing on tree edges only)
+        routing = "bfs"
     if routing in ("bfs", "min_cost"):
         tree = spanning_tree(graph, root=root, routing=routing)
         return distributed_kmeans_tree(key, site_points, site_mask, k, t,
                                        tree, objective=objective,
                                        lloyd_iters=lloyd_iters,
-                                       backend=backend, engine=engine)
+                                       backend=backend, engine=engine,
+                                       strategy=strategy)
     if routing != "flood":
         raise ValueError(f"unknown routing {routing!r}: expected "
                          f"'flood'|'bfs'|'min_cost'")
     if engine == "exec":
         return _graph_exec(key, site_points, site_mask, k, t, graph,
-                           objective, lloyd_iters, backend)
+                           objective, lloyd_iters, backend, strategy)
     if engine != "sim":
         raise ValueError(f"unknown engine {engine!r}: expected 'sim'|'exec'")
     n_sites, _, d = site_points.shape
@@ -179,12 +191,13 @@ def graph_distributed_kmeans(
     k1, k2 = jax.random.split(key)
     dc = distributed_coreset(k1, site_points, site_mask, k, t,
                              objective=objective, lloyd_iters=lloyd_iters,
-                             backend=backend)
+                             backend=backend, strategy=strategy)
     cs = dc.flatten()
     centers = _solve_on_coreset(k2, cs, k, objective, lloyd_iters, backend)
 
+    spec = strat.exchange_spec()
     ledger = flood_cost(graph, n_messages=graph.n,
-                        unit_scalars=1.0).tag("round1")
+                        unit_scalars=spec.unit_scalars).tag("round1")
     ledger = ledger.add(flood_portions_cost(graph, np.asarray(dc.t_i), k,
                                             d).tag("round2"))
     return ClusteringResult(centers, cs, ledger, dc.local_costs)
@@ -206,32 +219,43 @@ def exec_algorithm1_rounds(
     lloyd_iters: int,
     clip_negative: bool,
     backend: str,
+    strategy: StrategyLike = None,
 ) -> Tuple[ExecDetail, Array]:
-    """Algorithm 1 with both communication rounds *executed* on a gossip
-    schedule. Same local stage functions and key derivation as
+    """A strategy's two rounds with the communication *executed* on a
+    gossip schedule. Same descriptor hooks and key derivation as
     ``distributed_coreset``, so every node's assembled coreset is
     bit-identical to the host path's; the ``ExecDetail`` ledgers are
     measured per transmission. Shared by :func:`graph_distributed_kmeans`
-    and the streaming aggregation rounds. Returns (detail, local_costs)."""
+    and the streaming aggregation rounds. Exchange strategies only: a
+    single-shuffle strategy has no scalar round to flood, so it routes to
+    the tree protocol instead (:func:`graph_distributed_kmeans` reroutes).
+    Returns (detail, local_costs)."""
+    strat = strategy_mod.get_strategy(strategy)
+    if not strat.needs_exchange:
+        raise ValueError(
+            f"strategy {strat.name!r} has no exchange round; the gossip "
+            f"flood engine only runs exchange strategies (single-shuffle "
+            f"strategies run the tree protocol)")
     n_sites, _, d = site_points.shape
-    keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
+    keys = strat.keys(key, n_sites)
 
-    centers_l, m, assign, local_costs, w_eff = round1_local_solves(
-        keys[:, 0], site_points, w_site, k=k, objective=objective,
-        lloyd_iters=lloyd_iters, backend=backend)
+    r1 = strat.summary(keys[:, 0], site_points, w_site, k=k,
+                       objective=objective, lloyd_iters=lloyd_iters,
+                       backend=backend)
+    local_costs = r1.local_costs
 
-    # -- Round 1 executed: flood the n cost scalars --------------------------
-    cost_tables, r1 = flood_exec(sched, local_costs[:, None],
-                                 unit_scalars=1.0)
+    # -- Round 1 executed: flood the n exchange scalars ----------------------
+    spec = strat.exchange_spec()
+    cost_tables, r1x = flood_exec(sched, local_costs[:, None],
+                                  unit_scalars=spec.unit_scalars)
     costs_at = cost_tables[:, :, 0]                        # (node, origin)
-    node_alloc = jax.vmap(lambda c: proportional_allocation(c, t))(costs_at)
+    node_alloc = jax.vmap(lambda c: strat.allocate(c, t))(costs_at)
     t_i = jnp.diagonal(node_alloc)            # node v uses its own share
     node_totals = jax.vmap(jnp.sum)(costs_at)
 
-    portions = round2_local_samples(
-        keys[:, 1], site_points, m, w_eff, assign, centers_l, t_i,
-        node_totals, k=k, t=t, t_buffer=t_buffer,
-        clip_negative=clip_negative)
+    portions = strat.contribute(
+        keys[:, 1], site_points, r1, t_i, node_totals, k=k, t=t,
+        t_buffer=t_buffer, clip_negative=clip_negative)
 
     # -- Round 2 executed: flood the fixed-size local portions ---------------
     payload = pack_payload(portions.points, portions.weights)
@@ -244,12 +268,13 @@ def exec_algorithm1_rounds(
         node_points=node_pts.reshape(n_sites, n_sites * slots, d),
         node_weights=node_w.reshape(n_sites, n_sites * slots),
         node_alloc=node_alloc, node_totals=node_totals,
-        rounds={"round1": r1, "round2": r2})
+        rounds={"round1": r1x, "round2": r2})
     return detail, local_costs
 
 
 def _graph_exec(key, site_points, site_mask, k, t, graph, objective,
-                lloyd_iters, backend) -> ClusteringResult:
+                lloyd_iters, backend,
+                strategy: StrategyLike = None) -> ClusteringResult:
     """Execute Algorithm 2's communication on a compiled gossip schedule.
 
     Identical math to the sim path stage for stage (same key derivation,
@@ -267,7 +292,7 @@ def _graph_exec(key, site_points, site_mask, k, t, graph, objective,
     detail, local_costs = exec_algorithm1_rounds(
         sched, k1, site_points, site_mask.astype(site_points.dtype), k, t,
         t_buffer=t, objective=objective, lloyd_iters=lloyd_iters,
-        clip_negative=False, backend=backend)
+        clip_negative=False, backend=backend, strategy=strategy)
 
     # every node holds the identical instance; solve it once (node 0's copy)
     cs = Coreset(detail.node_points[0], detail.node_weights[0])
@@ -279,8 +304,8 @@ def _graph_exec(key, site_points, site_mask, k, t, graph, objective,
 
 
 def _graph_async(key, site_points, site_mask, k, t, graph, objective,
-                 lloyd_iters, backend, mode, faults, seed,
-                 p) -> ClusteringResult:
+                 lloyd_iters, backend, mode, faults, seed, p,
+                 strategy: StrategyLike = None) -> ClusteringResult:
     """Execute Algorithm 2's communication on the asynchronous WAN runtime
     (imported lazily -- :mod:`repro.wan` layers on this module).
 
@@ -301,12 +326,13 @@ def _graph_async(key, site_points, site_mask, k, t, graph, objective,
         graph, k1, site_points, site_mask.astype(site_points.dtype), k, t,
         t_buffer=t, objective=objective, lloyd_iters=lloyd_iters,
         clip_negative=False, backend=backend, mode=mode, faults=faults,
-        seed=seed, p=p)
+        seed=seed, p=p, strategy=strategy)
 
     cs = Coreset(detail.node_points[0], detail.node_weights[0])
     centers = _solve_on_coreset(k2, cs, k, objective, lloyd_iters, backend)
-    ledger = detail.rounds["round1"].ledger.tag("round1").add(
-        detail.rounds["round2"].ledger.tag("round2"))
+    ledger = detail.rounds["round2"].ledger.tag("round2")
+    if "round1" in detail.rounds:   # single-shuffle strategies skip it
+        ledger = detail.rounds["round1"].ledger.tag("round1").add(ledger)
     return ClusteringResult(centers, cs, ledger, local_costs,
                             exec_detail=detail)
 
@@ -322,6 +348,7 @@ def distributed_kmeans_tree(
     lloyd_iters: int = 8,
     backend: BackendLike = None,
     engine: str = "sim",
+    strategy: StrategyLike = None,
 ) -> ClusteringResult:
     """Algorithm 2 restricted to a rooted tree (Theorem 3): the raw cost
     scalars are gathered to the root along parent edges (sum_v depth(v)
@@ -338,9 +365,11 @@ def distributed_kmeans_tree(
     total. The ledger now prices the executable gather/scatter protocol --
     the ``engine="exec"`` path runs it and measures the same numbers.)"""
     objective = objective_mod.resolve_name(objective)
+    strategy = strategy_mod.resolve_name(strategy)
+    strat = strategy_mod.get_strategy(strategy)
     if engine == "exec":
         return _tree_exec(key, site_points, site_mask, k, t, tree,
-                          objective, lloyd_iters, backend)
+                          objective, lloyd_iters, backend, strategy)
     if engine != "sim":
         raise ValueError(f"unknown engine {engine!r}: expected 'sim'|'exec'")
     n_sites, _, d = site_points.shape
@@ -348,15 +377,19 @@ def distributed_kmeans_tree(
     k1, k2 = jax.random.split(key)
     dc = distributed_coreset(k1, site_points, site_mask, k, t,
                              objective=objective, lloyd_iters=lloyd_iters,
-                             backend=backend)
+                             backend=backend, strategy=strategy)
     cs = dc.flatten()
     centers = _solve_on_coreset(k2, cs, k, objective, lloyd_iters, backend)
 
     t_i = [float(x) for x in dc.t_i]
     per_node = [t_i[v] + k for v in range(tree.n)]
-    ledger = tree_allocation_cost(tree).tag("round1")
-    ledger = ledger.add(tree_up_cost(tree, per_node,
-                                     dim=d).tag("round2_gather"))
+    up = tree_up_cost(tree, per_node, dim=d).tag("round2_gather")
+    if strat.needs_exchange:
+        ledger = tree_allocation_cost(tree).tag("round1").add(up)
+    else:
+        # single shuffle: no scalar round, no allocation traffic -- the
+        # uniform split is derived locally at every site
+        ledger = up
     ledger = ledger.add(tree_broadcast_cost(tree, unit_points=float(k),
                                             dim=d).tag("round2_broadcast"))
     return ClusteringResult(centers, cs, ledger, dc.local_costs)
@@ -374,39 +407,57 @@ def exec_algorithm1_tree_rounds(
     lloyd_iters: int,
     clip_negative: bool,
     backend: str,
+    strategy: StrategyLike = None,
 ):
-    """Algorithm 1 with both communication rounds *executed* on a tree
-    schedule: gather the raw Round-1 cost scalars to the root, replay the
-    exact largest-remainder allocation there, scatter each site's share
-    down its subtree path, broadcast the total; gather the fixed-size
-    Round-2 portions to the root. Same local stage functions and key
-    derivation as ``distributed_coreset``, so the root's assembled table is
+    """A strategy's two rounds with the communication *executed* on a tree
+    schedule. For exchange strategies: gather the raw Round-1 scalars to
+    the root, replay the strategy's exact allocation there, scatter each
+    site's share down its subtree path, broadcast the total; gather the
+    fixed-size Round-2 portions to the root. Single-shuffle strategies
+    skip the Round-1 gather/scatter/broadcast entirely -- every site
+    derives the identical uniform split locally and normalizes by its own
+    scalar -- so the only traffic is the portions gather (map -> shuffle
+    -> reduce). Same descriptor hooks and key derivation as
+    ``distributed_coreset``, so the root's assembled table is
     bit-identical to the host path's coreset. Shared by
     :func:`distributed_kmeans_tree` and the streaming tree-transport
     aggregation rounds. Returns ``(root_points, root_weights, t_i,
     node_totals, rounds, local_costs)`` where ``rounds`` maps phase label
     to the measured :class:`ExecResult`."""
+    strat = strategy_mod.get_strategy(strategy)
     n_sites, _, d = site_points.shape
-    keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
+    keys = strat.keys(key, n_sites)
 
-    centers_l, m, assign, local_costs, w_eff = round1_local_solves(
-        keys[:, 0], site_points, w_site, k=k, objective=objective,
-        lloyd_iters=lloyd_iters, backend=backend)
+    r1 = strat.summary(keys[:, 0], site_points, w_site, k=k,
+                       objective=objective, lloyd_iters=lloyd_iters,
+                       backend=backend)
+    local_costs = r1.local_costs
 
-    # -- Round 1 executed: costs up, allocations + total down ----------------
-    root_costs, r1a = tree_gather_exec(sched, local_costs[:, None],
+    if strat.needs_exchange:
+        # -- Round 1 executed: scalars up, allocations + total down ----------
+        spec = strat.exchange_spec()
+        root_costs, r1a = tree_gather_exec(sched, local_costs[:, None],
+                                           unit_scalars=spec.unit_scalars)
+        t_root = strat.allocate(root_costs[:, 0], t)
+        total = jnp.sum(root_costs[:, 0])
+        own_t, r1b = tree_scatter_exec(sched, t_root[:, None],
                                        unit_scalars=1.0)
-    t_root = proportional_allocation(root_costs[:, 0], t)
-    total = jnp.sum(root_costs[:, 0])
-    own_t, r1b = tree_scatter_exec(sched, t_root[:, None], unit_scalars=1.0)
-    node_totals, r1c = tree_broadcast_exec(sched, total[None],
-                                           unit_scalars=1.0)
-    t_i = own_t[:, 0]
+        node_totals, r1c = tree_broadcast_exec(sched, total[None],
+                                               unit_scalars=1.0)
+        t_i = own_t[:, 0]
+        totals = node_totals[:, 0]
+        rounds = {"round1_gather": r1a, "round1_scatter": r1b,
+                  "round1_broadcast": r1c}
+    else:
+        # no Round-1 traffic at all: the split is locally derivable and
+        # each site's weight formula uses its own scalar
+        t_i = strat.allocate(local_costs, t)
+        totals = strat.local_totals(local_costs)
+        rounds = {}
 
-    portions = round2_local_samples(
-        keys[:, 1], site_points, m, w_eff, assign, centers_l, t_i,
-        node_totals[:, 0], k=k, t=t, t_buffer=t_buffer,
-        clip_negative=clip_negative)
+    portions = strat.contribute(
+        keys[:, 1], site_points, r1, t_i, totals, k=k, t=t,
+        t_buffer=t_buffer, clip_negative=clip_negative)
 
     # -- Round 2 executed: portions up ---------------------------------------
     payload = pack_payload(portions.points, portions.weights)
@@ -414,13 +465,13 @@ def exec_algorithm1_tree_rounds(
     root_table, r2a = tree_gather_exec(sched, payload, unit_points=unit_pts,
                                        dim=d)
     root_pts, root_w = unpack_payload(root_table)
-    rounds = {"round1_gather": r1a, "round1_scatter": r1b,
-              "round1_broadcast": r1c, "round2_gather": r2a}
-    return (root_pts, root_w, t_i, node_totals[:, 0], rounds, local_costs)
+    rounds["round2_gather"] = r2a
+    return (root_pts, root_w, t_i, totals, rounds, local_costs)
 
 
 def _tree_exec(key, site_points, site_mask, k, t, tree, objective,
-               lloyd_iters, backend) -> ClusteringResult:
+               lloyd_iters, backend,
+               strategy: StrategyLike = None) -> ClusteringResult:
     """Execute Algorithm 2's communication on a compiled tree schedule:
     the Round-1/Round-2 tree protocol of
     :func:`exec_algorithm1_tree_rounds`, then solve at the root and
@@ -438,7 +489,7 @@ def _tree_exec(key, site_points, site_mask, k, t, tree, objective,
         exec_algorithm1_tree_rounds(
             sched, k1, site_points, w_site, k, t, t_buffer=t,
             objective=objective, lloyd_iters=lloyd_iters,
-            clip_negative=False, backend=backend)
+            clip_negative=False, backend=backend, strategy=strategy)
 
     cs = Coreset(root_pts.reshape(-1, d), root_w.reshape(-1))
     centers = _solve_on_coreset(k2, cs, k, objective, lloyd_iters, backend)
@@ -446,11 +497,14 @@ def _tree_exec(key, site_points, site_mask, k, t, tree, objective,
                                             unit_points=float(k), dim=d)
     rounds = dict(rounds, round2_broadcast=r2b)
 
-    ledger = (rounds["round1_gather"].ledger
-              .add(rounds["round1_scatter"].ledger)
-              .add(rounds["round1_broadcast"].ledger).tag("round1")
-              .add(rounds["round2_gather"].ledger.tag("round2_gather"))
-              .add(r2b.ledger.tag("round2_broadcast")))
+    if "round1_gather" in rounds:
+        ledger = (rounds["round1_gather"].ledger
+                  .add(rounds["round1_scatter"].ledger)
+                  .add(rounds["round1_broadcast"].ledger).tag("round1")
+                  .add(rounds["round2_gather"].ledger.tag("round2_gather")))
+    else:   # single-shuffle strategies have no Round-1 phases
+        ledger = rounds["round2_gather"].ledger.tag("round2_gather")
+    ledger = ledger.add(r2b.ledger.tag("round2_broadcast"))
     detail = ExecDetail(node_centers=node_centers, node_alloc=t_i,
                         node_totals=node_totals, rounds=rounds)
     return ClusteringResult(centers, cs, ledger, local_costs,
@@ -472,6 +526,7 @@ def spmd_distributed_kmeans_fn(
     final_lloyd_iters: int = 10,
     backend: BackendLike = None,
     collectives: str = "all_gather",
+    strategy: StrategyLike = None,
 ):
     """Build the per-device function for Algorithm 1+2 under ``shard_map``.
 
@@ -500,6 +555,7 @@ def spmd_distributed_kmeans_fn(
     """
     backend = backend_mod.resolve_name(backend)
     objective = objective_mod.resolve_name(objective)
+    strat = strategy_mod.get_strategy(strategy_mod.resolve_name(strategy))
     if collectives not in ("all_gather", "neighbor_rounds"):
         raise ValueError(f"unknown collectives {collectives!r}: expected "
                          f"'all_gather'|'neighbor_rounds'")
@@ -522,21 +578,29 @@ def spmd_distributed_kmeans_fn(
         centers, _ = clustering.lloyd(pts, centers, weights=w,
                                       iters=lloyd_iters, objective=objective,
                                       backend=backend)
-        m, assign, w_eff = sensitivities(pts, centers, w,
-                                         objective=objective,
-                                         backend=backend)
+        m, assign, w_eff = strat.site_sensitivities(
+            pts, centers, w, objective=objective, backend=backend)
         local_cost = jnp.sum(m)
-        all_costs = gather(local_cost)                         # <- Round 1
-        total_cost = jnp.sum(all_costs)
+        if strat.needs_exchange:
+            all_costs = gather(local_cost)                     # <- Round 1
+            total_cost = jnp.sum(all_costs)
 
-        # exact largest-remainder allocation over the gathered scalars --
-        # identical math to the host path, replicated on every device.
-        # t_local is NOT clamped to t_buffer here, also matching the host:
-        # _sample_and_weight truncates the realized draws at its t_buffer
-        # slots, and the weight formula keeps using the full allocation.
-        t_all = proportional_allocation(all_costs, t)
-        t_local = t_all[site]
-        t_total = jnp.sum(t_all).astype(pts.dtype)   # == t exactly
+            # exact largest-remainder allocation over the gathered scalars
+            # -- identical math to the host path, replicated per device.
+            # t_local is NOT clamped to t_buffer here, also matching the
+            # host: _sample_and_weight truncates the realized draws at its
+            # t_buffer slots, and the weight formula keeps using the full
+            # allocation.
+            t_all = strat.allocate(all_costs, t)
+            t_local = t_all[site]
+            t_total = jnp.sum(t_all).astype(pts.dtype)   # == t exactly
+        else:
+            # single shuffle: the uniform split is derivable on-device and
+            # the standalone weight formula uses the local scalar + share
+            t_all = strat.allocate(jnp.ones((axis_size,), pts.dtype), t)
+            t_local = t_all[site]
+            total_cost = local_cost
+            t_total = t_local.astype(pts.dtype)
 
         sampled, w_s, w_b = _sample_and_weight(
             k_sample, pts, m, w_eff, assign, k, t_local, t_buffer,
@@ -576,6 +640,7 @@ def spmd_distributed_kmeans(
     lloyd_iters: int = 8,
     backend: BackendLike = None,
     collectives: str = "all_gather",
+    strategy: StrategyLike = None,
 ) -> Tuple[Array, Array, Array]:
     """Run the SPMD path on a mesh. Returns (centers (k,d), local_costs,
     t_i) -- ``t_i`` are the per-site sample allocations, which satisfy
@@ -598,7 +663,8 @@ def spmd_distributed_kmeans(
         4 * t // max(axis_size, 1), 64)
     fn = spmd_distributed_kmeans_fn(axis_name, axis_size, k, t, t_buffer,
                                     objective, lloyd_iters, backend=backend,
-                                    collectives=collectives)
+                                    collectives=collectives,
+                                    strategy=strategy)
 
     def device_fn(key, pts, mask):
         # collapse the per-device leading site-block dim (sites/device >= 1)

@@ -35,6 +35,8 @@ import numpy as np
 from repro.core import backend as backend_mod
 from repro.core import clustering
 from repro.core import objective as objective_mod
+from repro.core import strategy as strategy_mod
+from repro.core.strategy import StrategyLike
 from repro.core.comm import (CommLedger, flood_cost, flood_portions_cost,
                              link_cost_of, tree_allocation_cost,
                              tree_broadcast_cost, tree_gather_cost,
@@ -176,7 +178,8 @@ class DistributedStream:
                   routing: str = "bfs", root: int = 0,
                   faults=None, wan_mode: Optional[str] = None,
                   wan_seed: Optional[int] = None,
-                  wan_p: float = 0.5) -> AggregateResult:
+                  wan_p: float = 0.5,
+                  strategy: StrategyLike = None) -> AggregateResult:
         """Run one aggregation round over the current per-site summaries.
 
         Every node's tree summary (fixed ``levels * slot + batch_size``
@@ -236,7 +239,13 @@ class DistributedStream:
         if transport not in ("flood", "tree"):
             raise ValueError(f"unknown transport {transport!r}: expected "
                              f"'flood'|'tree'")
+        strategy = strategy_mod.resolve_name(strategy)
+        strat = strategy_mod.get_strategy(strategy)
         use_wan = engine == "async" or faults is not None
+        if not strat.needs_exchange and transport == "flood" and not use_wan:
+            # single-shuffle strategies never flood on synchronous rounds:
+            # map -> shuffle -> reduce along the spanning tree instead
+            transport = "tree"
         if use_wan:
             if transport != "flood":
                 raise ValueError(f"faulty/async rounds support "
@@ -323,43 +332,54 @@ class DistributedStream:
                     g, k1, sp, sw.astype(sp.dtype), k, t, t_buffer=t,
                     objective=cfg.objective, lloyd_iters=lloyd_iters,
                     clip_negative=clip_negative, backend=cfg.backend,
-                    mode=wan_mode, faults=faults, seed=wan_seed, p=wan_p)
+                    mode=wan_mode, faults=faults, seed=wan_seed, p=wan_p,
+                    strategy=strategy)
                 cs = Coreset(points=detail.node_points[0],
                              weights=detail.node_weights[0])
-                round_ledger = detail.rounds["round1"].ledger.add(
-                    detail.rounds["round2"].ledger)
+                round_ledger = detail.rounds["round2"].ledger
+                if "round1" in detail.rounds:
+                    round_ledger = detail.rounds["round1"].ledger.add(
+                        round_ledger)
             elif transport == "tree" and engine == "exec":
                 root_pts, root_w, t_i, _, rounds, local_costs = \
                     exec_algorithm1_tree_rounds(
                         tsched, k1, sp, sw.astype(sp.dtype), k, t,
                         t_buffer=t, objective=cfg.objective,
                         lloyd_iters=lloyd_iters,
-                        clip_negative=clip_negative, backend=cfg.backend)
+                        clip_negative=clip_negative, backend=cfg.backend,
+                        strategy=strategy)
                 table = pack_payload(root_pts, root_w)
                 unit_b = float(np.asarray(t_i, np.float64).sum()) + g.n * k
                 _, br = tree_broadcast_exec(tsched, table,
                                             unit_points=unit_b, dim=cfg.d)
                 cs = Coreset(points=root_pts.reshape(-1, cfg.d),
                              weights=root_w.reshape(-1))
-                round_ledger = (rounds["round1_gather"].ledger
-                                .add(rounds["round1_scatter"].ledger)
-                                .add(rounds["round1_broadcast"].ledger)
-                                .add(rounds["round2_gather"].ledger)
-                                .add(br.ledger))
+                if "round1_gather" in rounds:
+                    round_ledger = (rounds["round1_gather"].ledger
+                                    .add(rounds["round1_scatter"].ledger)
+                                    .add(rounds["round1_broadcast"].ledger)
+                                    .add(rounds["round2_gather"].ledger)
+                                    .add(br.ledger))
+                else:   # single shuffle: no Round-1 phases at all
+                    round_ledger = rounds["round2_gather"].ledger.add(
+                        br.ledger)
             elif transport == "tree":
                 dc = distributed_coreset(k1, sp, sw != 0.0, k, t,
                                          objective=cfg.objective,
                                          lloyd_iters=lloyd_iters,
                                          clip_negative=clip_negative,
-                                         backend=cfg.backend, site_weights=sw)
+                                         backend=cfg.backend, site_weights=sw,
+                                         strategy=strategy)
                 cs = dc.flatten()
                 local_costs = dc.local_costs
                 unit_pts = np.asarray(dc.t_i, np.float64) + k
                 unit_b = float(np.asarray(dc.t_i, np.float64).sum()) \
                     + g.n * k
-                round_ledger = tree_allocation_cost(tree)
-                round_ledger = round_ledger.add(
-                    tree_up_cost(tree, unit_pts, dim=cfg.d))
+                up = tree_up_cost(tree, unit_pts, dim=cfg.d)
+                if strat.needs_exchange:
+                    round_ledger = tree_allocation_cost(tree).add(up)
+                else:   # the uniform split is derived locally, zero traffic
+                    round_ledger = up
                 round_ledger = round_ledger.add(tree_broadcast_cost(
                     tree, unit_points=unit_b, dim=cfg.d))
             elif engine == "exec":
@@ -367,7 +387,7 @@ class DistributedStream:
                     self._schedule, k1, sp, sw.astype(sp.dtype), k, t,
                     t_buffer=t, objective=cfg.objective,
                     lloyd_iters=lloyd_iters, clip_negative=clip_negative,
-                    backend=cfg.backend)
+                    backend=cfg.backend, strategy=strategy)
                 cs = Coreset(points=detail.node_points[0],
                              weights=detail.node_weights[0])
                 round_ledger = detail.rounds["round1"].ledger.add(
@@ -377,7 +397,8 @@ class DistributedStream:
                                          objective=cfg.objective,
                                          lloyd_iters=lloyd_iters,
                                          clip_negative=clip_negative,
-                                         backend=cfg.backend, site_weights=sw)
+                                         backend=cfg.backend, site_weights=sw,
+                                         strategy=strategy)
                 cs = dc.flatten()
                 local_costs = dc.local_costs
                 round_ledger = flood_cost(g, n_messages=g.n, unit_scalars=1.0)

@@ -45,11 +45,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import strategy as strategy_mod
 from repro.core.comm import CommLedger, link_cost_of
 from repro.core.coreset import (proportional_allocation, round1_local_solves,
                                 round2_local_samples)
 from repro.core.message_passing import (Units, _units_ledger, pack_payload,
                                         unpack_payload)
+from repro.core.strategy import Round1State, StrategyLike
 from repro.core.topology import Graph, diameter
 from repro.wan.faults import FaultPlan
 from repro.wan.schedules import WanSchedule, liveness_masks, wan_schedule
@@ -297,42 +299,59 @@ def async_algorithm1_rounds(
     faults: Optional[FaultPlan] = None,
     seed: int = 0,
     p: float = 0.5,
+    strategy: StrategyLike = None,
 ) -> Tuple[AsyncDetail, Array]:
-    """Algorithm 1 with both communication rounds executed on the WAN
-    runtime. Identical key derivation and local stage functions as the
-    synchronous exec path (``jax.random.split(key, n*2)`` over *all*
-    sites, dead or not -- per-site stages are independent, which is what
-    keeps survivor-site values bit-identical however many peers die);
-    the allocation and the assembled coreset are restricted to surviving
-    origins in ascending id order, matching
-    :func:`restricted_sim_coreset` bit-for-bit. Returns
-    ``(detail, local_costs)``."""
+    """A strategy's two rounds executed on the WAN runtime. Identical key
+    derivation and descriptor hooks as the synchronous exec path (the
+    strategy's all-site key table spans *every* site, dead or not --
+    per-site stages are independent, which is what keeps survivor-site
+    values bit-identical however many peers die); the allocation and the
+    assembled coreset are restricted to surviving origins in ascending id
+    order, matching :func:`restricted_sim_coreset` bit-for-bit.
+    Single-shuffle strategies skip the Round-1 scalar flood entirely:
+    survivors each derive the identical uniform split over the survivor
+    set locally and normalize by their own scalar, so the only WAN
+    traffic is the portions flood. Returns ``(detail, local_costs)``."""
     plan = faults if faults is not None else FaultPlan()
+    strat = strategy_mod.get_strategy(strategy)
     n_sites, _, d = site_points.shape
     if graph.n != n_sites:
         raise ValueError(f"graph has {graph.n} nodes for {n_sites} sites")
     surv = plan.surviving_nodes(n_sites)
-    keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
+    keys = strat.keys(key, n_sites)
 
-    centers_l, m, assign, local_costs, w_eff = round1_local_solves(
-        keys[:, 0], site_points, w_site, k=k, objective=objective,
-        lloyd_iters=lloyd_iters, backend=backend)
+    r1 = strat.summary(keys[:, 0], site_points, w_site, k=k,
+                       objective=objective, lloyd_iters=lloyd_iters,
+                       backend=backend)
+    local_costs = r1.local_costs
 
-    # -- Round 1: flood the cost scalars under faults ------------------------
-    cost_tables, r1 = wan_flood_exec(graph, local_costs[:, None], mode=mode,
-                                     faults=plan, unit_scalars=1.0,
-                                     seed=seed, p=p)
-    # every surviving node holds bit-identical copies of every surviving
-    # origin's scalar; each replays the exact largest-remainder allocation
-    # over the survivor set (dead origins' partial payloads are discarded)
-    costs_at = cost_tables[surv][:, surv, 0]             # (n', n')
-    node_alloc = jax.vmap(lambda c: proportional_allocation(c, t))(costs_at)
-    t_i = jnp.diagonal(node_alloc)                       # own share, (n',)
-    node_totals = jax.vmap(jnp.sum)(costs_at)
+    if strat.needs_exchange:
+        # -- Round 1: flood the exchange scalars under faults ----------------
+        spec = strat.exchange_spec()
+        cost_tables, r1x = wan_flood_exec(graph, local_costs[:, None],
+                                          mode=mode, faults=plan,
+                                          unit_scalars=spec.unit_scalars,
+                                          seed=seed, p=p)
+        # every surviving node holds bit-identical copies of every surviving
+        # origin's scalar; each replays the strategy's exact allocation over
+        # the survivor set (dead origins' partial payloads are discarded)
+        costs_at = cost_tables[surv][:, surv, 0]         # (n', n')
+        node_alloc = jax.vmap(lambda c: strat.allocate(c, t))(costs_at)
+        t_i = jnp.diagonal(node_alloc)                   # own share, (n',)
+        node_totals = jax.vmap(jnp.sum)(costs_at)
+        rounds = {"round1": r1x}
+    else:
+        # no scalar flood: every survivor derives the identical uniform
+        # split over the survivor set from (n', t) alone
+        t_i = strat.allocate(local_costs[surv], t)
+        node_alloc = jnp.tile(t_i[None, :], (surv.size, 1))
+        node_totals = strat.local_totals(local_costs[surv])
+        rounds = {}
 
-    portions = round2_local_samples(
-        keys[surv, 1], site_points[surv], m[surv], w_eff[surv],
-        assign[surv], centers_l[surv], t_i, node_totals, k=k, t=t,
+    sub = Round1State(r1.centers[surv], r1.m[surv], r1.assign[surv],
+                      local_costs[surv], r1.w_eff[surv])
+    portions = strat.contribute(
+        keys[surv, 1], site_points[surv], sub, t_i, node_totals, k=k, t=t,
         t_buffer=t_buffer, clip_negative=clip_negative)
 
     # -- Round 2: flood the portions (dead origin slots carry zeros; they
@@ -348,12 +367,13 @@ def async_algorithm1_rounds(
                                      seed=seed + 1, p=p)
     node_pts, node_w = unpack_payload(port_tables[surv][:, surv])
     n_surv = int(surv.size)
+    rounds["round2"] = r2
     detail = AsyncDetail(
         surviving=surv,
         node_points=node_pts.reshape(n_surv, n_surv * slots, d),
         node_weights=node_w.reshape(n_surv, n_surv * slots),
         node_alloc=node_alloc, node_totals=node_totals,
-        rounds={"round1": r1, "round2": r2})
+        rounds=rounds)
     return detail, local_costs
 
 
@@ -369,32 +389,38 @@ def restricted_sim_coreset(
     clip_negative: bool,
     backend: str,
     surviving: np.ndarray,
+    strategy: StrategyLike = None,
 ) -> Tuple[Array, Array, Array, Array]:
     """The host oracle the faulty exec path must reproduce bit-for-bit:
-    Algorithm 1 computed globally, with allocation and coreset assembly
-    restricted to the ``surviving`` sites (ascending original ids). Key
-    derivation spans *all* sites -- survivors must use the same per-site
-    keys they would in a fault-free run. Returns ``(points, weights,
-    t_i, local_costs)`` with the coreset as the survivors' portions
-    concatenated in ascending id order."""
+    the strategy's rounds computed globally, with allocation and coreset
+    assembly restricted to the ``surviving`` sites (ascending original
+    ids). Key derivation spans *all* sites -- survivors must use the same
+    per-site keys they would in a fault-free run. Returns ``(points,
+    weights, t_i, local_costs)`` with the coreset as the survivors'
+    portions concatenated in ascending id order."""
+    strat = strategy_mod.get_strategy(strategy)
     n_sites, _, d = site_points.shape
     surviving = np.asarray(surviving, np.int64)
-    keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
+    keys = strat.keys(key, n_sites)
     w_site = site_mask.astype(site_points.dtype)
 
-    centers_l, m, assign, local_costs, w_eff = round1_local_solves(
-        keys[:, 0], site_points, w_site, k=k, objective=objective,
-        lloyd_iters=lloyd_iters, backend=backend)
+    r1 = strat.summary(keys[:, 0], site_points, w_site, k=k,
+                       objective=objective, lloyd_iters=lloyd_iters,
+                       backend=backend)
 
-    costs = local_costs[surviving]
-    t_i = proportional_allocation(costs, t)
-    total = jnp.sum(costs)
-    totals = jnp.full(surviving.size, 1.0, costs.dtype) * total
+    costs = r1.local_costs[surviving]
+    t_i = strat.allocate(costs, t)
+    if strat.needs_exchange:
+        total = jnp.sum(costs)
+        totals = jnp.full(surviving.size, 1.0, costs.dtype) * total
+    else:
+        totals = strat.local_totals(costs)
 
-    portions = round2_local_samples(
-        keys[surviving, 1], site_points[surviving], m[surviving],
-        w_eff[surviving], assign[surviving], centers_l[surviving], t_i,
-        totals, k=k, t=t, t_buffer=t_buffer, clip_negative=clip_negative)
+    sub = Round1State(r1.centers[surviving], r1.m[surviving],
+                      r1.assign[surviving], costs, r1.w_eff[surviving])
+    portions = strat.contribute(
+        keys[surviving, 1], site_points[surviving], sub, t_i, totals,
+        k=k, t=t, t_buffer=t_buffer, clip_negative=clip_negative)
     pts = portions.points.reshape(-1, d)
     w = portions.weights.reshape(-1)
-    return pts, w, t_i, local_costs
+    return pts, w, t_i, r1.local_costs

@@ -17,8 +17,35 @@ except ImportError:
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _hyp.strategies
 
+import gc
+
 import numpy as np
 import pytest
+
+
+def _vm_map_count() -> int:
+    try:
+        with open("/proc/self/maps", "rb") as f:
+            return sum(1 for _ in f)
+    except OSError:  # non-Linux: no map-count limit to guard against
+        return 0
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _bounded_jit_code_maps():
+    """XLA's CPU JIT mmaps code pages per compiled executable and never
+    consolidates them; a full-suite run accumulates enough live
+    executables to exhaust ``vm.max_map_count`` (65530 default), at which
+    point the next compile segfaults inside LLVM. Dropping
+    compiled-executable references between modules once the process nears
+    the limit keeps the suite bounded without recompiling on every module
+    boundary."""
+    yield
+    if _vm_map_count() > 40_000:
+        import jax
+
+        jax.clear_caches()
+        gc.collect()
 
 
 @pytest.fixture(scope="session")

@@ -154,6 +154,19 @@ SPMD_SCRIPT = textwrap.dedent("""
     assert (t_i16 == t_host16).all(), (t_i16, t_host16)
     ratio16 = float(clustering.cost(jnp.asarray(pts), c16) / full)
     assert ratio16 < 1.3, f"spmd merged-sites ratio {ratio16}"
+
+    # strategy layer on the mesh path: a single-shuffle strategy skips the
+    # Round-1 gather -- the budget splits uniformly (largest remainder over
+    # equal shares, sum-to-t), and quality stays competitive
+    c_mr, lc_mr, t_i_mr = spmd_distributed_kmeans(
+        mesh, "sites", jax.random.PRNGKey(0), jnp.asarray(sp),
+        jnp.asarray(sm), k, t=t, t_buffer=t, strategy="mapreduce")
+    t_i_mr = np.asarray(t_i_mr)
+    assert t_i_mr.sum() == t, t_i_mr
+    t_uniform = np.asarray(proportional_allocation(jnp.ones(8), t))
+    assert (t_i_mr == t_uniform).all(), (t_i_mr, t_uniform)
+    ratio_mr = float(clustering.cost(jnp.asarray(pts), c_mr) / full)
+    assert ratio_mr < 1.3, f"spmd mapreduce ratio {ratio_mr}"
     print("SPMD_OK", ratio)
 """)
 

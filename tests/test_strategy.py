@@ -1,0 +1,332 @@
+"""First-class coreset-strategy layer (DESIGN.md Sec. 16).
+
+Covers the registry boundary (unknown strategy names raise with the
+registered names listed at every public API), the bit-compat discipline
+(``"algorithm1"`` through the descriptor equals a frozen copy of the
+pre-strategy-layer choreography bit for bit on all three backends, and
+the sim/exec/tree/async engines all agree), the key-derivation
+consolidation (every engine consumes the descriptor's one key table --
+the sim, exec, and async paths used to re-derive it independently), the
+per-strategy invariants as a hypothesis property (total coreset weight
+preserved and ``sum(t_i) == t`` across ring/star/grid/ER/wan topologies
+and sim/exec engines), and the communication claim that motivates the
+mapreduce strategy: its single shuffle strictly undercuts Algorithm 1's
+flood bytes.
+"""
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import strategy, topology
+from repro.core.coreset import (DistributedCoreset, distributed_coreset,
+                                proportional_allocation, round1_local_solves,
+                                round2_local_samples)
+from repro.core.distributed import (distributed_kmeans_tree,
+                                    exec_algorithm1_rounds,
+                                    graph_distributed_kmeans,
+                                    spmd_distributed_kmeans_fn)
+from repro.core.message_passing import gossip_schedule
+from repro.core.topology import bfs_spanning_tree
+from repro.stream.ingest import DistributedStream
+from repro.stream.tree import TreeConfig
+from repro.wan.faults import FaultPlan
+
+BACKENDS = ("jnp", "jnp_chunked", "pallas")
+STRATEGIES = strategy.available_strategies()
+
+K, D, T = 3, 4, 48
+N_SITES = 6
+
+
+@pytest.fixture(scope="module")
+def sites():
+    """Well-separated 3-cluster mixture split over 6 uneven sites."""
+    rng = np.random.default_rng(0)
+    cs = 4.0 * rng.standard_normal((K, D))
+    pts = np.concatenate([cs[i] + 0.25 * rng.standard_normal((120, D))
+                          for i in range(K)]).astype(np.float32)
+    rng.shuffle(pts)
+    sp = jnp.asarray(pts.reshape(N_SITES, -1, D))
+    sm = jnp.ones(sp.shape[:2], bool)
+    return sp, sm
+
+
+def _digest(*arrs) -> str:
+    h = hashlib.sha256()
+    for a in arrs:
+        h.update(np.ascontiguousarray(np.asarray(a)).tobytes())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# registry boundary
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_known_names():
+    assert set(STRATEGIES) >= {"algorithm1", "cohen_addad", "mapreduce"}
+    with pytest.raises(ValueError, match="unknown strategy"):
+        strategy.resolve_name("algorithm_1")
+    with pytest.raises(ValueError, match="mapreduce"):
+        # the error must list the registered names
+        strategy.resolve_name("algorithm_1")
+    with pytest.raises(TypeError):
+        strategy.resolve_name(3)
+    assert strategy.resolve_name(None) == "algorithm1"
+    assert strategy.resolve_name(strategy.ALGORITHM1) == "algorithm1"
+
+
+def test_register_shadowing_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        strategy.register_strategy(strategy.CoresetStrategy(
+            name="algorithm1",
+            exchange_spec_fn=strategy.MAPREDUCE.exchange_spec_fn))
+    # re-registering the same instance is a no-op
+    strategy.register_strategy(strategy.ALGORITHM1)
+
+
+def test_unknown_strategy_raises_at_every_public_boundary(sites):
+    sp, sm = sites
+    key = jax.random.PRNGKey(0)
+    g = topology.ring(N_SITES)
+    with pytest.raises(ValueError, match="unknown strategy"):
+        distributed_coreset(key, sp, sm, K, T, strategy="zigzag")
+    with pytest.raises(ValueError, match="unknown strategy"):
+        graph_distributed_kmeans(key, sp, sm, K, T, graph=g,
+                                 strategy="zigzag")
+    with pytest.raises(ValueError, match="unknown strategy"):
+        distributed_kmeans_tree(key, sp, sm, K, T,
+                                tree=bfs_spanning_tree(g, 0),
+                                strategy="zigzag")
+    with pytest.raises(ValueError, match="unknown strategy"):
+        spmd_distributed_kmeans_fn("sites", N_SITES, K, T, T,
+                                   strategy="zigzag")
+    ds = DistributedStream(g, TreeConfig(d=D, k=K, t=32, batch_size=32))
+    with pytest.raises(ValueError, match="unknown strategy"):
+        ds.aggregate(k=K, t=T, strategy="zigzag")
+
+
+def test_flood_exec_rejects_single_shuffle_strategies(sites):
+    """The gossip flood engine has no scalar round to run for a
+    single-shuffle strategy; the public API reroutes to the tree
+    protocol, and the raw entry point must refuse loudly."""
+    sp, sm = sites
+    sched = gossip_schedule(topology.ring(N_SITES))
+    with pytest.raises(ValueError, match="no exchange round"):
+        exec_algorithm1_rounds(sched, jax.random.PRNGKey(0), sp,
+                               sm.astype(sp.dtype), K, T, t_buffer=T,
+                               objective="kmeans", lloyd_iters=2,
+                               clip_negative=False, backend="jnp",
+                               strategy="mapreduce")
+
+
+# ---------------------------------------------------------------------------
+# bit-compat: "algorithm1" through the descriptor == frozen pre-refactor code
+# ---------------------------------------------------------------------------
+
+def _frozen_reference_algorithm1(key, site_points, site_mask, k, t,
+                                 backend) -> DistributedCoreset:
+    """Verbatim copy of the pre-strategy-layer ``distributed_coreset``
+    choreography (PR 8 state): any drift in the descriptor indirection
+    shows up as a digest mismatch here."""
+    n_sites = site_points.shape[0]
+    w_site = site_mask.astype(site_points.dtype)
+    keys = jax.random.split(key, n_sites * 2).reshape(n_sites, 2, -1)
+    centers, m, assign, local_costs, w_eff = round1_local_solves(
+        keys[:, 0], site_points, w_site, k=k, objective="kmeans",
+        lloyd_iters=5, backend=backend)
+    total_m = jnp.sum(local_costs)
+    t_i = proportional_allocation(local_costs, t)
+    portions = round2_local_samples(
+        keys[:, 1], site_points, m, w_eff, assign, centers, t_i,
+        jnp.broadcast_to(total_m, (n_sites,)), k=k, t=t, t_buffer=t,
+        clip_negative=False)
+    return DistributedCoreset(points=portions.points,
+                              weights=portions.weights, t_i=t_i,
+                              local_costs=local_costs)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_algorithm1_bit_identical_to_pre_refactor(sites, backend):
+    sp, sm = sites
+    key = jax.random.PRNGKey(11)
+    ref = _frozen_reference_algorithm1(key, sp, sm, K, T, backend)
+    for sel in (None, "algorithm1"):
+        dc = distributed_coreset(key, sp, sm, K, T, backend=backend,
+                                 strategy=sel)
+        assert _digest(dc.points, dc.weights, dc.t_i, dc.local_costs) == \
+            _digest(ref.points, ref.weights, ref.t_i, ref.local_costs)
+
+
+def test_algorithm1_engines_agree_bit_for_bit(sites):
+    """sim == exec on the flood graph, sim == exec on the tree, and the
+    async runtime under a trivial fault plan -- all five centers/coreset
+    digests equal (the engines share one strategy-owned key table)."""
+    sp, sm = sites
+    key = jax.random.PRNGKey(5)
+    g = topology.erdos_renyi(N_SITES, 0.5, seed=2)
+    tree = bfs_spanning_tree(g, root=0)
+    runs = [
+        graph_distributed_kmeans(key, sp, sm, K, T, graph=g, engine="sim"),
+        graph_distributed_kmeans(key, sp, sm, K, T, graph=g, engine="exec"),
+        distributed_kmeans_tree(key, sp, sm, K, T, tree=tree, engine="sim"),
+        distributed_kmeans_tree(key, sp, sm, K, T, tree=tree, engine="exec"),
+        graph_distributed_kmeans(key, sp, sm, K, T, graph=g, engine="async",
+                                 wan_mode="full", faults=FaultPlan()),
+    ]
+    digests = {_digest(r.centers, np.sort(np.asarray(r.coreset.weights)))
+               for r in runs}
+    assert len(digests) == 1
+
+
+# ---------------------------------------------------------------------------
+# key-derivation consolidation (satellite: the engines used to re-derive)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", STRATEGIES)
+def test_strategy_key_table_is_the_all_site_discipline(name):
+    strat = strategy.get_strategy(name)
+    for seed, n in ((0, 3), (7, 9)):
+        key = jax.random.PRNGKey(seed)
+        expect = jax.random.split(key, n * 2).reshape(n, 2, -1)
+        np.testing.assert_array_equal(np.asarray(strat.keys(key, n)),
+                                      np.asarray(expect))
+
+
+@pytest.mark.parametrize("name", STRATEGIES)
+def test_engines_consume_identical_keys(sites, name):
+    """Same (seed, strategy) => every engine's Round-1 scalars are
+    bit-equal: they all flow from the descriptor's single key table.
+    (local_costs is a pure function of the Round-1 keys per site, so
+    bit-equality here is exactly key-consumption equality.)"""
+    sp, sm = sites
+    key = jax.random.PRNGKey(3)
+    g = topology.ring(N_SITES)
+    tree = bfs_spanning_tree(g, root=0)
+    runs = [
+        graph_distributed_kmeans(key, sp, sm, K, T, graph=g, engine="sim",
+                                 strategy=name),
+        graph_distributed_kmeans(key, sp, sm, K, T, graph=g, engine="exec",
+                                 strategy=name),
+        distributed_kmeans_tree(key, sp, sm, K, T, tree=tree, engine="exec",
+                                strategy=name),
+        graph_distributed_kmeans(key, sp, sm, K, T, graph=g, engine="async",
+                                 wan_mode="full", faults=FaultPlan(),
+                                 strategy=name),
+    ]
+    base = np.asarray(runs[0].local_costs)
+    for r in runs[1:]:
+        np.testing.assert_array_equal(np.asarray(r.local_costs), base)
+
+
+# ---------------------------------------------------------------------------
+# per-strategy invariants (hypothesis property)
+# ---------------------------------------------------------------------------
+
+def _graph_for(kind: str, n: int):
+    if kind == "ring":
+        return topology.ring(n)
+    if kind == "star":
+        return topology.star(n)
+    if kind == "grid":
+        return topology.grid(2, n // 2)
+    if kind == "er":
+        return topology.erdos_renyi(n, 0.6, seed=4)
+    return topology.wan_clusters(2, n // 2, cross_cost=4.0, cross_links=1,
+                                 seed=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(name=st.sampled_from(STRATEGIES),
+       kind=st.sampled_from(("ring", "star", "grid", "er", "wan")),
+       engine=st.sampled_from(("sim", "exec")),
+       seed=st.integers(0, 2 ** 16))
+def test_every_strategy_preserves_weight_and_budget(sites, name, kind,
+                                                    engine, seed):
+    sp, sm = sites
+    key = jax.random.PRNGKey(seed)
+    dc = distributed_coreset(key, sp, sm, K, T, strategy=name)
+    assert int(np.asarray(dc.t_i).sum()) == T
+    g = _graph_for(kind, N_SITES)
+    r = graph_distributed_kmeans(key, sp, sm, K, T, graph=g, engine=engine,
+                                 strategy=name, lloyd_iters=3)
+    total_in = float(jnp.sum(sm))
+    total_out = float(jnp.sum(r.coreset.weights))
+    assert total_out == pytest.approx(total_in, rel=1e-4)
+    assert np.isfinite(np.asarray(r.centers)).all()
+
+
+# ---------------------------------------------------------------------------
+# the mapreduce communication claim + quality sanity
+# ---------------------------------------------------------------------------
+
+def test_mapreduce_strictly_undercuts_algorithm1_bytes(sites):
+    sp, sm = sites
+    key = jax.random.PRNGKey(9)
+    wan = topology.wan_clusters(2, N_SITES // 2, cross_cost=8.0,
+                                cross_links=1, seed=0)
+    for g in (topology.ring(N_SITES), wan):
+        a = graph_distributed_kmeans(key, sp, sm, K, T, graph=g,
+                                     engine="sim", strategy="algorithm1")
+        m = graph_distributed_kmeans(key, sp, sm, K, T, graph=g,
+                                     engine="sim", strategy="mapreduce")
+        assert m.ledger.bytes < a.ledger.bytes
+        assert m.ledger.link_cost < a.ledger.link_cost
+    # the async WAN runtime skips the scalar flood too
+    a = graph_distributed_kmeans(key, sp, sm, K, T, graph=wan,
+                                 engine="async", wan_mode="full",
+                                 faults=FaultPlan(), strategy="algorithm1")
+    m = graph_distributed_kmeans(key, sp, sm, K, T, graph=wan,
+                                 engine="async", wan_mode="full",
+                                 faults=FaultPlan(), strategy="mapreduce")
+    assert m.ledger.bytes < a.ledger.bytes
+
+
+@pytest.mark.parametrize("name", STRATEGIES)
+def test_strategy_centers_are_competitive(sites, name):
+    """Every strategy's centers land within 1.5x of the central solve on a
+    well-separated mixture (the frontier benchmark tracks the fine-grained
+    accuracy-vs-bytes tradeoff; this is the coarse sanity floor)."""
+    from repro.core import clustering
+    sp, sm = sites
+    key = jax.random.PRNGKey(1)
+    g = topology.erdos_renyi(N_SITES, 0.5, seed=2)
+    r = graph_distributed_kmeans(key, sp, sm, K, T, graph=g, engine="sim",
+                                 strategy=name)
+    flat = np.asarray(sp).reshape(-1, D)
+    central, _ = clustering.solve(jax.random.PRNGKey(2), jnp.asarray(flat),
+                                  K, restarts=3)
+    c_dist = float(clustering.cost(jnp.asarray(flat), r.centers))
+    c_central = float(clustering.cost(jnp.asarray(flat), central))
+    assert c_dist <= 1.5 * c_central
+
+
+def test_streaming_aggregate_accepts_strategies(sites):
+    """The resample round runs through the strategy layer on both engines;
+    single-shuffle strategies reroute to tree transport with no Round-1
+    phase in the ledger."""
+    rng = np.random.default_rng(0)
+    pts = rng.standard_normal((N_SITES * 64, D)).astype(np.float32)
+    results = {}
+    for name in ("algorithm1", "mapreduce"):
+        for eng in ("sim", "exec"):
+            ds = DistributedStream(topology.ring(N_SITES),
+                                   TreeConfig(d=D, k=K, t=32, batch_size=32),
+                                   key=jax.random.PRNGKey(4))
+            for i in range(N_SITES):
+                ds.push(i, pts[i * 64:(i + 1) * 64])
+            ar = ds.aggregate(k=K, t=T, mode="resample", engine=eng,
+                              strategy=name)
+            results[(name, eng)] = ar
+            total = float(jnp.sum(ar.coreset.weights))
+            assert total == pytest.approx(ds.total_weight(), rel=1e-3)
+    # engine bit-parity holds per strategy through the streaming layer
+    for name in ("algorithm1", "mapreduce"):
+        s, e = results[(name, "sim")], results[(name, "exec")]
+        np.testing.assert_array_equal(np.asarray(s.centers),
+                                      np.asarray(e.centers))
+    assert (results[("mapreduce", "sim")].ledger.bytes
+            < results[("algorithm1", "sim")].ledger.bytes)
