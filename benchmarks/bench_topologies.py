@@ -2,8 +2,8 @@
 ledger parity for Algorithm 2 across every topology generator, as JSON rows
 (``BENCH_topologies.json`` at the repo root is the CI artifact).
 
-Rows: {ring, star, grid, er(p=0.3), preferential, wan} x {sim, exec} x
-backend, each with ``routing`` and ``link_cost`` (cost-weighted bytes)
+Rows: {ring, star, grid, torus, er(p=0.3), preferential, wan} x {sim, exec}
+x backend, each with ``routing`` and ``link_cost`` (cost-weighted bytes)
 columns. Each row reports the wall time of one full Algorithm-2 run, the
 communication ledger (measured for the exec engine, analytic for sim --
 ``ledger_match`` asserts they agree on every axis incl. link_cost), the
@@ -46,6 +46,7 @@ def _topologies():
         "ring": topology.ring(N_SITES),
         "star": topology.star(N_SITES),
         "grid": topology.grid(3, 3),
+        "torus": topology.torus(3, 3),
         "er": topology.erdos_renyi(N_SITES, 0.3, seed=3),
         "preferential": topology.preferential(N_SITES, 2, seed=0),
         "wan": topology.wan_clusters(3, 3, cross_cost=16.0, cross_links=2,

@@ -13,10 +13,11 @@ import os
 import sys
 import time
 
-from benchmarks import (bench_comm_scaling, bench_coreset_size,
-                        bench_faults, bench_fig2_graphs, bench_fig3_trees,
-                        bench_frontier, bench_kernels, bench_roofline,
-                        bench_serve, bench_stream, bench_topologies)
+from benchmarks import (bench_collectives, bench_comm_scaling,
+                        bench_coreset_size, bench_faults, bench_fig2_graphs,
+                        bench_fig3_trees, bench_frontier, bench_kernels,
+                        bench_roofline, bench_serve, bench_stream,
+                        bench_topologies)
 from benchmarks.common import write_json_rows
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -29,7 +30,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated subset: fig2,fig3,comm,size,"
                          "kernels,roofline,serve,stream,topologies,faults,"
-                         "frontier")
+                         "frontier,collectives")
     args = ap.parse_args(argv)
     scale = 1.0 if args.full else 0.05
     n_runs = 5 if args.full else 2
@@ -75,6 +76,14 @@ def main(argv=None) -> None:
         rows.extend(fault_rows)
         out_json = os.path.join(_REPO_ROOT, "BENCH_faults.json")
         write_json_rows(out_json, fault_rows)
+        print(f"# wrote {out_json}", file=sys.stderr)
+    if only is None or "collectives" in only:
+        coll_rows: list = []
+        bench_collectives.run(scale=scale, n_runs=n_runs,
+                              out_rows=coll_rows)
+        rows.extend(coll_rows)
+        out_json = os.path.join(_REPO_ROOT, "BENCH_collectives.json")
+        write_json_rows(out_json, coll_rows)
         print(f"# wrote {out_json}", file=sys.stderr)
     if only is None or "frontier" in only:
         frontier_rows: list = []

@@ -7,11 +7,13 @@ from repro.core import topology
 from repro.core.backend import (ClusteringBackend, available_backends,
                                 get_backend, query_assignments,
                                 register_backend, use_backend)
-from repro.core.clustering import (cost, kmeans_pp_init, lloyd, lloyd_stats,
+from repro.core.clustering import (cost, kmeans_pp_init, lloyd,
+                                   lloyd_converged, lloyd_stats,
                                    min_dist_argmin, solve)
 from repro.core.comm import CommLedger
-from repro.core.coreset import (Coreset, DistributedCoreset, build_coreset,
-                                distributed_coreset, merge_coresets)
+from repro.core.coreset import (Coreset, DistributedCoreset, StagedDetail,
+                                build_coreset, distributed_coreset,
+                                merge_coresets, staged_distributed_coreset)
 from repro.core.distributed import (ClusteringResult, ExecDetail,
                                     distributed_kmeans,
                                     distributed_kmeans_tree,
@@ -20,13 +22,16 @@ from repro.core.distributed import (ClusteringResult, ExecDetail,
 from repro.core.strategy import (CoresetStrategy, available_strategies,
                                  get_strategy, register_strategy)
 from repro.core.message_passing import (ExecResult, GossipSchedule,
-                                        TreeSchedule, flood_exec,
+                                        TreeSchedule, collective_hops,
+                                        flood_exec, neighbor_rounds_gather,
+                                        neighbor_rounds_sum, torus_mesh_shape,
+                                        torus_rounds_gather, torus_rounds_sum,
                                         tree_broadcast_exec, tree_gather_exec,
                                         tree_scatter_exec, tree_up_sum_exec)
 from repro.core.topology import (Graph, SpanningTree, bfs_spanning_tree,
                                  diameter, erdos_renyi, grid, heterogeneous,
                                  mst_spanning_tree, preferential, ring,
-                                 spanning_tree, star, wan_clusters)
+                                 spanning_tree, star, torus, wan_clusters)
 
 __all__ = [
     "backend", "baselines", "clustering", "comm", "coreset", "distributed",
@@ -35,17 +40,20 @@ __all__ = [
     "register_strategy",
     "ClusteringBackend", "available_backends", "get_backend",
     "query_assignments", "register_backend", "use_backend",
-    "cost", "kmeans_pp_init", "lloyd", "lloyd_stats", "min_dist_argmin",
-    "solve",
-    "CommLedger", "Coreset", "DistributedCoreset", "build_coreset",
-    "distributed_coreset", "merge_coresets",
+    "cost", "kmeans_pp_init", "lloyd", "lloyd_converged", "lloyd_stats",
+    "min_dist_argmin", "solve",
+    "CommLedger", "Coreset", "DistributedCoreset", "StagedDetail",
+    "build_coreset", "distributed_coreset", "merge_coresets",
+    "staged_distributed_coreset",
     "ClusteringResult", "ExecDetail", "distributed_kmeans",
     "distributed_kmeans_tree", "graph_distributed_kmeans",
     "spmd_distributed_kmeans",
-    "ExecResult", "GossipSchedule", "TreeSchedule", "flood_exec",
+    "ExecResult", "GossipSchedule", "TreeSchedule", "collective_hops",
+    "flood_exec", "neighbor_rounds_gather", "neighbor_rounds_sum",
+    "torus_mesh_shape", "torus_rounds_gather", "torus_rounds_sum",
     "tree_broadcast_exec", "tree_gather_exec", "tree_scatter_exec",
     "tree_up_sum_exec",
     "Graph", "SpanningTree", "bfs_spanning_tree", "diameter", "erdos_renyi",
     "grid", "heterogeneous", "mst_spanning_tree", "preferential", "ring",
-    "spanning_tree", "star", "wan_clusters",
+    "spanning_tree", "star", "torus", "wan_clusters",
 ]

@@ -238,6 +238,67 @@ def _lloyd(points, centers, weights, iters, objective, k, backend):
     return centers, hist
 
 
+def lloyd_converged(
+    points: Array,
+    centers: Array,
+    weights: Optional[Array] = None,
+    iters: int = 10,
+    tol: float = 0.0,
+    objective: ObjectiveLike = "kmeans",
+    k: Optional[int] = None,
+    backend: BackendLike = None,
+) -> Tuple[Array, Array]:
+    """:func:`lloyd` with an early exit: stop refining once the relative
+    cost improvement of a pass drops to ``tol`` (or after ``iters`` passes,
+    whichever comes first). Returns (centers, iters_run).
+
+    ``tol == 0.0`` is the strict mode: it delegates to the fixed-length
+    scan of :func:`lloyd`, so centers are bit-identical to the lockstep
+    path (the staged coreset engine's parity contract; DESIGN.md Sec. 17).
+    ``tol > 0.0`` trades bit-parity for wall-clock -- sites whose local
+    solve converges early skip the remaining passes entirely (while_loop),
+    which is where the staged engine's per-site overlap win comes from.
+    """
+    k = centers.shape[0] if k is None else k
+    return _lloyd_converged(points, centers, weights, iters=iters,
+                            tol=float(tol),
+                            objective=objective_mod.resolve_name(objective),
+                            k=k, backend=backend_mod.resolve_name(backend))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("iters", "tol", "objective", "k",
+                                    "backend"))
+def _lloyd_converged(points, centers, weights, iters, tol, objective, k,
+                     backend):
+    if tol == 0.0:
+        centers, _ = _lloyd(points, centers, weights, iters=iters,
+                            objective=objective, k=k, backend=backend)
+        return centers, jnp.asarray(iters, jnp.int32)
+    obj = objective_mod.get_objective(objective)
+    b = backend_mod.get_backend(backend)
+    w = jnp.ones((points.shape[0],), points.dtype) if weights is None \
+        else weights
+
+    def cond(carry):
+        i, _, _, done = carry
+        return (i < iters) & ~done
+
+    def body(carry):
+        i, centers, prev, _ = carry
+        new, c = obj.update(b, points, w, centers)
+        # relative improvement of this pass; prev starts at +inf so the
+        # first pass never exits (inf <= tol * c is false for finite c)
+        done = (prev - c) <= tol * jnp.maximum(c, _TINY)
+        return i + 1, new, c, done
+
+    i, centers, _, _ = jax.lax.while_loop(
+        cond, body, (jnp.asarray(0, jnp.int32), centers,
+                     jnp.asarray(jnp.inf, points.dtype),
+                     jnp.asarray(False)))
+    return centers, i
+
+
 def solve(
     key: Array,
     points: Array,

@@ -39,10 +39,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import backend as backend_mod
 from repro.core import clustering
@@ -363,6 +365,231 @@ def distributed_coreset(
     return DistributedCoreset(points=portions.points,
                               weights=portions.weights, t_i=t_i,
                               local_costs=local_costs)
+
+
+# ---------------------------------------------------------------------------
+# staged Round-1/Round-2 engine (per-site dispatch instead of lockstep vmap)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StagedDetail:
+    """Measurement sidecar of :func:`staged_distributed_coreset`.
+
+    ``site_lengths``: the per-site padded solve lengths actually compiled
+    (all equal to the lockstep pad length M unless ``site_buckets``);
+    ``iters_run``: per-site realized refinement passes (== ``lloyd_iters``
+    everywhere unless ``tol > 0`` let a site exit early); the walls split
+    Round 1 (dispatch + solves until every exchange scalar is on host)
+    from Round 2 (allocation + finalize)."""
+
+    site_lengths: Tuple[int, ...]
+    iters_run: Array
+    wall_round1_s: float
+    wall_round2_s: float
+    wall_total_s: float
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "objective", "lloyd_iters", "tol",
+                              "backend", "strategy"))
+def _staged_solve_site(key, pts, w, k, objective, lloyd_iters, tol, backend,
+                       strategy):
+    """One site's Round-1 stage, unbatched: same math as the vmapped
+    ``local_solve`` of :func:`round1_local_solves` (bit-identical at
+    ``tol == 0``), plus the strategy's sampling-mass rule and the realized
+    refinement-pass count."""
+    from repro.core import strategy as strategy_mod
+    strat = strategy_mod.get_strategy(strategy)
+    w_solve = jnp.maximum(w, 0.0)
+    centers = clustering.kmeans_pp_init(key, pts, k, weights=w_solve,
+                                        objective=objective, backend=backend)
+    centers, iters_run = clustering.lloyd_converged(
+        pts, centers, weights=w_solve, iters=lloyd_iters, tol=tol,
+        objective=objective, backend=backend)
+    m, assign, w_eff = strat.site_sensitivities(pts, centers, w,
+                                                objective=objective,
+                                                backend=backend)
+    return centers, m, assign, jnp.sum(m), w_eff, iters_run
+
+
+@functools.partial(jax.jit, static_argnames=("k", "t_buffer"))
+def _staged_round2_precompute(key, pts, m, w_eff, assign, k, t_buffer):
+    """The allocation-independent prefix of :func:`_sample_and_weight`:
+    the ``t_buffer`` draws, their masses/weights/assignments, and the
+    per-cluster weight totals depend only on Round-1 locals -- so a site
+    can run this *before* its ``t_i`` arrives, overlapping slower sites'
+    Round-1 solves. Expressions match ``_sample_and_weight`` term for term
+    (bit-parity contract; DESIGN.md Sec. 17)."""
+    idx = weighted_choice(key, m, t_buffer)
+    m_q = m[idx]
+    w_idx = w_eff[idx]
+    sampled = pts[idx]
+    sampled_assign = assign[idx]
+    oh = jax.nn.one_hot(assign, k, dtype=pts.dtype)
+    w_pb = (w_eff[:, None] * oh).sum(0)
+    return sampled, m_q, w_idx, sampled_assign, w_pb
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "t_buffer", "clip_negative"))
+def _staged_round2_finalize(sampled, m_q, w_idx, sampled_assign, w_pb,
+                            centers, t_local, total_m, t_total, k, t_buffer,
+                            clip_negative):
+    """The allocation-dependent suffix of :func:`_sample_and_weight` +
+    portion assembly: validity mask, sample weights, residual center
+    weights, concat. Cheap (O(t_buffer + k)); runs after the exchange."""
+    valid = (jnp.arange(t_buffer) < t_local) & (total_m > _TINY)
+    w_s = jnp.where(
+        valid & (m_q > _TINY),
+        total_m * w_idx / (jnp.maximum(t_total, 1.0)
+                           * jnp.maximum(m_q, _TINY)),
+        0.0,
+    )
+    w_sb = jnp.zeros((k,), sampled.dtype).at[sampled_assign].add(w_s)
+    w_b = w_pb - w_sb
+    if clip_negative:
+        w_b = jnp.maximum(w_b, 0.0)
+    return (jnp.concatenate([sampled, centers], axis=0),
+            jnp.concatenate([w_s, w_b], axis=0))
+
+
+def _site_valid_lengths(w_site: Array) -> Tuple[int, ...]:
+    """Per-site count covering every nonzero-weight slot (1 + its last
+    index). ``pad_partition`` packs valid slots first, so this equals the
+    true site size there; arbitrary weighted summaries stay covered
+    because slicing ``[:count]`` keeps every weight-carrying slot."""
+    w = np.asarray(w_site)
+    nz = (w != 0.0)[:, ::-1].argmax(axis=1)
+    any_nz = (w != 0.0).any(axis=1)
+    return tuple(int(w.shape[1] - z) if a else 1
+                 for z, a in zip(nz, any_nz))
+
+
+def staged_distributed_coreset(
+    key: Array,
+    site_points: Array,          # (n_sites, M, d) padded
+    site_mask: Array,            # (n_sites, M) bool
+    k: int,
+    t: int,
+    t_buffer: Optional[int] = None,
+    objective: ObjectiveLike = "kmeans",
+    lloyd_iters: int = 5,
+    clip_negative: bool = False,
+    backend: BackendLike = None,
+    site_weights: Optional[Array] = None,
+    strategy: "strategy_mod.StrategyLike" = None,
+    tol: float = 0.0,
+    site_buckets: bool = False,
+    min_bucket: int = 64,
+) -> Tuple[DistributedCoreset, StagedDetail]:
+    """:func:`distributed_coreset` with Round 1 broken out of the lockstep
+    vmap: sites are dispatched one jitted solve at a time, each site's
+    Round-1 scalar starts moving to the allocator the moment its own solve
+    converges (async device-to-host copy), and its allocation-independent
+    Round-2 sampling prefix (:func:`_staged_round2_precompute`) is
+    interleaved between the following site's fused ``lloyd_stats`` /
+    ``weiszfeld_stats`` passes -- double-buffered dispatch, so fast sites'
+    Round-2 work overlaps slow sites' refinement. Only the validity mask /
+    weight scaling / portion assembly (:func:`_staged_round2_finalize`)
+    waits for the exchange barrier -- and for single-shuffle strategies
+    the allocation is locally derivable, so even that runs inside the
+    dispatch loop with no barrier at all.
+
+    Two knobs trade strictness for wall-clock (DESIGN.md Sec. 17):
+
+    * ``tol`` -- early-exit threshold for the local refinement
+      (:func:`~repro.core.clustering.lloyd_converged`). ``0.0`` keeps the
+      lockstep iteration count.
+    * ``site_buckets`` -- solve each site at its own power-of-two padded
+      length (:func:`repro.kernels.ops.site_bucket_lengths`) instead of
+      the lockstep pad M, so small sites stop paying the largest site's
+      FLOPs. Changes draw indices (the sampling CDF has fewer slots), so
+      results are deterministic but not bit-equal to lockstep.
+
+    With both off (the default, "strict" mode) every output field of the
+    returned :class:`DistributedCoreset` is bit-identical to
+    :func:`distributed_coreset` for every registered strategy -- the
+    frozen ``algorithm1`` key-derivation and digest contracts survive
+    because the key table, draw indices, and weight formulas are shared
+    term for term.
+
+    Returns ``(coreset, StagedDetail)`` -- the sidecar carries per-phase
+    walls and realized per-site lengths/iterations for
+    ``bench_collectives``.
+    """
+    from repro.core import strategy as strategy_mod
+    from repro.kernels.ops import site_bucket_lengths
+    t_buffer = t if t_buffer is None else t_buffer
+    backend = backend_mod.resolve_name(backend)
+    objective = objective_mod.resolve_name(objective)
+    strategy = strategy_mod.resolve_name(strategy)
+    strat = strategy_mod.get_strategy(strategy)
+    n_sites, M = site_points.shape[0], site_points.shape[1]
+    w_site = (site_mask.astype(site_points.dtype) if site_weights is None
+              else site_weights.astype(site_points.dtype))
+    lengths = (site_bucket_lengths(_site_valid_lengths(w_site), M,
+                                   min_bucket=min_bucket)
+               if site_buckets else (M,) * n_sites)
+    keys = strat.keys(key, n_sites)
+    tol = float(tol)
+
+    if not strat.needs_exchange:
+        # locally derivable split: no barrier anywhere in the loop below
+        t_i = strat.allocate(jnp.ones((n_sites,), site_points.dtype), t)
+        t_totals = strat.sample_t_total(t, t_i)
+
+    t0 = time.perf_counter()
+    solves: list = []
+    pre: list = []
+    final: list = []
+
+    def dispatch_round2(i):
+        c_i, m_i, a_i, cost_i, w_eff_i, _ = solves[i]
+        pre.append(_staged_round2_precompute(
+            keys[i, 1], site_points[i, :lengths[i]], m_i, w_eff_i, a_i,
+            k=k, t_buffer=t_buffer))
+        if not strat.needs_exchange:
+            final.append(_staged_round2_finalize(
+                *pre[i], c_i, t_i[i], cost_i, t_totals[i], k=k,
+                t_buffer=t_buffer, clip_negative=clip_negative))
+
+    for i in range(n_sites):
+        solves.append(_staged_solve_site(
+            keys[i, 0], site_points[i, :lengths[i]], w_site[i, :lengths[i]],
+            k=k, objective=objective, lloyd_iters=lloyd_iters, tol=tol,
+            backend=backend, strategy=strategy))
+        # the site's Round-1 scalar starts its exchange immediately ...
+        solves[-1][3].copy_to_host_async()
+        # ... and the previous site's Round-2 prefix overlaps this solve
+        if i:
+            dispatch_round2(i - 1)
+    dispatch_round2(n_sites - 1)
+
+    local_costs = jnp.stack([s[3] for s in solves])
+    jax.block_until_ready(local_costs)
+    wall_r1 = time.perf_counter() - t0
+
+    t1 = time.perf_counter()
+    if strat.needs_exchange:
+        t_i = strat.allocate(local_costs, t)
+        totals = jnp.broadcast_to(jnp.sum(local_costs), (n_sites,))
+        t_totals = strat.sample_t_total(t, t_i)
+        for i in range(n_sites):
+            final.append(_staged_round2_finalize(
+                *pre[i], solves[i][0], t_i[i], totals[i], t_totals[i],
+                k=k, t_buffer=t_buffer, clip_negative=clip_negative))
+    points = jnp.stack([f[0] for f in final])
+    weights = jnp.stack([f[1] for f in final])
+    jax.block_until_ready(weights)
+    wall_r2 = time.perf_counter() - t1
+
+    detail = StagedDetail(
+        site_lengths=lengths,
+        iters_run=jnp.stack([s[5] for s in solves]),
+        wall_round1_s=wall_r1, wall_round2_s=wall_r2,
+        wall_total_s=wall_r1 + wall_r2)
+    return (DistributedCoreset(points=points, weights=weights, t_i=t_i,
+                               local_costs=local_costs), detail)
 
 
 @functools.partial(

@@ -53,6 +53,7 @@ from repro.core.message_passing import (ExecResult, GossipSchedule,
                                         TreeSchedule, flood_exec,
                                         gossip_schedule,
                                         neighbor_rounds_gather, pack_payload,
+                                        torus_mesh_shape, torus_rounds_gather,
                                         tree_broadcast_exec, tree_gather_exec,
                                         tree_scatter_exec, unpack_payload)
 from repro.core.topology import Graph, SpanningTree, spanning_tree
@@ -527,6 +528,7 @@ def spmd_distributed_kmeans_fn(
     backend: BackendLike = None,
     collectives: str = "all_gather",
     strategy: StrategyLike = None,
+    mesh_shape: Optional[Tuple[int, int]] = None,
 ):
     """Build the per-device function for Algorithm 1+2 under ``shard_map``.
 
@@ -540,11 +542,22 @@ def spmd_distributed_kmeans_fn(
     rounds on the ICI torus itself); ``"neighbor_rounds"`` uses the explicit
     ring ``ppermute`` schedule of Algorithm 3
     (:func:`~repro.core.message_passing.neighbor_rounds_gather`) -- the
-    gathered buffers are pure relays, so results are bit-identical. (The
-    cost *total* is always reduced from the gathered vector, never via
-    ``neighbor_rounds_sum``: a ring-order accumulation starts at a
-    different shard on every device, which breaks both cross-device and
-    gather-path bit-equality of the float total.)
+    gathered buffers are pure relays, so results are bit-identical;
+    ``"torus_2d"`` folds the flat axis onto an (R, C) torus
+    (:func:`~repro.core.message_passing.torus_rounds_gather`, row phase
+    then column phase, (R-1)+(C-1) hops instead of R*C-1) -- also a pure
+    relay in flat row-major order, so still bit-identical. ``mesh_shape``
+    picks (R, C); the default is the most-square factorization of
+    ``axis_size`` (:func:`~repro.core.message_passing.torus_mesh_shape`).
+    (The cost *total* is always reduced from the gathered vector, never
+    via ``neighbor_rounds_sum``/``torus_rounds_sum``: a ring-order
+    accumulation starts at a different shard on every device, which breaks
+    both cross-device and gather-path bit-equality of the float total.)
+
+    The two communication points are wrapped in ``jax.named_scope("round1")``
+    / ``("round2")`` so compiled-HLO collectives carry phase-attributable
+    ``op_name`` metadata (consumed by ``roofline/hlo.py``'s per-phase
+    collective ledger).
 
     Gathering the scalars (rather than psum-ing them) lets every device run
     the *exact* largest-remainder ``proportional_allocation`` the host path
@@ -556,14 +569,32 @@ def spmd_distributed_kmeans_fn(
     backend = backend_mod.resolve_name(backend)
     objective = objective_mod.resolve_name(objective)
     strat = strategy_mod.get_strategy(strategy_mod.resolve_name(strategy))
-    if collectives not in ("all_gather", "neighbor_rounds"):
+    if collectives not in ("all_gather", "neighbor_rounds", "torus_2d"):
         raise ValueError(f"unknown collectives {collectives!r}: expected "
-                         f"'all_gather'|'neighbor_rounds'")
+                         f"'all_gather'|'neighbor_rounds'|'torus_2d'")
+    if collectives == "torus_2d":
+        mesh_shape = (torus_mesh_shape(axis_size) if mesh_shape is None
+                      else tuple(mesh_shape))
+        if mesh_shape[0] * mesh_shape[1] != axis_size:
+            raise ValueError(f"mesh_shape {mesh_shape} does not tile "
+                             f"axis_size {axis_size}")
+    elif mesh_shape is not None:
+        raise ValueError("mesh_shape is only meaningful with "
+                         "collectives='torus_2d'")
 
     def gather(x: Array) -> Array:
         if collectives == "all_gather":
-            return jax.lax.all_gather(x, axis_name)
-        return neighbor_rounds_gather(x, axis_name, axis_size)
+            out = jax.lax.all_gather(x, axis_name)
+        elif collectives == "torus_2d":
+            out = torus_rounds_gather(x, axis_name, mesh_shape)
+        else:
+            out = neighbor_rounds_gather(x, axis_name, axis_size)
+        # every mode relays bit-identical values, but without a barrier XLA
+        # may fuse the *consumer* differently per producer graph (observed:
+        # the torus reshape shifted weiszfeld fusion by ~1e-6 at 16
+        # devices) -- the barrier pins the consumer graph so cross-mode
+        # bit-parity is structural, not luck
+        return jax.lax.optimization_barrier(out)
 
     def per_device(key: Array, pts: Array, mask: Array):
         w = mask.astype(pts.dtype)
@@ -582,7 +613,8 @@ def spmd_distributed_kmeans_fn(
             pts, centers, w, objective=objective, backend=backend)
         local_cost = jnp.sum(m)
         if strat.needs_exchange:
-            all_costs = gather(local_cost)                     # <- Round 1
+            with jax.named_scope("round1"):
+                all_costs = gather(local_cost)                 # <- Round 1
             total_cost = jnp.sum(all_costs)
 
             # exact largest-remainder allocation over the gathered scalars
@@ -609,8 +641,9 @@ def spmd_distributed_kmeans_fn(
         portion_w = jnp.concatenate([w_s, w_b], axis=0)
 
         # Round 2: share the fixed-size portions
-        all_pts = gather(portion_pts)                           # <- Round 2
-        all_w = gather(portion_w)
+        with jax.named_scope("round2"):
+            all_pts = gather(portion_pts)                       # <- Round 2
+            all_w = gather(portion_w)
         cs_pts = all_pts.reshape(-1, pts.shape[-1])
         cs_w = all_w.reshape(-1)
 
@@ -641,6 +674,7 @@ def spmd_distributed_kmeans(
     backend: BackendLike = None,
     collectives: str = "all_gather",
     strategy: StrategyLike = None,
+    mesh_shape: Optional[Tuple[int, int]] = None,
 ) -> Tuple[Array, Array, Array]:
     """Run the SPMD path on a mesh. Returns (centers (k,d), local_costs,
     t_i) -- ``t_i`` are the per-site sample allocations, which satisfy
@@ -664,7 +698,7 @@ def spmd_distributed_kmeans(
     fn = spmd_distributed_kmeans_fn(axis_name, axis_size, k, t, t_buffer,
                                     objective, lloyd_iters, backend=backend,
                                     collectives=collectives,
-                                    strategy=strategy)
+                                    strategy=strategy, mesh_shape=mesh_shape)
 
     def device_fn(key, pts, mask):
         # collapse the per-device leading site-block dim (sites/device >= 1)

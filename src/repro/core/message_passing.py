@@ -38,7 +38,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Dict, List, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -627,16 +627,40 @@ def tree_broadcast_exec(schedule: TreeSchedule, value: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# SPMD ring collectives (shard_map primitives)
+# SPMD ring + 2-D torus collectives (shard_map primitives)
 # ---------------------------------------------------------------------------
+
+def _check_axis_size(axis_name: str, axis_size: int, fn: str) -> None:
+    """Fail loudly when the caller's ``axis_size`` disagrees with the mesh.
+
+    The ring/torus permutations are built from the *claimed* ``axis_size``;
+    a mismatch used to produce a silently wrong answer (the fori_loop runs
+    the wrong number of hops and the permutation indexes phantom devices).
+    ``psum(1, axis)`` is static under ``shard_map`` in this jax version, so
+    the check costs nothing at runtime; if a future tracer makes it dynamic
+    we skip rather than mis-raise.
+    """
+    if axis_size < 1:
+        raise ValueError(f"{fn}: axis_size must be >= 1, got {axis_size}")
+    actual = jax.lax.psum(1, axis_name)
+    if isinstance(actual, (int, np.integer)) and int(actual) != axis_size:
+        raise ValueError(
+            f"{fn}: axis_size={axis_size} disagrees with the actual size "
+            f"{int(actual)} of mesh axis {axis_name!r}; the ppermute "
+            "schedule would be silently wrong")
+
 
 def neighbor_rounds_sum(x: jax.Array, axis_name: str, axis_size: int) -> jax.Array:
     """Global sum via ring neighbour exchanges only (collective_permute),
     demonstrating Algorithm 3 on a physical ring: after ``axis_size - 1``
     rounds each device has accumulated every shard's value.
 
-    Must be called inside ``shard_map`` over ``axis_name``.
+    Must be called inside ``shard_map`` over ``axis_name``. The hop-by-hop
+    accumulation order is fixed by the ring schedule, so repeated runs are
+    bit-identical to each other (deterministic reduction order), but the
+    float total may differ from ``psum`` in the last ulps.
     """
+    _check_axis_size(axis_name, axis_size, "neighbor_rounds_sum")
     perm = [(i, (i + 1) % axis_size) for i in range(axis_size)]
 
     def body(i, carry):
@@ -650,7 +674,12 @@ def neighbor_rounds_sum(x: jax.Array, axis_name: str, axis_size: int) -> jax.Arr
 
 def neighbor_rounds_gather(x: jax.Array, axis_name: str, axis_size: int) -> jax.Array:
     """All-gather via ring neighbour exchanges (Algorithm 3 Round 2 on a
-    physical ring): returns (axis_size, *x.shape) on every device."""
+    physical ring): returns (axis_size, *x.shape) on every device.
+
+    Every slot of the output is a pure ppermute relay of the origin shard,
+    so the result is bit-identical to ``jax.lax.all_gather``.
+    """
+    _check_axis_size(axis_name, axis_size, "neighbor_rounds_gather")
     idx = jax.lax.axis_index(axis_name)
     out = jnp.zeros((axis_size,) + x.shape, x.dtype)
     out = jax.lax.dynamic_update_index_in_dim(out, x, idx, 0)
@@ -665,3 +694,126 @@ def neighbor_rounds_gather(x: jax.Array, axis_name: str, axis_size: int) -> jax.
 
     out, _, _ = jax.lax.fori_loop(0, axis_size - 1, body, (out, x, idx))
     return out
+
+
+def torus_mesh_shape(axis_size: int) -> Tuple[int, int]:
+    """Most-square (R, C) factorization of ``axis_size`` (R <= C).
+
+    Default ``mesh_shape`` for ``collectives="torus_2d"``: the squarest
+    factorization minimizes (R - 1) + (C - 1) hops over all 2-D foldings
+    of a flat axis. Prime sizes degenerate to (1, axis_size) == the ring.
+    """
+    if axis_size < 1:
+        raise ValueError(f"axis_size must be >= 1, got {axis_size}")
+    r = int(np.sqrt(axis_size))
+    while axis_size % r:
+        r -= 1
+    return r, axis_size // r
+
+
+def _torus_perms(axis_name: str, mesh_shape: Tuple[int, int], fn: str):
+    """Validate (R, C) against the flat mesh axis and build the two
+    single-hop permutations: row phase (r, c) -> (r, (c+1) % C) and column
+    phase (r, c) -> ((r+1) % R, c), in row-major flat indexing
+    i = r * C + c (the order ``jax.make_mesh`` assigns devices)."""
+    R, C = mesh_shape
+    if R < 1 or C < 1:
+        raise ValueError(f"{fn}: mesh_shape must be positive, got {mesh_shape}")
+    _check_axis_size(axis_name, R * C, fn)
+    row_perm = [(r * C + c, r * C + (c + 1) % C)
+                for r in range(R) for c in range(C)]
+    col_perm = [(r * C + c, ((r + 1) % R) * C + c)
+                for r in range(R) for c in range(C)]
+    return row_perm, col_perm
+
+
+def torus_rounds_gather(x: jax.Array, axis_name: str,
+                        mesh_shape: Tuple[int, int]) -> jax.Array:
+    """All-gather on a 2-D torus folding of the flat mesh axis.
+
+    Two phases: (C - 1) row-ring hops gather each device's row of C shards,
+    then (R - 1) column-ring hops gather the per-row buffers -- a total of
+    (R - 1) + (C - 1) sequential hops instead of the 1-D ring's R*C - 1.
+    Returns (R * C, *x.shape) in flat row-major order, bit-identical to
+    ``jax.lax.all_gather`` (every output slot is a pure ppermute relay).
+
+    Must be called inside ``shard_map`` over ``axis_name`` with
+    ``R * C == axis_size``.
+    """
+    R, C = mesh_shape
+    row_perm, col_perm = _torus_perms(axis_name, mesh_shape,
+                                      "torus_rounds_gather")
+    idx = jax.lax.axis_index(axis_name)
+    r, c = idx // C, idx % C
+
+    # row phase: gather the C shards of this device's row
+    row = jnp.zeros((C,) + x.shape, x.dtype)
+    row = jax.lax.dynamic_update_index_in_dim(row, x, c, 0)
+
+    def rbody(j, carry):
+        row, buf, src = carry
+        buf = jax.lax.ppermute(buf, axis_name, row_perm)
+        src = (src - 1) % C
+        row = jax.lax.dynamic_update_index_in_dim(row, buf, src, 0)
+        return row, buf, src
+
+    row, _, _ = jax.lax.fori_loop(0, C - 1, rbody, (row, x, c))
+
+    # column phase: gather the R row-buffers of this device's column
+    out = jnp.zeros((R,) + row.shape, x.dtype)
+    out = jax.lax.dynamic_update_index_in_dim(out, row, r, 0)
+
+    def cbody(j, carry):
+        out, buf, src = carry
+        buf = jax.lax.ppermute(buf, axis_name, col_perm)
+        src = (src - 1) % R
+        out = jax.lax.dynamic_update_index_in_dim(out, buf, src, 0)
+        return out, buf, src
+
+    out, _, _ = jax.lax.fori_loop(0, R - 1, cbody, (out, row, r))
+    # (R, C, ...) row-major == flat device order i = r * C + c
+    return out.reshape((R * C,) + x.shape)
+
+
+def torus_rounds_sum(x: jax.Array, axis_name: str,
+                     mesh_shape: Tuple[int, int]) -> jax.Array:
+    """Global sum on a 2-D torus folding: row-ring partial sums in C - 1
+    hops, then column-ring reduction of the row totals in R - 1 hops.
+
+    Deterministic reduction order (bit-identical across repeated runs) but,
+    like ``neighbor_rounds_sum``, the grouping differs from ``psum`` so the
+    float total may differ in the last ulps; it may also differ from the
+    1-D ring's total (different association order).
+    """
+    row_perm, col_perm = _torus_perms(axis_name, mesh_shape,
+                                      "torus_rounds_sum")
+    R, C = mesh_shape
+
+    def ring_sum(v, perm, hops):
+        def body(i, carry):
+            acc, buf = carry
+            buf = jax.lax.ppermute(buf, axis_name, perm)
+            return acc + buf, buf
+        acc, _ = jax.lax.fori_loop(0, hops, body, (v, v))
+        return acc
+
+    return ring_sum(ring_sum(x, row_perm, C - 1), col_perm, R - 1)
+
+
+def collective_hops(collectives: str, axis_size: int,
+                    mesh_shape: Optional[Tuple[int, int]] = None) -> int:
+    """Sequential ppermute-hop depth of one gather under each schedule.
+
+    ``all_gather`` is counted at the ring depth axis_size - 1 (XLA's ICI
+    lowering of a flat-axis all-gather is the same ring); ``torus_2d`` is
+    (R - 1) + (C - 1). Used by bench_collectives and the roofline ledgers.
+    """
+    if collectives in ("all_gather", "neighbor_rounds"):
+        return axis_size - 1
+    if collectives == "torus_2d":
+        R, C = torus_mesh_shape(axis_size) if mesh_shape is None else mesh_shape
+        if R * C != axis_size:
+            raise ValueError(
+                f"mesh_shape {mesh_shape} does not tile axis_size {axis_size}")
+        return (R - 1) + (C - 1)
+    raise ValueError(f"unknown collectives mode: {collectives!r}")

@@ -50,7 +50,13 @@ equality/hashability hold):
 * ``site_sensitivities(strat, pts, centers, w, *, objective, backend)``
   -- the unbatched sampling-mass rule, consumed by the SPMD per-device
   path (which runs one site per device and cannot use the vmapped
-  ``local_summary``).
+  ``local_summary``) and by the *staged* coreset engine's per-site
+  solves (``repro.core.coreset.staged_distributed_coreset``).
+* ``sample_t_total(strat, t, t_i)`` -- the per-site ``t_total``
+  normalizer of the sample-weight formula (the global ``t`` for
+  exchanging strategies, each site's own ``t_i`` for single-shuffle
+  ones); the staged engine's split sample/finalize stages consume this
+  instead of re-entering the batched ``contribute`` hook.
 
 **Registered strategies**:
 
@@ -249,6 +255,19 @@ def _refined_site_sensitivities(strat, pts, centers, w, *, objective,
     return _refined_sensitivities(m, assign, w_eff, k), assign, w_eff
 
 
+def _global_t_total(strat, t: int, t_i: Array) -> Array:
+    """Exchanging strategies normalize the sample-weight formula by the
+    *global* budget ``t`` (round2_local_samples' rule), replicated
+    per site."""
+    return jnp.full(t_i.shape, float(t), jnp.float32)
+
+
+def _own_t_total(strat, t: int, t_i: Array) -> Array:
+    """Single-shuffle strategies normalize by each site's *own* realized
+    draw count (round2_local_samples_localized's rule)."""
+    return t_i.astype(jnp.float32)
+
+
 def _no_validate(strat) -> None:
     pass
 
@@ -272,6 +291,7 @@ class CoresetStrategy:
     local_contribution_fn: Callable = _alg1_local_contribution
     assemble_fn: Callable = _flatten_assemble
     site_sensitivities_fn: Callable = _plain_site_sensitivities
+    sample_t_total_fn: Callable = _global_t_total
     validate: Callable = _no_validate
 
     def __post_init__(self):
@@ -331,6 +351,17 @@ class CoresetStrategy:
         normalizes by its *own* scalar."""
         return local_costs
 
+    def sample_t_total(self, t: int, t_i: Array) -> Array:
+        """The per-site ``t_total`` normalizer of the sample-weight
+        formula ``w_q = total_m * w / (t_total * m_q)``: the global
+        budget ``t`` for exchanging strategies, each site's own realized
+        ``t_i`` for single-shuffle ones. The *staged* coreset engine
+        (``repro.core.coreset.staged_distributed_coreset``) consumes this
+        hook to finalize per-site weights without re-entering the batched
+        ``contribute`` path -- it must stay consistent with
+        ``local_contribution_fn``'s normalization rule."""
+        return self.sample_t_total_fn(self, t, t_i)
+
 
 # ---------------------------------------------------------------------------
 # registry
@@ -371,7 +402,8 @@ MAPREDUCE = register_strategy(CoresetStrategy(
     name="mapreduce",
     exchange_spec_fn=_no_exchange,
     allocate_fn=_uniform_allocate,
-    local_contribution_fn=_mapreduce_local_contribution))
+    local_contribution_fn=_mapreduce_local_contribution,
+    sample_t_total_fn=_own_t_total))
 
 
 def resolve_name(strategy: StrategyLike) -> str:

@@ -238,6 +238,31 @@ def grid(rows: int, cols: int) -> Graph:
     return Graph(rows * cols, tuple(sorted(edges)))
 
 
+def torus(rows: int, cols: int) -> Graph:
+    """rows x cols 2-D torus: the grid plus row/column wraparound edges --
+    the physical-ICI analogue of ``torus_rounds_gather``'s row-phase /
+    column-phase ``ppermute`` schedule (node i = r * cols + c matches the
+    collective's flat row-major device order). Diameter
+    floor(rows/2) + floor(cols/2), vs the 1-D ring's floor(n/2).
+
+    Wraparound edges degenerate gracefully: a dimension of 2 already has
+    its wrap edge in the grid (kept single, as in ``ring(2)``), and a
+    dimension of 1 contributes none (a 1 x C torus is the C-cycle)."""
+    if rows * cols < 2:
+        raise ValueError("torus needs rows * cols >= 2")
+    edges = set()
+    for r in range(rows):
+        for c in range(cols):
+            v = r * cols + c
+            if cols > 1:
+                w = r * cols + (c + 1) % cols
+                edges.add((min(v, w), max(v, w)))
+            if rows > 1:
+                w = ((r + 1) % rows) * cols + c
+                edges.add((min(v, w), max(v, w)))
+    return Graph(rows * cols, tuple(sorted(edges)))
+
+
 def preferential(n: int, m_attach: int = 2, seed: int = 0) -> Graph:
     """Barabasi-Albert preferential attachment: each new node attaches to
     ``m_attach`` existing nodes with probability proportional to degree."""

@@ -90,6 +90,20 @@ def pad_queries(points: Array, min_bucket: int = 8,
     return jnp.pad(points, ((0, cap - n), (0, 0))), n
 
 
+def site_bucket_lengths(site_counts, max_len: int,
+                        min_bucket: int = 64) -> Tuple[int, ...]:
+    """Per-site padded solve lengths for the staged coreset engine: each
+    site's valid-point count rounded up to its :func:`query_bucket` power
+    of two, clamped at the lockstep pad length ``max_len``. The lockstep
+    vmap pads *every* site to ``max_len``; solving each site at its own
+    bucket instead is where the staged path's wall-clock win on skewed
+    partitions comes from, while the O(log max_len) bucket set bounds the
+    number of compiled per-site specializations exactly as serving's query
+    bucketing does (DESIGN.md Sec. 9)."""
+    return tuple(min(query_bucket(int(c), min_bucket=min_bucket),
+                     int(max_len)) for c in site_counts)
+
+
 def chunk_queries(points: Array, min_bucket: int = 8,
                   max_bucket: Optional[int] = None
                   ) -> list:

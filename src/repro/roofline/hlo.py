@@ -232,6 +232,60 @@ _ELEMENTWISE = {
     "compare", "and", "or", "convert", "floor", "clamp", "sign",
 }
 
+_OP_NAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _collective_link(op: Op, pod_block: Optional[int]
+                     ) -> Optional[Tuple[str, float, float, bool]]:
+    """(kind, link_bytes, result_bytes, crosses_pod) for a collective op
+    (including async ``*-start`` halves), else ``None``. The link factors
+    are the standard algorithmic ones from the module docstring."""
+    if not (op.opcode in COLLECTIVES
+            or (op.opcode.endswith("-start")
+                and op.opcode[:-6] in COLLECTIVES)):
+        return None
+    kind = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+    rb = _shape_bytes(op.result_type)
+    if op.opcode.endswith("-start"):
+        # async result tuples carry (operand, result[, ...]): use the
+        # result buffer only
+        shapes = _SHAPE_RE.findall(op.result_type)
+        if len(shapes) >= 2:
+            dtype, dims = shapes[1]
+            rb = _DTYPE_BYTES.get(dtype, 4)
+            for d in dims.split(","):
+                if d:
+                    rb *= int(d)
+    n, crosses = _group_size_and_span(op, pod_block)
+    if kind == "all-reduce":
+        link = 2.0 * (n - 1) / max(n, 1) * rb
+    elif kind == "all-gather":
+        link = (n - 1) / max(n, 1) * rb
+    elif kind == "reduce-scatter":
+        link = (n - 1) * rb
+    elif kind in ("all-to-all", "ragged-all-to-all"):
+        link = (n - 1) / max(n, 1) * rb
+    else:  # collective-permute
+        link = rb
+    return kind, link, float(rb), crosses
+
+
+def _op_phase(op: Op, phases: Tuple[str, ...]) -> Optional[str]:
+    """The phase scope segment of an op's ``metadata={op_name="..."}``.
+
+    ``jax.named_scope("round1")`` survives jit+compile as a ``/round1/``
+    path segment in the op_name of every op traced under it -- including
+    the ``ppermute``s inside a ``fori_loop`` while-body -- which is what
+    makes per-phase collective attribution possible on compiled HLO."""
+    m = _OP_NAME_RE.search(op.raw)
+    if not m:
+        return None
+    segs = m.group(1).split("/")
+    for p in phases:
+        if p in segs:
+            return p
+    return None
+
 
 def analyze(hlo: str, pod_block: Optional[int] = None,
             entry: Optional[str] = None) -> Analysis:
@@ -278,32 +332,8 @@ def analyze(hlo: str, pod_block: Optional[int] = None,
             elif op.opcode == "dot":
                 out.dot_flops += _dot_flops(op, comp.symtab)
                 out.result_bytes += rb
-            elif (op.opcode in COLLECTIVES
-                  or (op.opcode.endswith("-start")
-                      and op.opcode[:-6] in COLLECTIVES)):
-                kind = (op.opcode[:-6] if op.opcode.endswith("-start")
-                        else op.opcode)
-                if op.opcode.endswith("-start"):
-                    # async result tuples carry (operand, result[, ...]):
-                    # use the result buffer only
-                    shapes = _SHAPE_RE.findall(op.result_type)
-                    if len(shapes) >= 2:
-                        dtype, dims = shapes[1]
-                        rb = _DTYPE_BYTES.get(dtype, 4)
-                        for d in dims.split(","):
-                            if d:
-                                rb *= int(d)
-                n, crosses = _group_size_and_span(op, pod_block)
-                if kind == "all-reduce":
-                    link = 2.0 * (n - 1) / max(n, 1) * rb
-                elif kind == "all-gather":
-                    link = (n - 1) / max(n, 1) * rb
-                elif kind == "reduce-scatter":
-                    link = (n - 1) * rb
-                elif kind in ("all-to-all", "ragged-all-to-all"):
-                    link = (n - 1) / max(n, 1) * rb
-                else:  # collective-permute
-                    link = rb
+            elif _collective_link(op, pod_block) is not None:
+                kind, link, rb, crosses = _collective_link(op, pod_block)
                 if crosses:
                     out.dcn_collective_bytes += link
                 else:
@@ -322,3 +352,81 @@ def analyze(hlo: str, pod_block: Optional[int] = None,
     res = visit(entry_name)
     cache.pop(entry_name, None)
     return res
+
+
+def collective_phase_analysis(
+    hlo: str,
+    phases: Tuple[str, ...] = ("round1", "round2"),
+    pod_block: Optional[int] = None,
+    entry: Optional[str] = None,
+) -> Dict[str, Analysis]:
+    """Per-phase collective ledger: loop-aware collective op counts and
+    link bytes, attributed to the ``jax.named_scope`` phase each collective
+    was traced under (``_op_phase``). Collectives outside every named phase
+    land in ``"other"``. Only the collective fields of each
+    :class:`Analysis` are populated.
+
+    Counts are *sequential issue* counts: a ``ppermute`` inside a
+    ``fori_loop`` while-body counts once per trip, so
+    ``collective_counts["collective-permute"]`` of a phase is exactly the
+    hop depth of its ring/torus schedule -- the measured counterpart of
+    :func:`repro.core.message_passing.collective_hops`, which
+    ``bench_collectives`` cross-checks per mode.
+    """
+    comps = parse_computations(hlo)
+    out = {p: Analysis() for p in (*phases, "other")}
+    if not comps:
+        return out
+    entry_name = entry
+    if entry_name is None:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+        entry_name = m.group(1) if m else next(iter(comps))
+    cache: Dict[str, Dict[str, Analysis]] = {}
+
+    def merge(dst: Dict[str, Analysis], src: Dict[str, Analysis],
+              mult: float = 1.0) -> None:
+        for p, a in src.items():
+            dst.setdefault(p, Analysis()).add(a, mult)
+
+    def visit(name: str, depth: int = 0) -> Dict[str, Analysis]:
+        if name in cache:
+            return cache[name]
+        acc: Dict[str, Analysis] = {}
+        comp = comps.get(name)
+        if comp is None or depth > 60:
+            return acc
+        cache[name] = acc  # provisional (cycles cannot occur in HLO)
+        for op in comp.ops:
+            if op.opcode == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", op.rest)
+                mc = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                called = _CALL_RE.findall(op.rest)
+                body = mb.group(1) if mb else (called[0] if called else None)
+                cond = mc.group(1) if mc else None
+                trips = (_trip_count(comps[cond], comps)
+                         if cond in comps else 1)
+                if body:
+                    merge(acc, visit(body, depth + 1), mult=trips)
+                continue
+            link = _collective_link(op, pod_block)
+            if link is not None:
+                kind, bytes_, rb, crosses = link
+                phase = _op_phase(op, phases) or "other"
+                a = acc.setdefault(phase, Analysis())
+                a.collective_counts[kind] = (
+                    a.collective_counts.get(kind, 0.0) + 1)
+                a.collective_bytes_by_kind[kind] = (
+                    a.collective_bytes_by_kind.get(kind, 0.0) + bytes_)
+                if crosses:
+                    a.dcn_collective_bytes += bytes_
+                else:
+                    a.ici_collective_bytes += bytes_
+                continue
+            for called in _CALL_RE.findall(op.rest):
+                if called in comps:
+                    merge(acc, visit(called, depth + 1))
+        return acc
+
+    merge(out, visit(entry_name))
+    cache.pop(entry_name, None)
+    return out

@@ -77,6 +77,29 @@ def test_grid_diameter():
     assert topology.diameter(g) == 6  # (rows-1)+(cols-1)
 
 
+def test_torus_structure_and_diameter():
+    g = topology.torus(4, 4)
+    assert g.n == 16 and g.m == 32                 # degree-4 regular
+    assert set(g.degrees()) == {4}
+    assert topology.diameter(g) == 4               # floor(R/2)+floor(C/2)
+    # wraparound halves the grid's diameter ((R-1)+(C-1) -> the above)
+    assert topology.diameter(g) < topology.diameter(topology.grid(4, 4))
+    res = flood(g)
+    assert all(r == set(range(g.n)) for r in res.received)
+
+
+def test_torus_degenerate_dimensions():
+    # a 1 x C (or R x 1) torus is exactly the C-cycle
+    assert set(topology.torus(1, 6).edges) == set(topology.ring(6).edges)
+    assert topology.torus(6, 1).m == 6
+    # a dimension of 2 keeps its wrap edge single (as in ring(2))
+    g = topology.torus(2, 3)
+    assert g.n == 6 and g.m == 9
+    assert max(g.degrees()) == 3
+    with pytest.raises(ValueError, match="rows \\* cols"):
+        topology.torus(1, 1)
+
+
 def test_flood_cost_ledger():
     g = topology.grid(3, 3)  # n=9, m=12
     led = flood_cost(g, n_messages=9, unit_scalars=1.0)
